@@ -1,0 +1,17 @@
+"""Serve a (reduced) assigned-architecture LM with batched requests
+through the slot-based engine (deliverable b: serving driver).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch deepseek-moe-16b
+"""
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in args):
+        args = ["--arch", "llama3.2-1b"] + args
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--requests", "6", "--slots", "3", "--max-new", "10"] + args
+    raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,19 @@
+"""End-to-end driver (deliverable b): train a CapsNet for a few hundred
+steps on the synthetic digit set, run the full FastCaps methodology
+(LAKP prune -> fine-tune -> compact -> optimized routing), and report
+accuracy + compression + throughput — the complete paper pipeline.
+
+    PYTHONPATH=src python examples/train_capsnet_fastcaps.py
+    PYTHONPATH=src python examples/train_capsnet_fastcaps.py --steps 300
+"""
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--steps", "200"]
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "capsnet-mnist", "--reduced",
+           "--prune", "lakp:0.8", "--finetune-steps", "80",
+           "--n-train", "512"] + args
+    raise SystemExit(subprocess.call(cmd))

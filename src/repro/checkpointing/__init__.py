@@ -1,0 +1,2 @@
+from repro.checkpointing.checkpoint import (AsyncCheckpointer, list_steps,
+                                            load, load_latest, save)  # noqa: F401

@@ -1,0 +1,206 @@
+"""Config registry: the 10 assigned architectures + the paper's CapsNets.
+
+``get_config(arch_id)`` returns the full published config;
+``reduced(cfg)`` returns a CPU-smoke-sized config of the same family;
+``CELLS`` is the (arch x shape) dry-run matrix with skip annotations;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell (weak-type-correct, shardable, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (capsnet_fmnist, capsnet_mnist, dbrx_132b,
+                           deepseek_moe_16b, hubert_xlarge, llama3p2_1b,
+                           llama3p2_vision_90b, mistral_large_123b,
+                           qwen1p5_110b, qwen3_1p7b, xlstm_1p3b, zamba2_1p2b)
+from repro.core.capsnet import CapsNetConfig
+from repro.models.common import LMConfig, MoEConfig, SSMConfig, XLSTMConfig
+
+_MODULES = {
+    "zamba2-1.2b": zamba2_1p2b,
+    "xlstm-1.3b": xlstm_1p3b,
+    "mistral-large-123b": mistral_large_123b,
+    "llama3.2-1b": llama3p2_1b,
+    "qwen3-1.7b": qwen3_1p7b,
+    "qwen1.5-110b": qwen1p5_110b,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "dbrx-132b": dbrx_132b,
+    "hubert-xlarge": hubert_xlarge,
+    "llama-3.2-vision-90b": llama3p2_vision_90b,
+    "capsnet-mnist": capsnet_mnist,
+    "capsnet-fmnist": capsnet_fmnist,
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "zamba2-1.2b", "xlstm-1.3b", "mistral-large-123b", "llama3.2-1b",
+    "qwen3-1.7b", "qwen1.5-110b", "deepseek-moe-16b", "dbrx-132b",
+    "hubert-xlarge", "llama-3.2-vision-90b",
+]
+PAPER_ARCHS: List[str] = ["capsnet-mnist", "capsnet-fmnist"]
+
+
+def list_archs(include_paper: bool = True) -> List[str]:
+    return ASSIGNED_ARCHS + (PAPER_ARCHS if include_paper else [])
+
+
+def get_config(arch_id: str):
+    return _MODULES[arch_id].CONFIG
+
+
+# ---------------------------------------------------------------------------
+# Shapes / cells
+# ---------------------------------------------------------------------------
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k":    {"seq": 4096,   "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768,  "batch": 32,  "kind": "prefill"},
+    "decode_32k":  {"seq": 32768,  "batch": 128, "kind": "decode"},
+    "long_500k":   {"seq": 524288, "batch": 1,   "kind": "decode"},
+}
+
+# archs whose state is sub-quadratic in context (run long_500k)
+_SUBQUADRATIC = {"zamba2-1.2b", "xlstm-1.3b"}
+_ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cell_status(arch_id: str, shape: str) -> Optional[str]:
+    """None if the cell runs; otherwise the skip reason (DESIGN.md §5.1)."""
+    if arch_id in _ENCODER_ONLY and SHAPES[shape]["kind"] == "decode":
+        return "SKIP(encoder-only: no autoregressive decode step)"
+    if shape == "long_500k" and arch_id not in _SUBQUADRATIC:
+        return "SKIP(pure full attention: 500k context needs sub-quadratic)"
+    return None
+
+
+CELLS: List[Tuple[str, str]] = [
+    (a, s) for a in ASSIGNED_ARCHS for s in SHAPES
+]
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for (a, s) in CELLS if cell_status(a, s) is None]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: LMConfig, shape: str) -> Dict[str, Any]:
+    """Model-input stand-ins for a cell.  For train/prefill these are the
+    batch dict; decode adds tokens(B,1) + pos.  Caches are built separately
+    (models/lm.make_caches(as_structs=True))."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    i32 = jnp.int32
+    if kind == "train":
+        if cfg.family == "audio":
+            batch = {
+                "features": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                 jnp.float32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        elif cfg.family == "vlm":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "image_features": jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_model), jnp.float32),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        return batch
+    if kind == "prefill":
+        if cfg.family == "audio":
+            return {"features": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                     jnp.float32)}
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["image_features"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+        return batch
+    # decode: one new token against a KV/state cache of length s
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def batch_axes(cfg, shape: str) -> Dict[str, Any]:
+    """Logical axes for the input batch (for in_shardings)."""
+    info = SHAPES[shape]
+    kind = info["kind"]
+    ax: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        if getattr(cfg, "family", None) == "audio":
+            ax["features"] = ("batch", "seq", "act_embed")
+        else:
+            ax["tokens"] = ("batch", "seq")
+        if kind == "train":
+            ax["labels"] = ("batch", "seq")
+        if getattr(cfg, "family", None) == "vlm":
+            ax["image_features"] = ("batch", None, "act_embed")
+        return ax
+    return {"tokens": ("batch", None), "pos": None}
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke) configs — same family, CPU-sized
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg) -> Any:
+    """Shrink any config to CPU-smoke size, preserving family + features."""
+    if isinstance(cfg, CapsNetConfig):
+        return dataclasses.replace(
+            cfg, conv1_channels=16, caps_types=4, decoder_hidden=(32, 64))
+    assert isinstance(cfg, LMConfig)
+    kw: Dict[str, Any] = dict(
+        n_layers=_reduced_layers(cfg),
+        d_model=64,
+        n_heads=max(2, min(cfg.n_heads, 4)),
+        n_kv_heads=0,  # fixed below
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=128,
+        remat=False,
+        remat_group=1,
+        loss_chunks=2,
+        max_seq_len=128,
+        n_image_tokens=8 if cfg.cross_attn_every else cfg.n_image_tokens,
+        attn_q_block=32,
+        attn_kv_block=32,
+    )
+    kw["n_kv_heads"] = (kw["n_heads"] if cfg.n_kv_heads == cfg.n_heads
+                        else max(1, kw["n_heads"] // 2))
+    if cfg.d_head:
+        kw["d_head"] = 16
+    if cfg.moe is not None:
+        kw["moe"] = MoEConfig(n_experts=8, top_k=min(cfg.moe.top_k, 2),
+                              d_expert=32, n_shared=cfg.moe.n_shared,
+                              capacity_factor=cfg.moe.capacity_factor)
+        kw["d_ff"] = 32
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=16,
+                              n_groups=1, chunk_size=16)
+    if cfg.xlstm is not None:
+        kw["xlstm"] = XLSTMConfig(slstm_every=cfg.xlstm.slstm_every,
+                                  mlstm_proj_factor=2.0,
+                                  slstm_ff_factor=cfg.xlstm.slstm_ff_factor,
+                                  d_conv=4, chunk_size=16)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _reduced_layers(cfg: LMConfig) -> int:
+    if cfg.family == "ssm":
+        return cfg.xlstm.slstm_every          # one group
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every + 1       # one group
+    if cfg.family == "hybrid":
+        return 2 * cfg.hybrid_attn_every      # two shared-attn sites
+    return 2

@@ -1,0 +1,30 @@
+"""hubert-xlarge [audio]: encoder-only, 48L d_model=1280 16H (MHA kv=16)
+d_ff=5120 vocab=504 (masked-prediction cluster targets).
+[arXiv:2106.07447]
+
+The conv waveform frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, S, d_model).
+
+decode/long shapes: SKIP — encoder-only, no autoregressive step.
+vocab=504 is not divisible by the model axis -> replicated unembed
+(handled automatically by divisibility-aware sharding).
+"""
+
+from repro.models.common import LMConfig
+
+CONFIG = LMConfig(
+    arch_id="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    norm="layernorm",
+    glu=False,
+    act="gelu",
+    frontend="audio",
+    remat_group=2,
+)

@@ -1,0 +1,22 @@
+"""qwen1.5-110b [dense]: 80L d_model=8192 64H (GQA kv=8) d_ff=49152
+vocab=152064, QKV bias.  [hf:Qwen/Qwen1.5-110B]
+
+long_500k: SKIP — pure full attention.
+"""
+
+from repro.models.common import LMConfig
+
+CONFIG = LMConfig(
+    arch_id="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    remat_group=4,
+    loss_chunks=16,
+)

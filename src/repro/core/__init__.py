@@ -1,0 +1,4 @@
+"""Core: the paper's contribution — CapsNet, dynamic routing, LAKP pruning,
+approximate math (Eq. 2/3), and the prune->finetune->compact pipeline."""
+
+from repro.core import approx_math, capsnet, lakp, pruning, routing  # noqa: F401

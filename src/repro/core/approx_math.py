@@ -1,0 +1,89 @@
+"""FastCaps approximate math (paper §III-B) adapted to TPU.
+
+Eq. 2 — Taylor expansion of exp around a = 0.5, 5 multiply + 5 add (Horner):
+
+    e^x ≈ e^a · (0.60653 + x·(0.60659 + x·(0.30260 + x·(0.10347 +
+                 x·(0.02118 + 0.00833·x)))))
+
+On the PYNQ-Z1 this cut exp() from 27 to 14 cycles.  On TPU the VPU has a
+fast native exp, so the motive changes (see DESIGN.md §2): the polynomial is
+kept as a *faithful mode* — it is pure MAC work, so inside a Pallas kernel it
+pipelines on the same units as the matmuls with no transcendental path.
+
+Beyond-paper extension: the raw polynomial is only accurate on roughly
+x ∈ [-1.5, 2.5].  CapsNet routing logits live there; attention logits do not.
+``range_reduce=True`` applies exp(x) = exp(x/2^k)^(2^k) with fixed k=5 (five
+squarings — still MAC-only), extending usable range to ~[-48, 48].
+
+Eq. 3 — a/b = exp(log a − log b), which cut the fixed-point divider from 49
+to 36 cycles.  TPU has a fast reciprocal so this is off by default; it is
+implemented for fidelity and benchmarked.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Paper Eq. 2 constants (a = 0.5).
+TAYLOR_A = 0.5
+E_A = 1.6487212707001282  # e^0.5
+TAYLOR_COEFFS = (0.60653, 0.60659, 0.30260, 0.10347, 0.02118, 0.00833)
+
+
+def taylor_exp_raw(x: jax.Array) -> jax.Array:
+    """Paper Eq. 2 verbatim: 5 multiplies + 5 adds (Horner) + 1 scale."""
+    c0, c1, c2, c3, c4, c5 = TAYLOR_COEFFS
+    p = c4 + c5 * x
+    p = c3 + x * p
+    p = c2 + x * p
+    p = c1 + x * p
+    p = c0 + x * p
+    return E_A * p
+
+
+def taylor_exp(x: jax.Array, range_reduce: bool = False,
+               reduce_k: int = 5) -> jax.Array:
+    """Eq. 2 exp; optionally with square-and-multiply range reduction."""
+    if not range_reduce:
+        return taylor_exp_raw(x)
+    scale = float(2 ** reduce_k)
+    # Clamp so exp(x) for very negative x flushes to ~0 without the polynomial
+    # going negative (poly has roots below ~ -1.6 after scaling).
+    x = jnp.clip(x, -scale * 1.0, scale * 1.0)
+    y = taylor_exp_raw(x / scale)
+    for _ in range(reduce_k):
+        y = y * y
+    return y
+
+
+def div_exp_log(a: jax.Array, b: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """Paper Eq. 3: a/b = exp(log a − log b), for a,b > 0."""
+    return jnp.exp(jnp.log(jnp.maximum(a, eps)) - jnp.log(jnp.maximum(b, eps)))
+
+
+def taylor_softmax(x: jax.Array, axis: int = -1,
+                   range_reduce: bool = True,
+                   use_div_exp_log: bool = False) -> jax.Array:
+    """Softmax using Eq. 2 exp (and optionally Eq. 3 division)."""
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = taylor_exp(x - m, range_reduce=range_reduce)
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    if use_div_exp_log:
+        return div_exp_log(e, denom)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def squash(s: jax.Array, axis: int = -1, eps: float = 1e-9) -> jax.Array:
+    """CapsNet squash: v = (‖s‖²/(1+‖s‖²)) · s/‖s‖ (Sabour et al. Eq. 1)."""
+    sq = jnp.sum(jnp.square(s), axis=axis, keepdims=True)
+    norm = jnp.sqrt(sq + eps)
+    return (sq / (1.0 + sq)) * (s / norm)
+
+
+def squash_fast(s: jax.Array, axis: int = -1, eps: float = 1e-9) -> jax.Array:
+    """Squash with a single rsqrt (hardware-friendly form used on the PE
+    array side of the accelerator; Fig. 11a computes ‖s‖² once)."""
+    sq = jnp.sum(jnp.square(s), axis=axis, keepdims=True)
+    inv = jax.lax.rsqrt(sq + eps)
+    return s * (sq * inv / (1.0 + sq))

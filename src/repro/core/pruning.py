@@ -1,0 +1,172 @@
+"""Prune -> fine-tune -> compact pipeline (paper Fig. 6).
+
+The methodology: (1) score + mask kernels with LAKP (or a baseline method),
+(2) fine-tune the masked network (masked weights stay zero: gradients are
+multiplied by the mask each step), (3) study interconnections and physically
+eliminate dead kernels/capsules (``capsnet.compact``), (4) hand the compacted
+model to the optimized-routing deployment path.
+
+The same pipeline generalizes to LM architectures (DESIGN.md §5): FFN hidden
+blocks, attention-head blocks and MoE experts are pruned with
+``lakp.prune_blocks`` and compacted with ``lakp.compact_blocks``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import capsnet as capsnet_lib
+from repro.core import lakp as lakp_lib
+
+
+@dataclasses.dataclass
+class PrunePipelineResult:
+    masked_params: Dict[str, Any]
+    finetuned_params: Optional[Dict[str, Any]]
+    compact_params: Dict[str, Any]
+    compact_cfg: capsnet_lib.CapsNetConfig
+    index: Dict[str, jax.Array]
+    masks: Tuple[jax.Array, jax.Array]
+    compression: float
+    index_overhead_frac: float
+
+
+def mask_gradients(grads: Dict[str, Any], masks) -> Dict[str, Any]:
+    """Keep pruned kernels at zero during fine-tuning."""
+    m1, m2 = masks
+    out = jax.tree.map(lambda g: g, grads)
+    out["conv1"] = dict(grads["conv1"])
+    out["conv2"] = dict(grads["conv2"])
+    out["conv1"]["w"] = lakp_lib.apply_kernel_mask(grads["conv1"]["w"], m1)
+    out["conv2"]["w"] = lakp_lib.apply_kernel_mask(grads["conv2"]["w"], m2)
+    return out
+
+
+def prune_capsnet(
+    params: Dict[str, Any],
+    cfg: capsnet_lib.CapsNetConfig,
+    sparsity_conv1: float,
+    sparsity_conv2: float,
+    method: str = "lakp",
+    norm: str = "l1",
+    type_keep: Optional[int] = None,
+    finetune_fn: Optional[Callable[[Dict[str, Any], Any], Dict[str, Any]]] = None,
+) -> PrunePipelineResult:
+    """Run the full Fig. 6 pipeline on a trained CapsNet.
+
+    ``type_keep`` passes through to the capsule-type elimination step
+    (paper: 7 on MNIST, 12 on F-MNIST).  ``finetune_fn(masked_params,
+    masks) -> params`` is injected by the trainer (keeps this module free
+    of the optimizer); None skips fine-tuning (shape-level tests).
+    """
+    masks = capsnet_lib.lakp_masks(params, cfg, sparsity_conv1,
+                                   sparsity_conv2, method=method, norm=norm,
+                                   type_keep=type_keep)
+    masked = capsnet_lib.apply_masks(params, masks)
+    tuned = finetune_fn(masked, masks) if finetune_fn is not None else None
+    source = tuned if tuned is not None else masked
+    compact_params, compact_cfg, index = capsnet_lib.compact(
+        source, cfg, masks)
+
+    conv_ws = [params["conv1"]["w"], params["conv2"]["w"]]
+    compression = lakp_lib.effective_compression(list(masks), conv_ws)
+    surviving = sum(int(x.size) for x in jax.tree.leaves(compact_params))
+    overhead = lakp_lib.index_overhead_bytes(list(masks)) / max(
+        surviving * 4, 1)
+    return PrunePipelineResult(
+        masked_params=masked,
+        finetuned_params=tuned,
+        compact_params=compact_params,
+        compact_cfg=compact_cfg,
+        index=index,
+        masks=masks,
+        compression=compression,
+        index_overhead_frac=overhead,
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM-substrate structured pruning (DESIGN.md §5 generalization)
+# ---------------------------------------------------------------------------
+
+
+def prune_lm_ffn(params: Dict[str, Any], n_blocks: int, sparsity: float,
+                 method: str = "lakp") -> Tuple[Dict[str, Any], jax.Array]:
+    """Prune hidden blocks of one FFN param dict ({wi, wo[, wg]})."""
+    w_in, w_out = params["wi"], params["wo"]
+    wi2 = w_in.reshape(w_in.shape[0], -1)
+    wo2 = w_out.reshape(w_out.shape[0], -1) if w_out.ndim == 2 else w_out
+    wi_m, wo_m, mask = lakp_lib.prune_blocks(
+        wi2, wo2, n_blocks, sparsity, method=method)
+    out = dict(params)
+    out["wi"], out["wo"] = wi_m.reshape(w_in.shape), wo_m.reshape(w_out.shape)
+    if "wg" in params:
+        blk = w_in.shape[1] // n_blocks
+        m_f = jnp.repeat(mask, blk)
+        out["wg"] = params["wg"] * m_f[None, :].astype(params["wg"].dtype)
+    return out, mask
+
+
+def prune_lm_heads(params: Dict[str, Any], n_heads: int, n_kv_heads: int,
+                   sparsity: float, method: str = "lakp"
+                   ) -> Tuple[Dict[str, Any], jax.Array]:
+    """Prune attention heads in KV-head groups (so GQA stays consistent).
+
+    Scores: look-ahead product of the group's Q-projection fan-in and
+    O-projection fan-out (K/V share the group).  Mask granularity is one KV
+    group = n_heads/n_kv_heads query heads.
+    """
+    wq, wo = params["wq"], params["wo"]          # (d, H, hd), (H, hd, d)
+    d, h, hd = wq.shape
+    g = h // n_kv_heads
+    wq2 = wq.reshape(d, h * hd)
+    wo2 = wo.reshape(h * hd, d)
+    if method == "lakp":
+        scores = lakp_lib.block_lookahead_scores(wq2, wo2, n_kv_heads)
+    else:
+        scores = lakp_lib.block_magnitude_scores(wq2, wo2, n_kv_heads)
+    mask = lakp_lib.mask_from_scores(scores, sparsity)    # (n_kv,)
+    mq = jnp.repeat(mask, g * hd).reshape(1, h, hd)
+    mkv = jnp.repeat(mask, hd).reshape(1, n_kv_heads, hd)
+    out = dict(params)
+    out["wq"] = wq * mq.astype(wq.dtype)
+    out["wk"] = params["wk"] * mkv.astype(wq.dtype)
+    out["wv"] = params["wv"] * mkv.astype(wq.dtype)
+    out["wo"] = wo * mq.reshape(h, hd, 1).astype(wo.dtype)
+    return out, mask
+
+
+def prune_moe_experts(params: Dict[str, Any], sparsity: float,
+                      method: str = "lakp") -> Tuple[Dict[str, Any], jax.Array]:
+    """Prune whole routed experts (the MoE analogue of capsule elimination).
+
+    Expert score = lookahead product of its input/output projections; the
+    router column of a pruned expert is driven to -inf-like suppression by
+    zeroing (top-k then never selects an all-zero-output expert only if the
+    router also suppresses it, so we zero the router column too).
+    """
+    wi, wo = params["wi"], params["wo"]          # (E, d, f), (E, f, d)
+    e = wi.shape[0]
+    if method == "lakp":
+        a = jnp.sum(jnp.abs(wi), axis=(1, 2))
+        b = jnp.sum(jnp.abs(wo), axis=(1, 2))
+        scores = a * b
+    else:
+        scores = jnp.sum(jnp.abs(wi), axis=(1, 2)) + jnp.sum(
+            jnp.abs(wo), axis=(1, 2))
+    mask = lakp_lib.mask_from_scores(scores, sparsity)    # (E,)
+    m3 = mask.reshape(e, 1, 1)
+    out = dict(params)
+    out["wi"] = wi * m3.astype(wi.dtype)
+    out["wg"] = params["wg"] * m3.astype(wi.dtype)
+    out["wo"] = wo * m3.astype(wi.dtype)
+    # suppress pruned experts at the router via the additive logit bias
+    # (a weight-level offset would flip sign with negative activations)
+    out["router_b"] = (params.get(
+        "router_b", jnp.zeros((e,), params["router"].dtype))
+        + (mask - 1.0) * 1e9).astype(params["router"].dtype)
+    return out, mask

@@ -1,0 +1,127 @@
+"""Dynamic routing between capsules (Sabour et al., paper Fig. 4).
+
+Inputs: prediction vectors ``u_hat`` of shape (B, N_in, N_out, D_out) where
+``u_hat[b, i, j, :]`` is capsule i's prediction for parent capsule j.
+
+Algorithm (r iterations, r=3 in the paper):
+
+    b_ij = 0
+    repeat r times:
+        c_i: = softmax(b_i:)                 over parents j     (Softmax step)
+        s_j  = sum_i c_ij * u_hat_ij                            (FC step)
+        v_j  = squash(s_j)                                      (Squash step)
+        b_ij += <u_hat_ij, v_j>                                 (Agreement step)
+
+Variants (``mode``):
+  * ``reference``  — exact softmax/div, einsum contractions; the oracle.
+  * ``optimized``  — the FastCaps §III-B simplifications mapped to TPU:
+        - Taylor-series exp (Eq. 2) in the softmax, optional exp/log div
+          (Eq. 3);
+        - the Agreement/FC contractions expressed as (N_out*D)-shaped
+          matmuls (the paper's loop reordering: j,k become the outer loops,
+          removing the write conflict — here the MXU-shaped contraction);
+  * ``pallas``     — kernels/routing: the whole r-iteration loop fused in
+        one VMEM-resident Pallas kernel (the paper's "everything in BRAM").
+
+All variants return (v, c_last): parent capsules (B, N_out, D_out) and the
+final coupling coefficients (B, N_in, N_out).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx_math
+
+
+def _softmax_parents(b: jax.Array, mode: str, use_div_exp_log: bool = False
+                     ) -> jax.Array:
+    """Softmax over the parent axis (last axis of (B, N_in, N_out))."""
+    if mode == "taylor":
+        return approx_math.taylor_softmax(
+            b, axis=-1, range_reduce=True, use_div_exp_log=use_div_exp_log)
+    return jax.nn.softmax(b, axis=-1)
+
+
+def route_reference(u_hat: jax.Array, n_iters: int = 3,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle implementation — direct transcription of Fig. 4."""
+    bsz, n_in, n_out, d = u_hat.shape
+    uf = u_hat.astype(jnp.float32)
+    b = jnp.zeros((bsz, n_in, n_out), jnp.float32)
+    c = v = None
+    for _ in range(n_iters):
+        c = jax.nn.softmax(b, axis=-1)                       # (B, I, J)
+        s = jnp.einsum("bij,bijd->bjd", c, uf)               # FC
+        v = approx_math.squash(s, axis=-1)                   # Squash
+        b = b + jnp.einsum("bijd,bjd->bij", uf, v)           # Agreement
+    return v.astype(u_hat.dtype), c
+
+
+def route_optimized(u_hat: jax.Array, n_iters: int = 3,
+                    softmax_mode: str = "taylor",
+                    use_div_exp_log: bool = False,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """FastCaps-optimized routing (paper §III-B) in pure JAX.
+
+    The contraction layout is the TPU analogue of the paper's reordered
+    loops (Code 2): ``u_hat`` is viewed as (B, N_in, N_out*D) so the FC step
+    ``s = c^T @ u`` and the Agreement step ``b += u @ v`` are single
+    MXU-shaped matmuls over the flattened parent axis, with no scatter into
+    ``b`` (the write conflict the paper removes by making j,k outer loops).
+    """
+    bsz, n_in, n_out, d = u_hat.shape
+    uf = u_hat.astype(jnp.float32).reshape(bsz, n_in, n_out * d)
+    b = jnp.zeros((bsz, n_in, n_out), jnp.float32)
+    c = v = None
+    for _ in range(n_iters):
+        c = _softmax_parents(b, softmax_mode, use_div_exp_log)
+        # FC: (B, J, I) @ (B, I, J*D) -> diag over J — cheaper as one matmul
+        # producing (B, J, J*D) would waste J x; instead contract per-parent
+        # via the (B, I, J, D) view folded to a batched matmul over (I):
+        s = jnp.einsum("bij,bijd->bjd", c, uf.reshape(bsz, n_in, n_out, d))
+        v = approx_math.squash_fast(s, axis=-1)
+        # Agreement as a single (B, I, J*D) x (B, J*D block-diag v) matmul —
+        # flattened: b_ij = sum_d u[b,i,j,d] * v[b,j,d]
+        b = b + jnp.einsum("bijd,bjd->bij",
+                           uf.reshape(bsz, n_in, n_out, d), v)
+    return v.astype(u_hat.dtype), c
+
+
+def route_pallas(u_hat: jax.Array, n_iters: int = 3,
+                 softmax_mode: str = "taylor",
+                 interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Fused VMEM-resident routing kernel (kernels/routing)."""
+    from repro.kernels.routing import ops as routing_ops
+
+    return routing_ops.fused_routing(
+        u_hat, n_iters=n_iters, softmax_mode=softmax_mode,
+        interpret=interpret)
+
+
+def route(u_hat: jax.Array, n_iters: int = 3, mode: str = "reference",
+          softmax_mode: str = "exact", use_div_exp_log: bool = False,
+          interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    if mode == "reference":
+        return route_reference(u_hat, n_iters)
+    if mode == "optimized":
+        return route_optimized(u_hat, n_iters, softmax_mode, use_div_exp_log)
+    if mode == "pallas":
+        return route_pallas(u_hat, n_iters, softmax_mode, interpret)
+    raise ValueError(f"unknown routing mode {mode!r}")
+
+
+def routing_flops(bsz: int, n_in: int, n_out: int, d: int, n_iters: int = 3
+                  ) -> int:
+    """Analytic FLOP count of the routing loop (for Fig. 8 / roofline)."""
+    per_iter = (
+        2 * bsz * n_in * n_out * d      # FC (mul+add)
+        + 2 * bsz * n_in * n_out * d    # Agreement
+        + 6 * bsz * n_in * n_out        # softmax (exp + norm, ~6 flops/elt)
+        + 6 * bsz * n_out * d           # squash
+    )
+    return per_iter * n_iters

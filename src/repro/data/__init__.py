@@ -1,0 +1,1 @@
+from repro.data import synthetic_digits, tokens  # noqa: F401

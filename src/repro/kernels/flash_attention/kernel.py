@@ -1,0 +1,147 @@
+"""Blocked flash attention (Pallas, TPU target) with GQA and optional
+Taylor-softmax (paper Eq. 2) as the exp.
+
+Layout and grid
+---------------
+    q   (BK, G, S, D)    BK = batch * kv_heads, G = query heads per KV head
+    k,v (BK, T, D)
+    out (BK, G, S, D)
+
+    grid = (BK, G, num_q_blocks, num_kv_blocks)     kv minor-most
+
+The kv axis is the sequential ("arbitrary") axis: online-softmax running
+max ``m``, denominator ``l`` and the output accumulator live in VMEM
+scratch and persist across kv grid steps (canonical Pallas-TPU flash
+pattern).  Block shapes default to (q=512, kv=512): with D=128 fp32 that is
+q 256 KB + k/v 512 KB + acc 256 KB ~ 1.3 MB — comfortably VMEM-resident
+with headroom for double buffering.
+
+Causal masking: kv blocks fully above the diagonal are skipped with
+``pl.when`` (no MXU work); the diagonal block applies the element mask.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.approx_math import E_A, TAYLOR_COEFFS
+
+NEG_INF = -1e30
+
+
+def _exp(x, mode: str):
+    if mode != "taylor":
+        return jnp.exp(x)
+    c0, c1, c2, c3, c4, c5 = TAYLOR_COEFFS
+    scale = 32.0
+    x = jnp.clip(x, -scale, scale) / scale
+    p = c4 + c5 * x
+    p = c3 + x * p
+    p = c2 + x * p
+    p = c1 + x * p
+    p = c0 + x * p
+    y = E_A * p
+    for _ in range(5):
+        y = y * y
+    return y
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, q_offset: int, q_block: int, kv_block: int,
+                  n_kv_blocks: int, softmax_mode: str, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_block + q_offset          # traced (depends on program_id)
+    k_start = ki * kv_block
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (Qb, D)
+        k = k_ref[0].astype(jnp.float32)                # (Kb, D)
+        v = v_ref[0].astype(jnp.float32)                # (Kb, D)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (Qb, Kb)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1)
+            mask = kpos <= qpos
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                             # (Qb,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = _exp(m_prev - m_new, softmax_mode)
+        p = _exp(s - m_new[:, None], softmax_mode)
+        if causal:  # zero lanes the approx exp left non-zero under the mask
+            p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip kv blocks fully above the causal diagonal
+        pl.when(k_start <= q_start + q_block - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, q_offset: int = 0,
+    q_block: int = 512, kv_block: int = 512,
+    softmax_mode: str = "exact",
+    interpret: bool = True,
+) -> jax.Array:
+    """q (BK, G, S, D), k/v (BK, T, D) -> (BK, G, S, D)."""
+    bk, g, s, d = q.shape
+    t = k.shape[1]
+    qb = min(q_block, s)
+    while s % qb:
+        qb //= 2
+    kb = min(kv_block, t)
+    while t % kb:
+        kb //= 2
+    n_kv = t // kb
+    grid = (bk, g, s // qb, n_kv)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, q_offset=q_offset, q_block=qb,
+        kv_block=kb, n_kv_blocks=n_kv, softmax_mode=softmax_mode,
+        scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, d), lambda b, g_, i, j: (b, g_, i, 0)),
+            pl.BlockSpec((1, kb, d), lambda b, g_, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, d), lambda b, g_, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, d),
+                               lambda b, g_, i, j: (b, g_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bk, g, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

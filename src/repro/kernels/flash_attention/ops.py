@@ -1,0 +1,38 @@
+"""Jitted public wrapper: (B, S, H, D) GQA API over the flash kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "q_offset", "q_block", "kv_block", "softmax_mode", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_offset: int = 0,
+                    q_block: int = 512, kv_block: int = 512,
+                    softmax_mode: str = "exact",
+                    interpret: bool | None = None) -> jax.Array:
+    """q (B, S, H, D); k, v (B, T, K, D); H = K * G -> (B, S, H, D)."""
+    if interpret is None:
+        interpret = on_cpu()
+    b, s, h, d = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = h // nkv
+    qr = (q.reshape(b, s, nkv, g, d).transpose(0, 2, 3, 1, 4)
+          .reshape(b * nkv, g, s, d))
+    kr = k.transpose(0, 2, 1, 3).reshape(b * nkv, t, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * nkv, t, d)
+    o = flash_attention_pallas(
+        qr, kr, vr, causal=causal, q_offset=q_offset, q_block=q_block,
+        kv_block=kv_block, softmax_mode=softmax_mode, interpret=interpret)
+    return (o.reshape(b, nkv, g, s, d).transpose(0, 3, 1, 2, 4)
+            .reshape(b, s, h, d))

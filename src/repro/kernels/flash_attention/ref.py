@@ -1,0 +1,30 @@
+"""Oracle for the flash-attention kernel: exact GQA attention, fp32."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q (B, S, H, D); k, v (B, T, K, D); H = K * G -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = h // nkv
+    qg = q.reshape(b, s, nkv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, kf) / math.sqrt(d)
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = (kpos[None, :] <= qpos[:, None])[None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.routing import ops, ref  # noqa: F401
+from repro.kernels.routing.routing_kernel import fused_routing_pallas  # noqa: F401

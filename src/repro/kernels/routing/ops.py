@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the fused routing kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.routing.routing_kernel import fused_routing_pallas
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "softmax_mode", "batch_block",
+                                    "interpret"))
+def fused_routing(u_hat: jax.Array, n_iters: int = 3,
+                  softmax_mode: str = "exact", batch_block: int = 8,
+                  interpret: bool | None = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Fused dynamic routing; interpret defaults to True off-TPU."""
+    if interpret is None:
+        interpret = on_cpu()
+    bsz = u_hat.shape[0]
+    bb = batch_block
+    while bsz % bb:
+        bb //= 2
+    return fused_routing_pallas(
+        u_hat, n_iters=n_iters, softmax_mode=softmax_mode,
+        batch_block=max(bb, 1), interpret=interpret)

@@ -1,0 +1,2 @@
+from repro.kernels.taylor_softmax import ops, ref  # noqa: F401
+from repro.kernels.taylor_softmax.kernel import taylor_softmax_pallas  # noqa: F401

@@ -1,0 +1,16 @@
+"""Oracle for the Taylor-softmax kernel: Eq. 2 softmax over the last axis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx_math
+
+
+def taylor_softmax_ref(x: jax.Array, range_reduce: bool = True) -> jax.Array:
+    m = jnp.max(x.astype(jnp.float32), axis=-1, keepdims=True)
+    e = approx_math.taylor_exp(x.astype(jnp.float32) - m,
+                               range_reduce=range_reduce)
+    return (e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+            ).astype(x.dtype)

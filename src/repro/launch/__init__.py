@@ -1,0 +1,3 @@
+# Launchers: mesh construction, multi-pod dry-run, roofline analysis,
+# training and serving CLIs.  NOTE: repro.launch.dryrun sets XLA_FLAGS at
+# import time (512 host devices) — never import it from tests/benches.

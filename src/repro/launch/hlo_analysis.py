@@ -1,0 +1,108 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, remat duplication.
+
+collective_bytes is NOT in compiled.cost_analysis(); we parse the HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (roofline §: collective term).
+
+Shapes are parsed from the HLO result type, e.g.
+    %all-gather.3 = bf16[16,4096,12288]{2,1,0} all-gather(...)
+Tuple results (e.g. fused all-reduce of several tensors) sum their parts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped buffer, e.g.  bf16[16,4096,128]{2,1,0}  or f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# an HLO instruction line:  %name = <result type> opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        rows = [f"  {k:20s} n={self.count_by_kind[k]:4d} "
+                f"bytes={self.bytes_by_kind[k]:.3e}"
+                for k in sorted(self.bytes_by_kind)]
+        return "\n".join(rows) if rows else "  (no collectives)"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO.
+
+    Result shape is used as the proxy for moved bytes: for all-reduce it
+    equals the payload; for all-gather it is the gathered output (an upper
+    bound on per-link traffic x ring steps within a constant); consistency
+    across iterations is what the perf loop needs.  ``-start`` variants
+    (async collectives) are counted once; ``-done`` ops are skipped."""
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        result_type, opcode = m.group(1), m.group(2)
+        base = opcode.removesuffix("-start")
+        if opcode.endswith("-done") or base not in _COLLECTIVES:
+            continue
+        nbytes = _shape_bytes(result_type)
+        bytes_by[base] += nbytes
+        count_by[base] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def op_census(hlo_text: str, top: int = 15) -> List[Tuple[str, int]]:
+    """Instruction count per opcode (remat shows up as duplicate fusions)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            counts[m.group(2)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]
+
+
+def reshape_transpose_bytes(hlo_text: str) -> int:
+    """Bytes flowing through layout-change ops (sharding-mismatch smell)."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m and m.group(2) in ("transpose", "reshape", "copy"):
+            total += _shape_bytes(m.group(1))
+    return total

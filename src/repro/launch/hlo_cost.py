@@ -1,0 +1,414 @@
+"""Trip-count-weighted HLO cost analysis (the dry-run profiler).
+
+``compiled.cost_analysis()`` on the CPU backend counts while-loop bodies
+ONCE — a scanned 28-layer model reports ~1 layer of FLOPs.  XLA however
+annotates every scan-derived loop with ``backend_config=
+{"known_trip_count":{"n":"28"}}``, so this module re-derives
+
+    flops / transcendentals / bytes-accessed / collective bytes
+
+from the post-SPMD HLO text with loop bodies multiplied by their trip
+counts (nested loops multiply).  Conventions follow HloCostAnalysis:
+elementwise = numel(result) flops; dot = 2*numel(result)*K; fusion bytes =
+fusion operands + result (internal values live in registers); GTE/tuple/
+parameter/bitcast are free.  Conditionals take the max across branches.
+
+Validated against analytic 6*N*D model FLOPs in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:condition|body|calls|to_apply)=%([\w.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+_DOT_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_LHS_B = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CONV_LABELS = re.compile(r"dim_labels=([\w\?]+)_([\w\?]+)->([\w\?]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "negate", "abs", "select", "and", "or", "xor", "not", "compare",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "clamp", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "atan2", "is-finite",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "power", "sine", "cosine", "tan", "logistic",
+    "erf", "expm1",
+}
+_FREE = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "after-all", "partition-id", "replica-id", "copy-start",
+    "copy-done", "get-dimension-size", "opt-barrier",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    numel = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return numel, nbytes
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_count: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = (
+                self.collective_by_kind.get(k, 0.0) + v * mult)
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = (
+                self.collective_count.get(k, 0.0) + v * mult)
+
+
+def _parse_operands(rest: str) -> Tuple[List[str], str]:
+    """rest starts right after the opening '('; returns (operand names,
+    attrs after the matching ')')."""
+    depth = 1
+    i = 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    inner, attrs = rest[:i - 1], rest[i:]
+    ops = re.findall(r"%([\w.\-]+)", inner)
+    return ops, attrs
+
+
+def parse_module(hlo_text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if current is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode = m.group(1), m.group(2), m.group(3)
+        rest = line[m.end():]
+        ops, attrs = _parse_operands(rest)
+        comps[current].append(Instr(name, rtype, opcode, ops, attrs, line,
+                                    is_root=line.lstrip().startswith("ROOT")))
+    return comps
+
+
+class WeightedCostAnalysis:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_module(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        # name -> result type, per computation
+        self._types: Dict[str, Dict[str, str]] = {
+            c: {i.name: i.result_type for i in instrs}
+            for c, instrs in self.comps.items()
+        }
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HEADER_RE.match(line)
+                if m:
+                    return m.group(1)
+        # fall back: last computation
+        return list(self.comps)[-1]
+
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry)
+
+    def _comp_cost(self, comp: str, fused: bool = False) -> Cost:
+        key = comp + ("#f" if fused else "")
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total           # break cycles defensively
+        for instr in self.comps.get(comp, []):
+            total.add(self._instr_cost(comp, instr, fused=fused))
+        return total
+
+    def _fusion_bytes(self, comp: str, instr: Instr, called: str) -> float:
+        """Bytes for a fusion op: result write + per-operand reads, where
+
+        * an operand whose ONLY uses inside the fused computation are
+          slice-family ops is charged via those slices (fused mode), not
+          at its full buffer size — a fusion that dynamic-slices a stacked
+          scan buffer only touches the slice;
+        * a fusion whose ROOT is dynamic-update-slice (the scan-accumulator
+          in-place pattern) writes only the update region: the result is
+          charged at 2x the update size and the aliased full-size
+          accumulator operand is pass-through (0 bytes)."""
+        _, rbytes = _shape_numel_bytes(instr.result_type)
+        inner = self.comps.get(called, [])
+        root = next((i for i in inner if i.is_root),
+                    inner[-1] if inner else None)
+        dus_root = root is not None and root.opcode == "dynamic-update-slice"
+        if dus_root:
+            upd_bytes = 0
+            if len(root.operands) > 1:
+                t = {i.name: i.result_type for i in inner}.get(
+                    root.operands[1])
+                if t:
+                    upd_bytes = _shape_numel_bytes(t)[1]
+            total = 2.0 * upd_bytes
+        else:
+            total = float(rbytes)
+        # param index -> param instruction name
+        params = {}
+        for i in inner:
+            if i.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i.line)
+                if m:
+                    params[int(m.group(1))] = i.name
+        slice_only = {}
+        for idx, pname in params.items():
+            uses = [i for i in inner if pname in i.operands]
+            slice_only[idx] = bool(uses) and all(
+                i.opcode in ("dynamic-slice", "gather", "slice")
+                and i.operands and i.operands[0] == pname
+                for i in uses)
+        for k, op_name in enumerate(instr.operands):
+            if slice_only.get(k, False):
+                continue                  # charged via fused-mode slices
+            t = self._types[comp].get(op_name)
+            if not t:
+                continue
+            b = _shape_numel_bytes(t)[1]
+            if dus_root and b == rbytes:
+                continue                  # aliased accumulator pass-through
+            total += b
+        return total
+
+    def _operand_dims(self, comp: str, name: str) -> Optional[List[int]]:
+        t = self._types[comp].get(name)
+        return _shape_dims(t) if t else None
+
+    def _operand_bytes(self, comp: str, names: List[str]) -> int:
+        total = 0
+        for n in names:
+            t = self._types[comp].get(n)
+            if t:
+                total += _shape_numel_bytes(t)[1]
+        return total
+
+    def _instr_cost(self, comp: str, instr: Instr,
+                    fused: bool = False) -> Cost:
+        op = instr.opcode
+        c = Cost()
+        if op in _FREE:
+            return c
+        numel, rbytes = _shape_numel_bytes(instr.result_type)
+
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(instr.attrs)
+            if m:
+                trip = int(m.group(1))
+            called = _CALLED_RE.findall(instr.attrs)
+            for g1, g2 in called:
+                if g1:
+                    c.add(self._comp_cost(g1), mult=trip)
+            return c
+
+        if op == "conditional":
+            branches: List[str] = []
+            for g1, g2 in _CALLED_RE.findall(instr.attrs):
+                if g2:
+                    branches += re.findall(r"%([\w.\-]+)", g2)
+                elif g1:
+                    branches.append(g1)
+            best = Cost()
+            for b in branches:
+                bc = self._comp_cost(b)
+                if bc.flops >= best.flops:
+                    best = bc
+            c.add(best)
+            c.bytes += rbytes + self._operand_bytes(comp, instr.operands)
+            return c
+
+        if op == "fusion":
+            called = [g1 for g1, g2 in _CALLED_RE.findall(instr.attrs)
+                      if g1]
+            for g1 in called:
+                inner = self._comp_cost(g1, fused=True)
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                c.bytes += inner.bytes      # fused-mode: slice touches only
+                c.collective_bytes += inner.collective_bytes
+            if called:
+                c.bytes += self._fusion_bytes(comp, instr, called[0])
+            else:
+                c.bytes += rbytes + self._operand_bytes(comp,
+                                                        instr.operands)
+            return c
+
+        if op in ("call", "async-start"):
+            for g1, g2 in _CALLED_RE.findall(instr.attrs):
+                if g1:
+                    c.add(self._comp_cost(g1))
+            c.bytes += rbytes + self._operand_bytes(comp, instr.operands)
+            return c
+
+        base = op.removesuffix("-start")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            c.collective_bytes += rbytes
+            c.collective_by_kind[base] = rbytes
+            c.collective_count[base] = 1
+            c.bytes += rbytes + self._operand_bytes(comp, instr.operands)
+            return c
+
+        if op == "dot":
+            k = 1.0
+            lhs_dims = (self._operand_dims(comp, instr.operands[0])
+                        if instr.operands else None)
+            mc = _DOT_LHS_C.search(instr.attrs)
+            if lhs_dims is not None and mc:
+                for d in (mc.group(1).split(",") if mc.group(1) else []):
+                    k *= lhs_dims[int(d)]
+            c.flops += 2.0 * numel * k
+            if not fused:
+                c.bytes += rbytes + self._operand_bytes(comp,
+                                                        instr.operands)
+            return c
+
+        if op == "convolution":
+            rhs_dims = (self._operand_dims(comp, instr.operands[1])
+                        if len(instr.operands) > 1 else None)
+            k = 1.0
+            if rhs_dims:
+                ml = _CONV_LABELS.search(instr.attrs)
+                if ml:
+                    rhs_labels = ml.group(2)
+                    o_idx = rhs_labels.find("o")
+                    out_f = rhs_dims[o_idx] if o_idx >= 0 else 1
+                    k = 1.0
+                    for d in rhs_dims:
+                        k *= d
+                    k /= max(out_f, 1)
+                else:
+                    k = float(rhs_dims[0])
+            c.flops += 2.0 * numel * k
+            if not fused:
+                c.bytes += rbytes + self._operand_bytes(comp,
+                                                        instr.operands)
+            return c
+
+        if op in ("reduce", "reduce-window"):
+            in_numel = 0
+            if instr.operands:
+                t = self._types[comp].get(instr.operands[0])
+                if t:
+                    in_numel = _shape_numel_bytes(t)[0]
+            c.flops += float(max(in_numel, numel))
+            if not fused:
+                c.bytes += rbytes + self._operand_bytes(comp,
+                                                        instr.operands)
+            return c
+
+        if op in _TRANSCENDENTAL:
+            c.flops += float(numel)
+            c.transcendentals += float(numel)
+            if not fused:
+                c.bytes += rbytes + self._operand_bytes(comp,
+                                                        instr.operands)
+            return c
+
+        # slice-family ops move only the sliced region, not the full
+        # operand buffer (charging the whole stacked-params tensor per
+        # scan iteration would overstate HBM traffic by ~n_layers x);
+        # dynamic-update-slice writes in place (aliased) — charge the
+        # update region read+write.
+        if op in ("dynamic-slice", "gather", "slice"):
+            c.bytes += (1.0 if fused else 2.0) * rbytes
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = 0
+            if len(instr.operands) > 1:
+                t = self._types[comp].get(instr.operands[1])
+                if t:
+                    upd = _shape_numel_bytes(t)[1]
+            c.bytes += 2.0 * upd
+            return c
+        if op == "broadcast":
+            if not fused:
+                c.bytes += rbytes + min(
+                    rbytes, self._operand_bytes(comp, instr.operands))
+            return c
+
+        if op in _ELEMENTWISE or op == "map":
+            c.flops += float(numel)
+        # everything else (transpose, reshape, concatenate, pad, convert,
+        # copy, sort, rng...) costs bytes but ~0 flops
+        if not fused:
+            c.bytes += rbytes + self._operand_bytes(comp, instr.operands)
+        return c
+
+
+def weighted_cost(hlo_text: str) -> Cost:
+    return WeightedCostAnalysis(hlo_text).cost()

@@ -1,0 +1,59 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List
+
+from repro.launch import roofline as rf
+
+
+def gib(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: List[Dict[str, Any]]) -> str:
+    hdr = ("| arch | shape | mesh | args GiB/dev | temp GiB/dev | "
+           "flops/dev | coll bytes/dev | AG/AR/RS/A2A | compile s |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in recs:
+        cc = r.get("collective_counts", {})
+        counts = "/".join(str(int(cc.get(k, 0))) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {gib(r['arg_bytes_per_dev'])} "
+            f"| {gib(r['temp_bytes_per_dev'])} "
+            f"| {r['flops_per_dev']:.3e} "
+            f"| {r['collective_bytes_per_dev']:.3e} "
+            f"| {counts} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+                    default="both")
+    args = ap.parse_args()
+    recs = rf.load_records(args.dir)
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline (single-pod 16x16)\n")
+        rows = [rf.analyze(r) for r in recs if r["mesh"] == "16x16"]
+        print(rf.to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) from the
+dry-run artifacts (launch/dryrun.py JSON records).
+
+    compute term    = FLOPs_per_dev / peak_FLOP/s          [s]
+    memory term     = bytes_per_dev / HBM_bw               [s]
+    collective term = collective_bytes_per_dev / link_bw   [s]
+
+Hardware constants (TPU v5e-class target):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+FLOPs/bytes are the trip-count-weighted per-device costs (hlo_cost.py).
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the spec; the ratio
+MODEL_FLOPS / HLO_FLOPS shows how much compiled compute is "useful"
+(catches remat/redundancy waste).
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+# Parameter counts (total, active) computed analytically per arch; filled
+# by params_for() below.
+
+
+def _lm_param_count(cfg) -> Dict[str, float]:
+    """Analytic N (total) and N_active (MoE: shared + top_k experts)."""
+    d, dff, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    hd = cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+
+    if cfg.family == "moe":
+        m = cfg.moe
+        expert = 3 * d * m.d_expert
+        router = d * m.n_experts
+        shared = 3 * d * (m.n_shared * m.d_expert) if m.n_shared else 0
+        layer_total = attn + router + shared + m.n_experts * expert
+        layer_active = attn + router + shared + m.top_k * expert
+        return {"total": embed + L * layer_total,
+                "active": embed + L * layer_active}
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.d_inner(d)
+        nh_m = s.n_heads(d)
+        mamba = (d * (2 * di + 2 * s.n_groups * s.d_state + nh_m)
+                 + s.d_conv * (di + 2 * s.n_groups * s.d_state)
+                 + di * d + 2 * di + 3 * nh_m)
+        shared_blk = attn + 3 * d * dff
+        n = embed + L * mamba + shared_blk
+        return {"total": n, "active": n}
+    if cfg.family == "ssm":
+        x = cfg.xlstm
+        di = int(x.mlstm_proj_factor * d)
+        mlstm = (d * 2 * di + x.d_conv * di + 3 * di * (di // 1)
+                 // cfg.n_heads * cfg.n_heads // 1)
+        # q,k,v projections are (di, di); gates (di, 2*nh)
+        mlstm = (d * 2 * di + x.d_conv * di + 3 * di * di
+                 + di * 2 * cfg.n_heads + 2 * di + di * d)
+        dffs = ((int(x.slstm_ff_factor * d) + 63) // 64) * 64
+        slstm = (d * 4 * d + cfg.n_heads * (d // cfg.n_heads) ** 2 * 4
+                 + d * 2 * dffs + dffs * d)
+        k = x.slstm_every
+        n_groups = L // k
+        n = embed + n_groups * ((k - 1) * mlstm + slstm)
+        return {"total": n, "active": n}
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        n_units = L // (k + 1)
+        blk = attn + 3 * d * dff
+        cross = attn + 3 * d * dff + 1
+        n = embed + d * d + n_units * (k * blk + cross)
+        return {"total": n, "active": n}
+    # dense / audio
+    mlp = (3 if cfg.glu else 2) * d * dff
+    n = embed + L * (attn + mlp) + d
+    return {"total": n, "active": n}
+
+
+def params_for(arch: str) -> Dict[str, float]:
+    from repro import configs as cfg_lib
+    cfg = cfg_lib.get_config(arch)
+    if arch.startswith("capsnet"):
+        from repro.core import capsnet as cn
+        import jax
+        import jax.numpy as jnp
+        p = jax.eval_shape(lambda k: cn.init(cfg, k),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+        n = sum(int(x.size) for x in jax.tree.leaves(p))
+        return {"total": float(n), "active": float(n)}
+    return {k: float(v) for k, v in _lm_param_count(cfg).items()}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D for train; 2*N_active*D for inference
+    (forward only), with D = tokens processed by the step."""
+    from repro import configs as cfg_lib
+    p = params_for(arch)["active"]
+    if shape in ("train_1k", "infer_1k"):                  # capsnet cells
+        b = 1024
+        mult = 6.0 if shape == "train_1k" else 2.0
+        return mult * p * b
+    info = cfg_lib.SHAPES[shape]
+    kind = info["kind"]
+    if kind == "train":
+        return 6.0 * p * info["batch"] * info["seq"]
+    if kind == "prefill":
+        return 2.0 * p * info["batch"] * info["seq"]
+    return 2.0 * p * info["batch"]                         # decode: 1 tok/row
+
+
+def analyze(rec: Dict[str, Any]) -> Dict[str, Any]:
+    t_comp = rec["flops_per_dev"] / PEAK_FLOPS
+    t_mem = rec["bytes_per_dev"] / HBM_BW
+    t_coll = rec["collective_bytes_per_dev"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["flops_per_dev"] * rec["n_chips"]
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful-compute time / modelled step time
+    t_useful = (mf / rec["n_chips"]) / PEAK_FLOPS
+    frac = t_useful / bound if bound > 0 else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "n_chips")},
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+    }
+
+
+def load_records(directory: str) -> List[Dict[str, Any]]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def to_markdown(rows: List[Dict[str, Any]]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 / 2x16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = [analyze(r) for r in load_records(args.dir)
+            if args.mesh is None or r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if args.markdown:
+        print(to_markdown(rows))
+        return
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"comp={r['t_compute_s']:.3e} mem={r['t_memory_s']:.3e} "
+              f"coll={r['t_collective_s']:.3e} dom={r['dominant']:10s} "
+              f"useful={r['useful_ratio']:.3f} "
+              f"roofline={r['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Drive the full dry-run matrix, one subprocess per cell (isolates compile
+memory; a failed cell cannot take down the sweep).
+
+    PYTHONPATH=src python -m repro.launch.run_matrix \
+        --out experiments/dryrun --hlo-dir experiments/hlo --mesh both
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    from repro import configs as cfg_lib   # no jax involvement
+    from repro.launch.dryrun import CAPSNET_SHAPES
+
+    cells = list(cfg_lib.CELLS) + [
+        (a, s) for a in cfg_lib.PAPER_ARCHS for s in CAPSNET_SHAPES]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    failures = []
+    t0 = time.time()
+    for arch, shape in cells:
+        if not arch.startswith("capsnet") and cfg_lib.cell_status(arch,
+                                                                  shape):
+            print(f"[skip] {arch:22s} {shape:12s} "
+                  f"{cfg_lib.cell_status(arch, shape)}", flush=True)
+            continue
+        for mesh in meshes:
+            mesh_name = "2x16x16" if mesh == "multi" else "16x16"
+            if args.skip_existing:
+                f = os.path.join(args.out,
+                                 f"{arch}__{shape}__{mesh_name}.json")
+                if os.path.exists(f):
+                    print(f"[have] {arch:22s} {shape:12s} {mesh_name}",
+                          flush=True)
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", args.out]
+            if args.hlo_dir and mesh == "single":
+                cmd += ["--hlo-dir", args.hlo_dir]
+            try:
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=args.timeout)
+                ok_lines = [l for l in r.stdout.splitlines()
+                            if l.startswith("[ ok ]")]
+                if r.returncode == 0 and ok_lines:
+                    print(ok_lines[-1], flush=True)
+                else:
+                    failures.append((arch, shape, mesh_name))
+                    tail = (r.stdout + r.stderr).strip().splitlines()[-6:]
+                    print(f"[FAIL] {arch} {shape} {mesh_name}:", flush=True)
+                    for line in tail:
+                        print("   ", line, flush=True)
+            except subprocess.TimeoutExpired:
+                failures.append((arch, shape, mesh_name, "timeout"))
+                print(f"[TIMEOUT] {arch} {shape} {mesh_name}", flush=True)
+    dt = time.time() - t0
+    print(f"\nmatrix done in {dt/60:.1f} min; {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", *f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

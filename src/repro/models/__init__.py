@@ -1,0 +1,3 @@
+from repro.models.common import LMConfig, MoEConfig, SSMConfig, XLSTMConfig
+
+__all__ = ["LMConfig", "MoEConfig", "SSMConfig", "XLSTMConfig"]

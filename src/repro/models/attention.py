@@ -1,0 +1,298 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, qkv-bias, cross-attention, KV cache.
+
+Three interchangeable inner implementations (cfg.attn_impl):
+  * ``reference`` — full score matrix, for tests/small shapes.
+  * ``chunked``   — flash-style online-softmax over KV blocks via lax.scan;
+                    O(S * kv_block) transient memory.  Used by the dry-run
+                    (Pallas does not lower to the CPU backend non-interpreted).
+  * ``pallas``    — kernels/flash_attention (TPU target; interpret-mode on CPU).
+
+``softmax_mode="taylor"`` swaps the exact exp for the FastCaps Eq.2 Taylor
+polynomial (with range reduction — see core/approx_math.py), reproducing the
+paper's approx-softmax as a selectable mode in the LM substrate.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx_math
+from repro.models import common
+from repro.models.common import LMConfig, ParamDef, fanin_init, zeros_init, ones_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: LMConfig, cross: bool = False) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    defs: Dict[str, Any] = {
+        "wq": ParamDef((d, nh, hd), ("embed", "heads", "head_dim"), fanin_init(d)),
+        "wk": ParamDef((d, nkv, hd), ("embed", "kv_heads", "head_dim"), fanin_init(d)),
+        "wv": ParamDef((d, nkv, hd), ("embed", "kv_heads", "head_dim"), fanin_init(d)),
+        "wo": ParamDef((nh, hd, d), ("heads", "head_dim", "embed"),
+                       fanin_init(nh * hd)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((nh, hd), ("heads", "head_dim"), zeros_init())
+        defs["bk"] = ParamDef((nkv, hd), ("kv_heads", "head_dim"), zeros_init())
+        defs["bv"] = ParamDef((nkv, hd), ("kv_heads", "head_dim"), zeros_init())
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), ones_init())
+        defs["k_norm"] = ParamDef((hd,), (None,), ones_init())
+    if cross:
+        # tanh-gated residual injection (llama-3.2-vision style), init 0 so the
+        # model starts as the pure text model.
+        defs["gate"] = ParamDef((), (), zeros_init())
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Softmax variants
+# ---------------------------------------------------------------------------
+
+
+def _exp(x: jax.Array, mode: str) -> jax.Array:
+    if mode == "taylor":
+        return approx_math.taylor_exp(x, range_reduce=True)
+    return jnp.exp(x)
+
+
+def _masked_softmax(scores: jax.Array, mask: Optional[jax.Array], mode: str) -> jax.Array:
+    """softmax over the last axis in fp32; mask True = attend."""
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # guard all-masked rows
+    e = _exp(scores - jax.lax.stop_gradient(m), mode)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(params, cfg: LMConfig, xq: jax.Array, xkv: jax.Array):
+    cd = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", xq.astype(cd), params["wq"].astype(cd))
+    k = jnp.einsum("btd,dhk->bthk", xkv.astype(cd), params["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", xkv.astype(cd), params["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = common.rms_norm_simple(q) * params["q_norm"].astype(cd)
+        k = common.rms_norm_simple(k) * params["k_norm"].astype(cd)
+    return q, k, v
+
+
+def _out_proj(params, cfg: LMConfig, attn_out: jax.Array) -> jax.Array:
+    cd = cfg.cdtype()
+    return jnp.einsum("bshk,hkd->bsd", attn_out.astype(cd), params["wo"].astype(cd))
+
+
+def _group_heads(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B,S,H,D) -> (B,S,K,G,D) where H = K*G."""
+    b, s, h, d = q.shape
+    g = h // n_kv
+    return q.reshape(b, s, n_kv, g, d)
+
+
+# ---------------------------------------------------------------------------
+# Inner attention implementations
+# ---------------------------------------------------------------------------
+
+
+def _reference_attention(q, k, v, cfg: LMConfig, causal: bool,
+                         q_offset: int = 0) -> jax.Array:
+    """q: (B,S,H,D); k,v: (B,T,K,D) -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    qg = _group_heads(q, nkv)                      # (B,S,K,G,D)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    mask = None
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = (kpos[None, :] <= qpos[:, None])[None, None, None]
+    p = _masked_softmax(scores, mask, cfg.softmax_mode).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, h, d)
+
+
+def _chunked_attention(q, k, v, cfg: LMConfig, causal: bool,
+                       q_offset: int = 0,
+                       kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-style online softmax over KV blocks (lax.scan).
+
+    q: (B,S,H,D); k,v: (B,T,K,D).  T must be divisible by the kv block.
+    ``kv_valid_len``: optional (B,) — mask out cache positions >= len.
+    """
+    b, s, h, d = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    blk = min(cfg.attn_kv_block, t)
+    while t % blk:
+        blk //= 2
+    nblk = t // blk
+    g = h // nkv
+    qg = _group_heads(q, nkv)                       # (B,S,K,G,D)
+    scale = 1.0 / math.sqrt(d)
+    qpos = (jnp.arange(s) + q_offset)[None, :]      # (1,S)
+
+    kb = k.reshape(b, nblk, blk, nkv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, blk, nkv, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        idx, kblk, vblk = inp                        # kblk: (B,blk,K,D)
+        kpos = idx * blk + jnp.arange(blk)           # (blk,)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kblk).astype(jnp.float32)
+        scores = scores * scale                      # (B,K,G,S,blk)
+        mask = jnp.ones((b, 1, 1, s, blk), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, :, None])[:, None, None]
+        if kv_valid_len is not None:
+            mask = mask & (kpos[None, :] < kv_valid_len[:, None])[:, None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_blk = jnp.max(scores, axis=-1)             # (B,K,G,S)
+        m_new = jnp.maximum(m_prev, m_blk)
+        alpha = _exp(m_prev - m_new, cfg.softmax_mode)
+        p = _exp(scores - m_new[..., None], cfg.softmax_mode)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vblk.dtype), vblk)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, nkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, nkv, g, s, d), jnp.float32)
+    # flash-style backward (§Perf H1): checkpointing the kv-block body
+    # recomputes scores/p in the bwd pass instead of saving the stacked
+    # (nblk, B, K, G, S, blk) probability/mask residuals — the dominant
+    # activation-memory term for long-context cells.
+    scan_body = jax.checkpoint(body) if cfg.attn_scan_remat else body
+    (m, l, acc), _ = jax.lax.scan(
+        scan_body, (m0, l0, acc0), (jnp.arange(nblk), kb, vb)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)  # (B,S,K,G,D)->(B,S,H,D)
+    return out.astype(q.dtype)
+
+
+def _inner_attention(q, k, v, cfg: LMConfig, causal: bool, q_offset: int = 0,
+                     kv_valid_len=None) -> jax.Array:
+    if cfg.attn_impl == "reference":
+        assert kv_valid_len is None
+        return _reference_attention(q, k, v, cfg, causal, q_offset)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        if kv_valid_len is None and q.shape[1] > 1:
+            return fa_ops.flash_attention(q, k, v, causal=causal,
+                                          q_offset=q_offset,
+                                          interpret=fa_ops.on_cpu())
+        # decode and masked-cache paths fall back to chunked
+    return _chunked_attention(q, k, v, cfg, causal, q_offset, kv_valid_len)
+
+
+# ---------------------------------------------------------------------------
+# Public layer entry points
+# ---------------------------------------------------------------------------
+
+
+def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
+                   cache: Optional[Dict[str, jax.Array]] = None,
+                   cache_index: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self-attention with optional KV cache.
+
+    Modes:
+      * cache=None                      — training / encoder forward.
+      * cache given, x.shape[1] > 1     — prefill: writes cache[0:S].
+      * cache given, x.shape[1] == 1    — decode: writes cache[idx], attends
+                                          to cache[0:idx+1].
+    """
+    q, k, v = _project_qkv(params, cfg, x, x)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
+        return _out_proj(params, cfg, out), None
+
+    s = x.shape[1]
+    if s > 1:  # prefill
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
+        new_cache = {"k": ck, "v": cv}
+    else:  # decode one token
+        idx = cache_index if cache_index is not None else positions[:, 0].max()
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        valid = jnp.full((x.shape[0],), idx + 1, jnp.int32)
+        out = _inner_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
+                               causal=False, kv_valid_len=valid)
+        new_cache = {"k": ck, "v": cv}
+    return _out_proj(params, cfg, out), new_cache
+
+
+def cross_attention(params, cfg: LMConfig, x: jax.Array,
+                    kv_feats: Optional[jax.Array] = None,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Cross-attention onto (precomputed) image features; tanh-gated output.
+
+    During prefill, kv_feats is projected and cached; during decode the cached
+    K/V are reused (kv_feats=None).
+    """
+    if cache is not None and kv_feats is None:
+        k, v = cache["k"].astype(cfg.cdtype()), cache["v"].astype(cfg.cdtype())
+        cd = cfg.cdtype()
+        q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wq"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + params["bq"].astype(cd)
+        if cfg.qk_norm:
+            q = common.rms_norm_simple(q) * params["q_norm"].astype(cd)
+        new_cache = cache
+    else:
+        q, k, v = _project_qkv(params, cfg, x, kv_feats)
+        new_cache = {"k": k, "v": v}
+    out = _inner_attention(q, k, v, cfg, causal=False)
+    y = _out_proj(params, cfg, out)
+    gate = jnp.tanh(params["gate"].astype(y.dtype))
+    return y * gate, new_cache
+
+
+def make_kv_cache(cfg: LMConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Stacked (layers-first) KV cache pytree."""
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(stacked: bool = True):
+    axes = ("batch", None, "kv_heads", None)
+    if stacked:
+        axes = ("layers",) + axes
+    return {"k": axes, "v": axes}

@@ -1,0 +1,354 @@
+"""Shared model substrate: configs, param declaration, norms, RoPE, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every layer
+declares its parameters once as ``ParamDef``s — (shape, logical_axes, init) —
+from which both the initializer and the logical-sharding spec tree are
+derived, so the two can never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden dim
+    n_shared: int = 0             # always-on shared experts (DeepSeekMoE)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # dispatch: "scatter" (per-row sort/scatter, baseline) | "onehot"
+    # (GShard two-one-hot einsum with explicit expert->model sharding
+    # constraints; §Perf H-B1 — kills the replicated-dispatch all-reduces:
+    # dbrx train collective 104 s -> 13 s)
+    dispatch: str = "onehot"
+    # flatten decode tokens across the batch so capacity is global
+    # (ceil(B*k/E*cf)) instead of the per-row max(8, ...) floor
+    # (§Perf H-C1: 16x dispatch-FLOP cut for deepseek decode)
+    global_decode_dispatch: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block config."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 8          # xLSTM[7:1]: every 8th block is sLSTM
+    mlstm_proj_factor: float = 2.0
+    slstm_ff_factor: float = 1.3333
+    d_conv: int = 4
+    chunk_size: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    arch_id: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0               # 0 -> d_model // n_heads
+    act: str = "silu"             # silu -> SwiGLU; gelu -> GeGLU-less plain MLP
+    glu: bool = True
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    rope_theta: float = 500000.0
+    causal: bool = True
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # MoE
+    moe: Optional[MoEConfig] = None
+    # hybrid (zamba2-style): shared transformer block applied every k SSM layers
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 0
+    # xLSTM
+    xlstm: Optional[XLSTMConfig] = None
+    # VLM: a cross-attention layer inserted after every k self-attn layers.
+    # n_layers counts BOTH self and cross layers (llama-3.2-vision convention).
+    cross_attn_every: int = 0
+    n_image_tokens: int = 1024
+    # audio/vlm frontends are stubs: inputs are precomputed embeddings
+    frontend: Optional[str] = None   # None | audio | vision
+    # numerics / lowering
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_group: int = 1          # save residuals only every g layers
+    loss_chunks: int = 0          # 0 -> auto (seq/1024)
+    scan_layers: bool = True
+    attn_q_block: int = 512       # chunked-attention query block
+    attn_kv_block: int = 1024
+    attn_impl: str = "chunked"    # chunked | reference | pallas
+    attn_scan_remat: bool = True  # checkpoint kv-block scan body (flash
+    #                                bwd: recompute p instead of saving it)
+    #                                §Perf H1 — baseline variant sets False
+    loss_remat: bool = True       # checkpoint CE chunk body (recompute
+    #                                chunk logits in bwd) — §Perf H2
+    softmax_mode: str = "exact"   # exact | taylor  (FastCaps Eq.2 option)
+    max_seq_len: int = 8192
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def n_self_layers(self) -> int:
+        if self.cross_attn_every:
+            # n_layers = self + cross;   cross = self // cross_attn_every
+            k = self.cross_attn_every
+            n_self = self.n_layers * k // (k + 1)
+            return n_self
+        return self.n_layers
+
+    def n_cross_layers(self) -> int:
+        if self.cross_attn_every:
+            return self.n_layers - self.n_self_layers()
+        return 0
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            raise ValueError("pass a params pytree")
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Param declaration
+# ---------------------------------------------------------------------------
+
+InitFn = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def normal_init(stddev: float) -> InitFn:
+    def init(key, shape, dtype):
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+                * stddev).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> InitFn:
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init() -> InitFn:
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+def fanin_init(fan_in: Optional[int] = None) -> InitFn:
+    def init(key, shape, dtype):
+        fi = fan_in if fan_in is not None else shape[0]
+        std = 1.0 / math.sqrt(max(fi, 1))
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+                * std).astype(dtype)
+
+    return init
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: InitFn
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_params(defs: Any, key: jax.Array, dtype) -> Any:
+    """Initialize a (nested dict) tree of ParamDefs into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = [d.init(k, d.shape, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_specs(defs: Any) -> Any:
+    """Extract the logical-axes tree from a tree of ParamDefs."""
+    return jax.tree.map(
+        lambda d: d.axes, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def stack_specs(specs: Any) -> Any:
+    """Prepend the scan 'layers' axis to every spec in a layer spec tree."""
+    return jax.tree.map(
+        lambda axes: ("layers",) + tuple(axes),
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_defs(dim: int, axis: str = "act_embed") -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((dim,), (None,), ones_init())}
+
+
+def layernorm_defs(dim: int) -> Dict[str, ParamDef]:
+    return {
+        "scale": ParamDef((dim,), (None,), ones_init()),
+        "bias": ParamDef((dim,), (None,), zeros_init()),
+    }
+
+
+def norm_defs(cfg: LMConfig, dim: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = dim if dim is not None else cfg.d_model
+    return layernorm_defs(d) if cfg.norm == "layernorm" else rmsnorm_defs(d)
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array, cfg: LMConfig,
+               eps: Optional[float] = None) -> jax.Array:
+    eps = cfg.norm_eps if eps is None else eps
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Parameter-free RMS norm (qk-norm building block)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_defs(cfg: LMConfig) -> Dict[str, ParamDef]:
+    defs: Dict[str, Any] = {}
+    if cfg.frontend is None:
+        defs["tok"] = ParamDef(
+            (cfg.vocab, cfg.d_model), ("vocab", "embed"), normal_init(1.0)
+        )
+    else:
+        # frontend stub: a projection from precomputed feature embeddings
+        defs["frontend_proj"] = ParamDef(
+            (cfg.d_model, cfg.d_model), ("embed", "embed_tp"), fanin_init()
+        )
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef(
+            (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+            normal_init(cfg.d_model ** -0.5),
+        )
+    return defs
+
+
+def embed_inputs(params, cfg: LMConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.frontend is None:
+        x = jnp.take(params["tok"], batch["tokens"], axis=0)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    else:
+        x = batch["features"].astype(cfg.cdtype()) @ params["frontend_proj"].astype(
+            cfg.cdtype()
+        )
+    return x.astype(cfg.cdtype())
+
+
+def unembed(params, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["tok"].astype(cfg.cdtype()).T
+    else:
+        w = params["unembed"].astype(cfg.cdtype())
+    logits = x @ w
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)

@@ -1,0 +1,541 @@
+"""LM assembly: dense / MoE / hybrid-SSM / xLSTM / encoder / VLM stacks.
+
+Layer stacking: homogeneous *scan units* are stacked (leaves get a leading
+``n_units`` dim) and iterated with ``lax.scan`` so big models trace one unit
+once (compile-time O(1) in depth).  A unit is:
+
+    dense/moe       1 transformer block
+    hybrid (zamba2) 1 Mamba-2 block (+ conditional shared attn block, whose
+                    single param copy rides in the scan closure)
+    ssm (xlstm)     1 group = (slstm_every-1) mLSTM blocks + 1 sLSTM block
+    vlm             1 group = cross_attn_every self-attn blocks + 1 cross
+    audio           1 encoder block (bidirectional)
+
+Remat: each scan unit body is wrapped in ``jax.checkpoint`` (cfg.remat);
+``cfg.remat_group`` > 1 reshapes (L, ...) -> (L/g, g, ...) so only every
+g-th residual is saved — the activation-memory lever for the 100B models.
+
+Losses: cross-entropy with the unembed matmul + logsumexp computed in
+*sequence chunks* (``lax.scan`` over cfg.loss_chunks slices) so the full
+(B, S, vocab) logits tensor is never materialized (matters at vocab 152k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import common
+from repro.models import mamba2 as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import (LMConfig, ParamDef, init_params, param_specs)
+from repro.parallel.sharding import shard_constraint, rules_for_arch
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Per-family unit definitions
+# ---------------------------------------------------------------------------
+
+
+def _block_defs(cfg: LMConfig, kind: str) -> Dict[str, Any]:
+    """One transformer block (kind: self | cross | mamba | mlstm | slstm)."""
+    if kind == "mamba":
+        return {"ln": common.norm_defs(cfg), "mixer": mamba_lib.mamba2_defs(cfg)}
+    if kind == "mlstm":
+        return {"ln": common.norm_defs(cfg), "mixer": xlstm_lib.mlstm_defs(cfg)}
+    if kind == "slstm":
+        return {"ln": common.norm_defs(cfg), "mixer": xlstm_lib.slstm_defs(cfg)}
+    d: Dict[str, Any] = {
+        "ln1": common.norm_defs(cfg),
+        "attn": attn_lib.attention_defs(cfg, cross=(kind == "cross")),
+        "ln2": common.norm_defs(cfg),
+    }
+    if cfg.moe is not None and kind == "self":
+        d["ffn"] = moe_lib.moe_defs(cfg)
+    else:
+        d["ffn"] = mlp_lib.mlp_defs(cfg)
+    return d
+
+
+def unit_defs(cfg: LMConfig) -> Dict[str, Any]:
+    """Parameter defs for ONE scan unit of this family."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio"):
+        return {"block": _block_defs(cfg, "self")}
+    if fam == "hybrid":
+        return {"block": _block_defs(cfg, "mamba")}
+    if fam == "ssm":
+        k = cfg.xlstm.slstm_every
+        return {
+            "mlstm": [_block_defs(cfg, "mlstm") for _ in range(k - 1)],
+            "slstm": _block_defs(cfg, "slstm"),
+        }
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        return {
+            "selfs": [_block_defs(cfg, "self") for _ in range(k)],
+            "cross": _block_defs(cfg, "cross"),
+        }
+    raise ValueError(fam)
+
+
+def n_units(cfg: LMConfig) -> int:
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio", "hybrid"):
+        return cfg.n_layers
+    if fam == "ssm":
+        assert cfg.n_layers % cfg.xlstm.slstm_every == 0
+        return cfg.n_layers // cfg.xlstm.slstm_every
+    if fam == "vlm":
+        k = cfg.cross_attn_every + 1
+        assert cfg.n_layers % k == 0
+        return cfg.n_layers // k
+    raise ValueError(fam)
+
+
+def model_defs(cfg: LMConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"embed": common.embedding_defs(cfg)}
+    if cfg.cross_attn_every:
+        defs["embed"]["img_proj"] = ParamDef(
+            (cfg.d_model, cfg.d_model), ("embed", "embed_tp"),
+            common.fanin_init())
+    defs["final_ln"] = common.norm_defs(cfg)
+    if cfg.family == "hybrid":
+        defs["shared"] = _block_defs(cfg, "self")   # zamba2 shared block
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Init / spec trees (stacked units)
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: LMConfig, key: jax.Array) -> Dict[str, Any]:
+    k_top, k_units = jax.random.split(key)
+    params = init_params(model_defs(cfg), k_top, cfg.pdtype())
+    u_defs = unit_defs(cfg)
+    keys = jax.random.split(k_units, n_units(cfg))
+    params["units"] = jax.vmap(
+        lambda k: init_params(u_defs, k, cfg.pdtype()))(keys)
+    return params
+
+
+def specs(cfg: LMConfig) -> Dict[str, Any]:
+    sp = param_specs(model_defs(cfg))
+    unit_sp = param_specs(unit_defs(cfg))
+    sp["units"] = common.stack_specs(unit_sp)
+    return sp
+
+
+def param_structs(cfg: LMConfig) -> Any:
+    """ShapeDtypeStruct tree — no allocation (dry-run entry)."""
+    return jax.eval_shape(lambda k: init(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Block bodies
+# ---------------------------------------------------------------------------
+
+
+def _apply_self_block(p, cfg: LMConfig, x, positions, kv_cache, cache_index,
+                      rules):
+    h = common.apply_norm(p["ln1"], x, cfg)
+    a, new_kv = attn_lib.self_attention(p["attn"], cfg, h, positions,
+                                        kv_cache, cache_index)
+    x = x + a
+    h = common.apply_norm(p["ln2"], x, cfg)
+    if cfg.moe is not None and "router" in p["ffn"]:
+        y, aux = moe_lib.moe_apply(p["ffn"], cfg, h)
+    else:
+        y, aux = mlp_lib.mlp_apply(p["ffn"], cfg, h), 0.0
+    x = x + y
+    x = shard_constraint(x, ("batch", "seq", "act_embed"), rules)
+    return x, new_kv, aux
+
+
+def _apply_cross_block(p, cfg: LMConfig, x, img_feats, cross_cache, rules):
+    h = common.apply_norm(p["ln1"], x, cfg)
+    a, new_cache = attn_lib.cross_attention(p["attn"], cfg, h, img_feats,
+                                            cross_cache)
+    x = x + a
+    h = common.apply_norm(p["ln2"], x, cfg)
+    x = x + mlp_lib.mlp_apply(p["ffn"], cfg, h)
+    x = shard_constraint(x, ("batch", "seq", "act_embed"), rules)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (per family), scan-stacked with remat
+# ---------------------------------------------------------------------------
+
+
+def _scan_units(cfg: LMConfig, x, stacked_params, caches, body):
+    """Generic scanner.  body(x, unit_p, unit_cache) -> (x, new_cache, aux).
+
+    caches: stacked pytree with leading n_units dim (or None).
+    Returns (x, new_caches, aux_total)."""
+    nu = n_units(cfg)
+    g = max(1, getattr(cfg, "remat_group", 1))
+    if nu % g:
+        g = 1
+
+    def unit_body(carry, xs):
+        x, aux_acc = carry
+        p, c = xs
+        x, c_new, aux = body(x, p, c)
+        return (x, aux_acc + aux), c_new
+
+    def group_body(carry, xs):
+        if g == 1:
+            return unit_body(carry, xs)
+        for i in range(g):
+            sub = jax.tree.map(lambda t: t[i], xs)
+            carry_new, c_new = unit_body(carry, sub)
+            carry = carry_new
+            if i == 0:
+                outs = [c_new]
+            else:
+                outs.append(c_new)
+        stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *outs) \
+            if outs[0] is not None else None
+        return carry, stacked
+
+    wrapped = jax.checkpoint(group_body) if cfg.remat else group_body
+
+    def regroup(t):
+        return t.reshape(nu // g, g, *t.shape[1:]) if g > 1 else t
+
+    if caches is not None:
+        cache_xs = jax.tree.map(regroup, caches)
+    else:
+        cache_xs = (jnp.zeros((nu // g, g, 0), jnp.float32) if g > 1
+                    else _nones(nu))
+    xs = (jax.tree.map(regroup, stacked_params), cache_xs)
+    (x, aux), new_caches = jax.lax.scan(wrapped, (x, 0.0), xs)
+    if new_caches is not None and g > 1:
+        new_caches = jax.tree.map(
+            lambda t: t.reshape(nu, *t.shape[2:]), new_caches)
+    return x, new_caches, aux
+
+
+def _nones(n):
+    return jnp.zeros((n, 0), jnp.float32)   # placeholder xs with leading dim
+
+
+def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
+            caches: Optional[Dict[str, Any]] = None,
+            cache_index: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (final hidden states (B,S,d), new caches, aux loss)."""
+    rules = rules_for_arch(cfg.arch_id)
+    fam = cfg.family
+    x = common.embed_inputs(params["embed"], cfg, batch)
+    x = shard_constraint(x, ("batch", "seq", "act_embed"), rules)
+    s = x.shape[1]
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cache_index is not None:
+        positions = jnp.full((x.shape[0], s), 0, jnp.int32) + cache_index
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (x.shape[0], s))
+
+    if fam in ("dense", "moe", "audio"):
+        def body(x, p, c):
+            kv = None if caches is None else c
+            return _apply_self_block(p["block"], cfg, x, positions, kv,
+                                     cache_index, rules)
+        kv = caches["kv"] if caches is not None else None
+        x, new_kv, aux = _scan_units(cfg, x, params["units"], kv, body)
+        new_caches = {"kv": new_kv} if caches is not None else None
+
+    elif fam == "hybrid":
+        x, new_caches, aux = _hybrid_forward(params, cfg, x, positions,
+                                             batch, caches, cache_index,
+                                             rules)
+
+    elif fam == "ssm":
+        def body(x, p, c):
+            k = cfg.xlstm.slstm_every
+            new_m = []
+            for i in range(k - 1):
+                pi = p["mlstm"][i]
+                h = common.apply_norm(pi["ln"], x, cfg)
+                ci = None if caches is None else jax.tree.map(
+                    lambda t: t[i], c["mlstm"])
+                y, cs = xlstm_lib.mlstm_apply(pi["mixer"], cfg, h, ci)
+                x = x + y
+                new_m.append(cs)
+            h = common.apply_norm(p["slstm"]["ln"], x, cfg)
+            cs_in = None if caches is None else c["slstm"]
+            y, ss = xlstm_lib.slstm_apply(p["slstm"]["mixer"], cfg, h, cs_in)
+            x = x + y
+            x = shard_constraint(x, ("batch", "seq", "act_embed"), rules)
+            if caches is None:
+                return x, None, 0.0
+            mst = jax.tree.map(lambda *ts: jnp.stack(ts), *new_m)
+            return x, {"mlstm": mst, "slstm": ss}, 0.0
+        x, new_caches, aux = _scan_units(cfg, x, params["units"],
+                                         caches["units"] if caches else None,
+                                         body)
+        new_caches = ({"units": new_caches} if caches is not None else None)
+
+    elif fam == "vlm":
+        img = batch.get("image_features")
+        if img is not None:
+            img = (img.astype(cfg.cdtype())
+                   @ params["embed"]["img_proj"].astype(cfg.cdtype()))
+
+        def body(x, p, c):
+            aux = 0.0
+            new_kv = []
+            k = cfg.cross_attn_every
+            for i in range(k):
+                pi = p["selfs"][i]
+                kv = None if caches is None else jax.tree.map(
+                    lambda t: t[i], c["kv"])
+                x, kv_n, a = _apply_self_block(pi, cfg, x, positions, kv,
+                                               cache_index, rules)
+                aux += a
+                new_kv.append(kv_n)
+            cross_c = None if caches is None else c["cross"]
+            x, new_cross = _apply_cross_block(p["cross"], cfg, x, img,
+                                              cross_c, rules)
+            if caches is None:
+                return x, None, aux
+            kv_st = jax.tree.map(lambda *ts: jnp.stack(ts), *new_kv)
+            return x, {"kv": kv_st, "cross": new_cross}, aux
+        x, new_caches, aux = _scan_units(cfg, x, params["units"],
+                                         caches["units"] if caches else None,
+                                         body)
+        new_caches = ({"units": new_caches} if caches is not None else None)
+    else:
+        raise ValueError(fam)
+
+    x = common.apply_norm(params["final_ln"], x, cfg)
+    return x, new_caches, aux
+
+
+def _hybrid_forward(params, cfg, x, positions, batch, caches, cache_index,
+                    rules):
+    """zamba2: scanned Mamba-2 stack; the single shared transformer block is
+    applied after flagged layers (layer_idx % hybrid_attn_every ==
+    hybrid_attn_every - 1), its KV cache indexed by site."""
+    k = cfg.hybrid_attn_every
+    flags = (jnp.arange(cfg.n_layers) % k) == (k - 1)
+    sites = jnp.cumsum(flags.astype(jnp.int32)) - 1        # site per layer
+    shared_p = params["shared"]
+    kv_all = None if caches is None else caches["shared_kv"]
+
+    def body(carry, xs):
+        x, aux, kv_all = carry
+        p, mamba_c, flag, site = xs
+        h = common.apply_norm(p["block"]["ln"], x, cfg)
+        mc = None if caches is None else mamba_c
+        y, mc_new = mamba_lib.mamba2_apply(p["block"]["mixer"], cfg, h, mc)
+        x = x + y
+        x = shard_constraint(x, ("batch", "seq", "act_embed"), rules)
+
+        def with_shared(args):
+            x, kv_all = args
+            if kv_all is None:
+                x2, _, _ = _apply_self_block(shared_p, cfg, x, positions,
+                                             None, cache_index, rules)
+                return x2, kv_all
+            kv_site = jax.tree.map(
+                lambda t: jax.lax.dynamic_index_in_dim(t, site, 0, False),
+                kv_all)
+            x2, kv_new, _ = _apply_self_block(shared_p, cfg, x, positions,
+                                              kv_site, cache_index, rules)
+            kv_all2 = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), site, 0),
+                kv_all, kv_new)
+            return x2, kv_all2
+
+        def without_shared(args):
+            return args
+
+        x, kv_all = jax.lax.cond(flag, with_shared, without_shared,
+                                 (x, kv_all))
+        return (x, aux, kv_all), mc_new
+
+    wrapped = jax.checkpoint(body) if cfg.remat else body
+    mamba_caches = caches["mamba"] if caches is not None else None
+    xs = (params["units"],
+          mamba_caches if mamba_caches is not None else _nones(cfg.n_layers),
+          flags, sites)
+    (x, aux, kv_all), new_mamba = jax.lax.scan(wrapped, (x, 0.0, kv_all), xs)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"mamba": new_mamba, "shared_kv": kv_all}
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(params, cfg: LMConfig, x: jax.Array, labels: jax.Array,
+                    n_chunks: int = 0) -> jax.Array:
+    """Cross-entropy over (B, S) without materializing (B, S, V).
+
+    The unembed matmul + logsumexp run per sequence chunk inside a scan."""
+    b, s, d = x.shape
+    if n_chunks <= 0:
+        n_chunks = max(1, s // 1024)
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    xc = x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+
+    def chunk_loss(acc, inp):
+        xk, lk = inp                                    # (B,cs,d), (B,cs)
+        logits = common.unembed(params["embed"], cfg, xk)  # fp32 (B,cs,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lk[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    # §Perf H2: recompute chunk logits in bwd rather than saving the
+    # stacked (n_chunks, B, cs, V) fp32 logits (2.5+ GB/dev at vocab 150k).
+    body = jax.checkpoint(chunk_loss) if cfg.loss_remat else chunk_loss
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc))
+    return total / (b * s)
+
+
+def loss_fn(params, cfg: LMConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, _, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    ce = chunked_ce_loss(params, cfg, x, labels)
+    loss = ce + AUX_LOSS_COEF * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
+                 caches: Dict[str, Any]
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Forward + cache write; returns (last-token logits (B, V), caches)."""
+    x, new_caches, _ = forward(params, cfg, batch, caches)
+    logits = common.unembed(params["embed"], cfg, x[:, -1:, :])
+    return logits[:, 0], new_caches
+
+
+def decode_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
+                caches: Dict[str, Any]
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode.  batch: tokens (B,1), pos scalar int32."""
+    x, new_caches, _ = forward(params, cfg, batch, caches,
+                               cache_index=batch["pos"])
+    logits = common.unembed(params["embed"], cfg, x[:, -1:, :])
+    return logits[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def make_caches(cfg: LMConfig, batch: int, max_len: int,
+                as_structs: bool = False) -> Optional[Dict[str, Any]]:
+    """Decode/prefill cache pytree (or ShapeDtypeStructs for the dry-run)."""
+    fam = cfg.family
+    hd = cfg.head_dim
+
+    def kv(n, length):
+        shape = (n, batch, length, cfg.n_kv_heads, hd)
+        return {"k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+                "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16)}
+
+    if fam in ("dense", "moe"):
+        out = {"kv": kv(cfg.n_layers, max_len)}
+    elif fam == "audio":
+        return None                                   # encoder: no decode
+    elif fam == "hybrid":
+        n_sites = sum(1 for i in range(cfg.n_layers)
+                      if i % cfg.hybrid_attn_every == cfg.hybrid_attn_every - 1)
+        mamba = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((cfg.n_layers,) + sd.shape,
+                                            sd.dtype),
+            mamba_lib.mamba2_state_defs(cfg, batch))
+        out = {"mamba": mamba, "shared_kv": kv(n_sites, max_len)}
+    elif fam == "ssm":
+        nu = n_units(cfg)
+        k = cfg.xlstm.slstm_every
+        ml = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((nu, k - 1) + sd.shape, sd.dtype),
+            xlstm_lib.mlstm_state_defs(cfg, batch))
+        sl = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((nu,) + sd.shape, sd.dtype),
+            xlstm_lib.slstm_state_defs(cfg, batch))
+        out = {"units": {"mlstm": ml, "slstm": sl}}
+    elif fam == "vlm":
+        nu = n_units(cfg)
+        k = cfg.cross_attn_every
+        self_kv = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((nu, k) + sd.shape[1:], sd.dtype),
+            kv(1, max_len))
+        cross = {"k": jax.ShapeDtypeStruct(
+            (nu, batch, cfg.n_image_tokens, cfg.n_kv_heads, hd), jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(
+            (nu, batch, cfg.n_image_tokens, cfg.n_kv_heads, hd), jnp.bfloat16)}
+        out = {"units": {"kv": self_kv, "cross": cross}}
+    else:
+        raise ValueError(fam)
+    if as_structs:
+        return out
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), out)
+
+
+def cache_specs(cfg: LMConfig) -> Optional[Dict[str, Any]]:
+    """Logical-axis tree matching make_caches output."""
+    fam = cfg.family
+    kv_ax = {"k": ("layers", "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+             "v": ("layers", "batch", "kv_seq", "kv_heads", "kv_head_dim")}
+    if fam in ("dense", "moe"):
+        return {"kv": kv_ax}
+    if fam == "audio":
+        return None
+    if fam == "hybrid":
+        mamba = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax),
+            mamba_lib.mamba2_state_specs(),
+            is_leaf=lambda x: isinstance(x, tuple))
+        return {"mamba": mamba, "shared_kv": kv_ax}
+    if fam == "ssm":
+        ml = jax.tree.map(lambda ax: ("layers", None) + tuple(ax),
+                          xlstm_lib.mlstm_state_specs(),
+                          is_leaf=lambda x: isinstance(x, tuple))
+        sl = jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                          xlstm_lib.slstm_state_specs(),
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return {"units": {"mlstm": ml, "slstm": sl}}
+    if fam == "vlm":
+        self_kv = {"k": ("layers", None, "batch", "kv_seq", "kv_heads",
+                         "kv_head_dim"),
+                   "v": ("layers", None, "batch", "kv_seq", "kv_heads",
+                         "kv_head_dim")}
+        cross = {"k": ("layers", "batch", None, "kv_heads", "kv_head_dim"),
+                 "v": ("layers", "batch", None, "kv_heads", "kv_head_dim")}
+        return {"units": {"kv": self_kv, "cross": cross}}
+    raise ValueError(fam)
+
+
+def model_flops_per_token(cfg: LMConfig, params_total: int,
+                          params_active: Optional[int] = None) -> float:
+    """MODEL_FLOPS ~ 6 * N (active) per token (roofline §)."""
+    n = params_active if params_active is not None else params_total
+    return 6.0 * n

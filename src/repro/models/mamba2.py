@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD) block: chunked-parallel training scan + O(1) decode step.
+
+State-space duality formulation (Dao & Gu 2024).  Per head h with scalar
+decay a_t = exp(dt_t * A_h) (A_h < 0):
+
+    S_t = a_t * S_{t-1} + dt_t * B_t x_t^T        S: (d_state, head_dim)
+    y_t = C_t^T S_t + D_h * x_t
+
+Chunked algorithm (chunk size Q, scan over chunks):
+  within-chunk (quadratic, MXU-shaped):
+      L[i,j]    = exp(cum[i] - cum[j]) for j <= i      (segment decay)
+      y_intra_i = sum_{j<=i} (C_i . B_j) L[i,j] dt_j x_j
+  cross-chunk (state passing):
+      y_inter_i = exp(cum[i]) * C_i^T S_prev
+      S_new     = exp(cum[Q-1]) S_prev
+                  + sum_j exp(cum[Q-1] - cum[j]) dt_j B_j x_j^T
+
+``cum`` is the inclusive cumulative sum of log-decays within the chunk.
+All contractions are einsums over (chunk, chunk) x head_dim/d_state —
+MXU-friendly; the sequential dependency is only the O(S/Q) chunk scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (LMConfig, ParamDef, fanin_init, ones_init,
+                                 zeros_init)
+
+
+def _ssm(cfg: LMConfig):
+    assert cfg.ssm is not None
+    return cfg.ssm
+
+
+def mamba2_defs(cfg: LMConfig) -> Dict[str, Any]:
+    s = _ssm(cfg)
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ng = s.n_groups
+    ds = s.d_state
+    # in_proj packs [z (di), x (di), B (ng*ds), C (ng*ds), dt (nh)]
+    d_in_proj = 2 * di + 2 * ng * ds + nh
+    return {
+        "in_proj": ParamDef((d, d_in_proj), ("embed", "mamba_inner"),
+                            fanin_init(d)),
+        "conv_w": ParamDef((s.d_conv, di + 2 * ng * ds),
+                           (None, "mamba_conv"), fanin_init(s.d_conv)),
+        "conv_b": ParamDef((di + 2 * ng * ds,), ("mamba_conv",), zeros_init()),
+        "a_log": ParamDef((nh,), ("heads",),
+                          lambda k, sh, dt: jnp.log(
+                              jnp.linspace(1.0, 16.0, sh[0], dtype=dt))),
+        "dt_bias": ParamDef((nh,), ("heads",), zeros_init()),
+        "d_skip": ParamDef((nh,), ("heads",), ones_init()),
+        "norm_scale": ParamDef((di,), ("mamba_inner",), ones_init()),
+        "out_proj": ParamDef((di, d), ("mamba_inner", "embed_tp"),
+                             fanin_init(di)),
+    }
+
+
+def _split_in_proj(cfg: LMConfig, zxbcdt: jax.Array):
+    s = _ssm(cfg)
+    di = s.d_inner(cfg.d_model)
+    ng, ds, nh = s.n_groups, s.d_state, s.n_heads(cfg.d_model)
+    z, x, bc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + 2 * ng * ds], axis=-1)
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time.  xbc (B, S, C); w (K, C).
+
+    Returns (activated output, new conv state (B, K-1, C))."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out + bias), new_state
+
+
+def _gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba-2 output norm: RMSNorm(x * silu(z)) * scale."""
+    y = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                 b: jax.Array, c: jax.Array, d_skip: jax.Array,
+                 chunk: int, init_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.  x (B,S,H,P); dt (B,S,H) softplus'd; b,c (B,S,G,N).
+
+    Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    bsz, s, nh, hd = x.shape
+    ng, ds = b.shape[2], b.shape[3]
+    rep = nh // ng
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,), negative
+    loga = dt.astype(jnp.float32) * a                      # (B,S,H) log decay
+    xf = (x.astype(jnp.float32)
+          * dt.astype(jnp.float32)[..., None])             # fold dt into x
+
+    # chunk views: (nc, B, Q, ...)
+    def chunkify(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    x_c = chunkify(xf)                                     # (nc,B,Q,H,P)
+    la_c = chunkify(loga)                                  # (nc,B,Q,H)
+    b_c = chunkify(b.astype(jnp.float32))                  # (nc,B,Q,G,N)
+    c_c = chunkify(c.astype(jnp.float32))                  # (nc,B,Q,G,N)
+
+    if init_state is None:
+        s0 = jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+    else:
+        s0 = init_state.astype(jnp.float32)
+
+    idx = jnp.arange(q)
+    tri = idx[:, None] >= idx[None, :]                     # (Q,Q) j<=i
+
+    def body(state, inp):
+        xk, lak, bk, ck = inp
+        cum = jnp.cumsum(lak, axis=1)                      # (B,Q,H) inclusive
+        # intra-chunk: scores over (i,j)
+        cb = jnp.einsum("bigd,bjgd->bgij", ck, bk)         # (B,G,Q,Q)
+        cb = jnp.repeat(cb, rep, axis=1)                   # (B,H,Q,Q)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]      # (B,i,j,H)
+        dec = jnp.where(tri[None, :, :, None], dec, -jnp.inf)
+        l_mat = jnp.exp(dec).transpose(0, 3, 1, 2)         # (B,H,i,j)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", cb * l_mat, xk)
+        # inter-chunk: carry state
+        c_h = jnp.repeat(ck, rep, axis=2)                  # (B,Q,H,N)
+        y_inter = jnp.einsum("bihn,bhpn->bihp",
+                             c_h * jnp.exp(cum)[..., None], state)
+        # state update
+        total = cum[:, -1, :]                              # (B,H)
+        rem = jnp.exp(total[:, None, :] - cum)             # (B,Q,H)
+        b_h = jnp.repeat(bk, rep, axis=2)                  # (B,Q,H,N)
+        ds_new = jnp.einsum("bjhn,bjhp->bhpn", b_h * rem[..., None], xk)
+        state = state * jnp.exp(total)[:, :, None, None] + ds_new
+        return state, y_intra + y_inter
+
+    state, y_c = jax.lax.scan(body, s0, (x_c, la_c, b_c, c_c))
+    y = y_c.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, hd)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :,
+                                                               None]
+    return y.astype(x.dtype), state
+
+
+def mamba2_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full block forward.  x (B, S, d_model).
+
+    ``state`` is {"ssm": (B,H,P,N), "conv": (B,K-1,C)} for incremental use;
+    None for training (zero init, state discarded)."""
+    s = _ssm(cfg)
+    cd = cfg.cdtype()
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    ng, ds = s.n_groups, s.d_state
+
+    zxbcdt = x.astype(cd) @ params["in_proj"].astype(cd)
+    z, xi, b, c, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xi, b, c], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(cd),
+                                 params["conv_b"].astype(cd), conv_state)
+    xi, b, c = jnp.split(xbc, [di, di + ng * ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    bsz, sl = x.shape[0], x.shape[1]
+    xh = xi.reshape(bsz, sl, nh, di // nh)
+    bg = b.reshape(bsz, sl, ng, ds)
+    cg = c.reshape(bsz, sl, ng, ds)
+    ssm_state = None if state is None else state["ssm"]
+    y, new_ssm = _ssd_chunked(xh, dt, params["a_log"], bg, cg,
+                              params["d_skip"], s.chunk_size, ssm_state)
+    y = y.reshape(bsz, sl, di)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = y.astype(cd) @ params["out_proj"].astype(cd)
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": new_ssm.astype(state["ssm"].dtype),
+                     "conv": new_conv.astype(state["conv"].dtype)}
+    return out, new_state
+
+
+def mamba2_state_defs(cfg: LMConfig, batch: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one layer's incremental state."""
+    s = _ssm(cfg)
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, nh, di // nh, s.d_state),
+                                    jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, s.d_conv - 1, di + 2 * s.n_groups * s.d_state),
+            jnp.float32),
+    }
+
+
+def mamba2_init_state(cfg: LMConfig, batch: int) -> Dict[str, jax.Array]:
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        mamba2_state_defs(cfg, batch))
+
+
+def mamba2_state_specs():
+    return {"ssm": ("batch", "heads", None, None),
+            "conv": ("batch", None, "mamba_conv")}

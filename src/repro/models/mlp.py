@@ -1,0 +1,41 @@
+"""Dense FFN blocks: SwiGLU (LLaMA-style) and plain GELU MLP (HuBERT-style)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LMConfig, ParamDef, fanin_init, zeros_init, activation
+
+
+def mlp_defs(cfg: LMConfig, d_ff: int = 0) -> Dict[str, Any]:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    defs: Dict[str, Any] = {
+        "wi": ParamDef((d, f), ("embed", "mlp"), fanin_init(d)),
+        "wo": ParamDef((f, d), ("mlp", "embed_tp"), fanin_init(f)),
+    }
+    if cfg.glu:
+        defs["wg"] = ParamDef((d, f), ("embed", "mlp"), fanin_init(d))
+    if cfg.norm == "layernorm":  # encoder-style MLPs carry biases
+        defs["bi"] = ParamDef((f,), ("mlp",), zeros_init())
+        defs["bo"] = ParamDef((d,), (None,), zeros_init())
+    return defs
+
+
+def mlp_apply(params: Dict[str, jax.Array], cfg: LMConfig, x: jax.Array) -> jax.Array:
+    cd = cfg.cdtype()
+    act = activation(cfg.act)
+    h = x.astype(cd) @ params["wi"].astype(cd)
+    if "bi" in params:
+        h = h + params["bi"].astype(cd)
+    if cfg.glu:
+        g = x.astype(cd) @ params["wg"].astype(cd)
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = h @ params["wo"].astype(cd)
+    if "bo" in params:
+        y = y + params["bo"].astype(cd)
+    return y

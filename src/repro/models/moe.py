@@ -1,0 +1,216 @@
+"""Fine-grained Mixture-of-Experts with shared experts (DeepSeekMoE / DBRX).
+
+Dispatch design (TPU/SPMD-aware — see DESIGN.md §4):
+
+Tokens stay laid out as (B, S, d) with B sharded over the data axis and the
+residual stream replicated over the model axis.  Dispatch is *per batch row*
+(vmap over B): each row independently top-k routes its S tokens, sorts the
+(token, expert) pairs by expert, and gathers into a capacity-padded
+(E, C_row, d) buffer.  Because E is sharded over the model axis and the row's
+tokens are replicated over it, the gather is rank-local; the only collective
+the partitioner must insert is the all-reduce over the model axis when the
+per-expert partial outputs are combined back into the (replicated) residual —
+exactly the one reduction Megatron-style TP already pays.  There is no
+(T, E, C) one-hot dispatch tensor and no cross-data-shard all-to-all.
+
+Capacity is per-row (GShard-style per-group capacity): C = ceil(S·k/E · cf),
+rounded up to a multiple of 8 for TPU lane alignment.  Overflow tokens are
+dropped (standard capacity-factor semantics; the aux load-balance loss keeps
+drops rare).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LMConfig, ParamDef, fanin_init, activation
+from repro.models import mlp as mlp_lib
+
+
+def _capacity(seq: int, moe) -> int:
+    c = math.ceil(seq * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_defs(cfg: LMConfig) -> Dict[str, Any]:
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    defs: Dict[str, Any] = {
+        "router": ParamDef((d, e), ("embed", None), fanin_init(d)),
+        # additive router bias; expert pruning drives dead experts to -1e9
+        "router_b": ParamDef((e,), (None,),
+                             lambda k, s, dt: jnp.zeros(s, dt)),
+        "wi": ParamDef((e, d, f), ("expert", "embed", "expert_mlp"), fanin_init(d)),
+        "wg": ParamDef((e, d, f), ("expert", "embed", "expert_mlp"), fanin_init(d)),
+        "wo": ParamDef((e, f, d), ("expert", "expert_mlp", "embed"), fanin_init(f)),
+    }
+    if m.n_shared:
+        shared_cfg = cfg  # shared experts form one fused dense FFN
+        defs["shared"] = mlp_lib.mlp_defs(shared_cfg, d_ff=m.n_shared * f)
+    return defs
+
+
+def _route_row(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """(S, E) fp32 logits -> (S, k) weights (softmax over the top-k), ids."""
+    vals, ids = jax.lax.top_k(logits, top_k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return w, ids
+
+
+def _dispatch_row(x: jax.Array, ids: jax.Array, w: jax.Array,
+                  n_experts: int, capacity: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One batch row: gather tokens into (E, C, d) capacity buffers.
+
+    x: (S, d); ids/w: (S, k).  Returns (dispatched (E*C, d), combine scatter
+    indices, sorted token ids, sorted weights·keep).
+    """
+    s, k = ids.shape
+    flat_e = ids.reshape(-1)                      # (S*k,)
+    flat_t = jnp.repeat(jnp.arange(s), k)         # token index per slot
+    flat_w = w.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+
+    counts = jnp.bincount(flat_e, length=n_experts)          # (E,)
+    starts = jnp.cumsum(counts) - counts                     # exclusive
+    rank = jnp.arange(s * k) - starts[e_sorted]              # pos within expert
+    keep = rank < capacity
+    dest = e_sorted * capacity + jnp.where(keep, rank, 0)    # (S*k,)
+
+    zeros = jnp.zeros((n_experts * capacity, x.shape[-1]), x.dtype)
+    src = x[t_sorted] * keep[:, None].astype(x.dtype)
+    dispatched = zeros.at[dest].add(src)  # add: dropped slots collide at rank0,
+    # but their contribution is zeroed by `keep` so the buffer stays exact.
+    return dispatched, dest, t_sorted, jnp.where(keep, w_sorted, 0.0)
+
+
+def _combine_row(y_exp: jax.Array, dest: jax.Array, t_sorted: jax.Array,
+                 w_keep: jax.Array, seq: int) -> jax.Array:
+    """Scatter expert outputs back to token order with routing weights."""
+    gathered = y_exp[dest] * w_keep[:, None].astype(y_exp.dtype)   # (S*k, d)
+    out = jnp.zeros((seq, y_exp.shape[-1]), y_exp.dtype)
+    return out.at[t_sorted].add(gathered)
+
+
+def _rank_within_expert(ids: jax.Array, n_experts: int) -> jax.Array:
+    """ids (S, k) -> rank (S, k): position of each (token, slot) within its
+    expert's arrival order (row-major over (S, k))."""
+    s, k = ids.shape
+    flat = ids.reshape(-1)                                   # (S*k,)
+    oh = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)    # (S*k, E)
+    rank_flat = jnp.cumsum(oh, axis=0) - oh                  # exclusive
+    rank = jnp.take_along_axis(rank_flat, flat[:, None], axis=1)[:, 0]
+    return rank.reshape(s, k)
+
+
+def _moe_onehot(params, cfg: LMConfig, x, logits, cap: int):
+    """GShard-style dispatch/combine as two-one-hot einsums with explicit
+    sharding constraints: the dispatch tensor and expert buffers are
+    sharded (batch->data, expert->model) so the expert matmuls are local
+    per model shard and the ONLY model-axis collective is the all-reduce
+    of the combined output partial sums (§Perf H-B1)."""
+    from repro.parallel.sharding import rules_for_arch, shard_constraint
+
+    m = cfg.moe
+    cd = cfg.cdtype()
+    b, s, d = x.shape
+    rules = rules_for_arch(cfg.arch_id)
+
+    vals, ids = jax.lax.top_k(logits, m.top_k)               # (B,S,k)
+    w = jax.nn.softmax(vals, axis=-1).astype(cd)
+    rank = jax.vmap(lambda i: _rank_within_expert(i, m.n_experts))(ids)
+    keep = (rank < cap)
+    oh_e = jax.nn.one_hot(ids, m.n_experts, dtype=cd)        # (B,S,k,E)
+    oh_c = jax.nn.one_hot(jnp.where(keep, rank, cap), cap,
+                          dtype=cd)                          # (B,S,k,C)
+    # dispatch tensor D[b,e,c,s] (0/1); combine adds routing weights
+    disp_w = jnp.einsum("bske,bskc->becs", oh_e, oh_c)
+    comb_w = jnp.einsum("bske,bskc,bsk->becs", oh_e, oh_c,
+                        w * keep.astype(cd))
+    disp_w = shard_constraint(disp_w, ("batch", "act_expert", None, None),
+                              rules)
+    comb_w = shard_constraint(comb_w, ("batch", "act_expert", None, None),
+                              rules)
+
+    disp = jnp.einsum("becs,bsd->becd", disp_w, x.astype(cd))
+    disp = shard_constraint(disp, ("batch", "act_expert", None, None),
+                            rules)
+    act = activation(cfg.act)
+    h = act(jnp.einsum("becd,edf->becf", disp, params["wg"].astype(cd))) \
+        * jnp.einsum("becd,edf->becf", disp, params["wi"].astype(cd))
+    y_e = jnp.einsum("becf,efd->becd", h, params["wo"].astype(cd))
+    y_e = shard_constraint(y_e, ("batch", "act_expert", None, None), rules)
+    # combine: contraction over (e, c) -> partial sums all-reduce on model
+    y = jnp.einsum("becs,becd->bsd", comb_w, y_e)
+    y = shard_constraint(y, ("batch", None, "act_embed"), rules)
+    return y
+
+
+def _moe_scatter(params, cfg: LMConfig, x, logits, cap: int):
+    """Baseline per-row sort/scatter dispatch (vmap over batch rows)."""
+    m = cfg.moe
+    cd = cfg.cdtype()
+    b, s, d = x.shape
+
+    def one_row(x_row, logit_row):
+        w, ids = _route_row(logit_row, m.top_k)
+        dispatched, dest, t_sorted, w_keep = _dispatch_row(
+            x_row.astype(cd), ids, w.astype(cd), m.n_experts, cap)
+        disp = dispatched.reshape(m.n_experts, cap, d)          # (E, C, d)
+        act = activation(cfg.act)
+        h_g = jnp.einsum("ecd,edf->ecf", disp, params["wg"].astype(cd))
+        h_u = jnp.einsum("ecd,edf->ecf", disp, params["wi"].astype(cd))
+        h = act(h_g) * h_u
+        y_e = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(cd))
+        y_row = _combine_row(y_e.reshape(m.n_experts * cap, d), dest,
+                             t_sorted, w_keep, s)
+        return y_row
+
+    return jax.vmap(one_row)(x, logits)
+
+
+def moe_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+
+    # §Perf H-C1: decode (S==1) flattens tokens across the batch so the
+    # capacity floor applies once globally, not per row.
+    flattened = s == 1 and b > 1 and m.global_decode_dispatch
+    if flattened:
+        x = x.reshape(1, b, d)
+        b, s = 1, b
+
+    cap = _capacity(s, m)
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    if "router_b" in params:
+        logits = logits + params["router_b"].astype(jnp.float32)
+
+    if m.dispatch == "onehot":
+        y = _moe_onehot(params, cfg, x, logits, cap)
+    else:
+        y = _moe_scatter(params, cfg, x, logits, cap)
+
+    # Switch-style load-balance auxiliary loss: E * sum(f_e * p_e)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
+    _, top_ids = jax.lax.top_k(logits, m.top_k)
+    frac = jnp.mean(
+        jax.nn.one_hot(top_ids, m.n_experts, dtype=jnp.float32), axis=(0, 1, 2))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(frac * pmean)
+
+    if m.n_shared:
+        y = y + mlp_lib.mlp_apply(params["shared"], cfg, x)
+    if flattened:
+        y = y.reshape(-1, 1, d)               # (1, B, d) -> (B, 1, d)
+    return y.astype(x.dtype), aux

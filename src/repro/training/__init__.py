@@ -1,0 +1,1 @@
+from repro.training.trainer import Trainer, TrainerConfig, make_train_step  # noqa: F401

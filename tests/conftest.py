@@ -1,0 +1,12 @@
+"""Test config: CPU, single device (the dry-run sets 512 devices ONLY in
+its own subprocess — never here), fp64 off, deterministic seeds."""
+
+import os
+
+# Make sure accidental imports of repro.launch.dryrun in a dev loop don't
+# leak 512 virtual devices into the test process: tests must see 1 device.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,112 @@
+"""Paper Eq. 2 (Taylor exp) / Eq. 3 (div via exp/log) + squash tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx_math as am
+
+
+class TestTaylorExp:
+    def test_matches_exp_on_paper_range(self):
+        """Eq. 2 accuracy envelope: <0.5% near the expansion point a=0.5
+        (where routing logit differences live) and <6% over [-1, 2] —
+        the paper's "without dropping accuracy" claim is about end-task
+        predictions (16-bit fixed point), not about exp itself."""
+        x = jnp.linspace(0.0, 1.2, 121)
+        rel = np.abs(np.asarray(am.taylor_exp_raw(x) - jnp.exp(x))) / \
+            np.asarray(jnp.exp(x))
+        assert rel.max() < 5e-3
+        x = jnp.linspace(-1.0, 2.0, 301)
+        rel = np.abs(np.asarray(am.taylor_exp_raw(x) - jnp.exp(x))) / \
+            np.asarray(jnp.exp(x))
+        assert rel.max() < 6e-2
+
+    def test_exact_at_a(self):
+        """Expansion point a=0.5: e^0.5 * c0 ~ e^0.5 * 0.60653 ~ 1."""
+        v = float(am.taylor_exp_raw(jnp.asarray(0.5)))
+        assert abs(v - np.exp(0.5)) / np.exp(0.5) < 1e-4
+
+    def test_horner_is_5mul_5add(self):
+        """Structural: the jaxpr of the raw polynomial contains exactly 6
+        multiplies (5 Horner + e^a scale) and 5 adds."""
+        jaxpr = jax.make_jaxpr(am.taylor_exp_raw)(jnp.zeros((4,)))
+        ops = [e.primitive.name for e in jaxpr.jaxpr.eqns]
+        assert ops.count("mul") == 6
+        assert ops.count("add") == 5
+        assert "exp" not in ops
+
+    def test_range_reduction_extends_domain(self):
+        """Square-and-multiply: relative accuracy holds over [-8, 8]; for
+        very negative x (softmax tails) only absolute accuracy matters —
+        e^x itself is ~0 there."""
+        x = jnp.linspace(-8.0, 8.0, 101)
+        y = am.taylor_exp(x, range_reduce=True)
+        rel = np.abs(np.asarray(y - jnp.exp(x))) / np.asarray(jnp.exp(x))
+        assert rel.max() < 2e-2
+        x = jnp.linspace(-40.0, 0.0, 101)
+        y = am.taylor_exp(x, range_reduce=True)
+        absd = np.abs(np.asarray(y - jnp.exp(x)))
+        assert absd.max() < 1e-3
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.floats(-30.0, 20.0))
+    def test_range_reduced_positive(self, x):
+        assert float(am.taylor_exp(jnp.asarray(x), range_reduce=True)) >= 0.0
+
+
+class TestDivExpLog:
+    @settings(max_examples=50, deadline=None)
+    @given(st.floats(1e-3, 1e3), st.floats(1e-3, 1e3))
+    def test_matches_division(self, a, b):
+        v = float(am.div_exp_log(jnp.asarray(a), jnp.asarray(b)))
+        assert abs(v - a / b) / (a / b) < 1e-4
+
+
+class TestTaylorSoftmax:
+    def test_matches_softmax(self):
+        x = jax.random.normal(jax.random.key(0), (16, 32)) * 4
+        ts = am.taylor_softmax(x, axis=-1)
+        ex = jax.nn.softmax(x, axis=-1)
+        assert float(jnp.max(jnp.abs(ts - ex))) < 5e-3
+
+    def test_simplex(self):
+        x = jax.random.normal(jax.random.key(1), (8, 10)) * 10
+        ts = am.taylor_softmax(x, axis=-1)
+        np.testing.assert_allclose(np.asarray(jnp.sum(ts, -1)), 1.0,
+                                   atol=1e-5)
+        assert float(jnp.min(ts)) >= 0.0
+
+    def test_div_exp_log_mode(self):
+        x = jax.random.normal(jax.random.key(2), (4, 6))
+        a = am.taylor_softmax(x, use_div_exp_log=True)
+        b = am.taylor_softmax(x, use_div_exp_log=False)
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+
+class TestSquash:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2 ** 16), st.floats(0.01, 50.0))
+    def test_norm_below_one_and_direction(self, seed, scale):
+        """||squash(s)|| < 1 and squash preserves direction (Sabour Eq. 1)."""
+        s = jax.random.normal(jax.random.key(seed), (3, 8)) * scale
+        v = am.squash(s, axis=-1)
+        norms = jnp.linalg.norm(v, axis=-1)
+        assert float(jnp.max(norms)) < 1.0
+        cos = jnp.sum(v * s, -1) / (
+            jnp.linalg.norm(v, axis=-1) * jnp.linalg.norm(s, axis=-1) + 1e-9)
+        assert float(jnp.min(cos)) > 0.99
+
+    def test_squash_fast_matches(self):
+        s = jax.random.normal(jax.random.key(3), (5, 16)) * 3
+        np.testing.assert_allclose(np.asarray(am.squash(s)),
+                                   np.asarray(am.squash_fast(s)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_monotone_in_norm(self):
+        """Longer inputs squash to longer outputs (probability semantics)."""
+        d = jnp.ones((1, 8)) / np.sqrt(8)
+        lens = [0.1, 0.5, 1.0, 2.0, 10.0]
+        outs = [float(jnp.linalg.norm(am.squash(d * l))) for l in lens]
+        assert all(a < b for a, b in zip(outs, outs[1:]))

@@ -1,0 +1,169 @@
+"""CapsNet system tests: shapes, learning, prune pipeline, compaction."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capsnet as cn
+from repro.core import pruning as pr
+from repro.data import synthetic_digits as sd
+
+
+def tiny_cfg(**kw):
+    base = dict(conv1_channels=16, caps_types=4, decoder_hidden=(32, 64))
+    base.update(kw)
+    return cn.CapsNetConfig(**base)
+
+
+class TestShapes:
+    def test_paper_dimensions(self):
+        """Fig. 3: 1152 primary capsules on 28x28 MNIST, 6x6 spatial."""
+        cfg = cn.CapsNetConfig()
+        assert cfg.conv1_out_hw == 20
+        assert cfg.caps_out_hw == 6
+        assert cfg.n_primary_caps == 1152
+        assert cfg.primary_conv_channels == 256
+
+    def test_forward_shapes_and_finite(self):
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        imgs = jax.random.uniform(jax.random.key(1), (3, 28, 28, 1))
+        lengths, v = cn.forward(params, cfg, imgs)
+        assert lengths.shape == (3, 10)
+        assert v.shape == (3, 10, 16)
+        assert bool(jnp.all(jnp.isfinite(lengths)))
+
+    @pytest.mark.parametrize("mode", ["reference", "optimized", "pallas"])
+    def test_routing_modes_agree(self, mode):
+        cfg_ref = tiny_cfg(routing_mode="reference")
+        cfg_m = tiny_cfg(routing_mode=mode)
+        params = cn.init(cfg_ref, jax.random.key(0))
+        imgs = jax.random.uniform(jax.random.key(1), (2, 28, 28, 1))
+        l_ref, _ = cn.forward(params, cfg_ref, imgs)
+        l_m, _ = cn.forward(params, cfg_m, imgs)
+        np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_m),
+                                   atol=1e-4)
+
+    def test_taylor_softmax_mode_close(self):
+        """Paper claim: optimized nonlinearities don't change predictions."""
+        cfg_e = tiny_cfg(routing_mode="optimized", softmax_mode="exact")
+        cfg_t = tiny_cfg(routing_mode="optimized", softmax_mode="taylor",
+                         use_div_exp_log=True)
+        params = cn.init(cfg_e, jax.random.key(0))
+        imgs = jax.random.uniform(jax.random.key(1), (4, 28, 28, 1))
+        l_e, _ = cn.forward(params, cfg_e, imgs)
+        l_t, _ = cn.forward(params, cfg_t, imgs)
+        assert (jnp.argmax(l_e, -1) == jnp.argmax(l_t, -1)).all()
+
+
+class TestLoss:
+    def test_margin_loss_zero_when_perfect(self):
+        cfg = tiny_cfg()
+        lengths = jnp.full((2, 10), 0.05).at[0, 3].set(0.95).at[1, 7].set(
+            0.95)
+        loss = cn.margin_loss(lengths, jnp.array([3, 7]), cfg)
+        assert float(loss) < 1e-6
+
+    def test_loss_decreases_with_training(self):
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        data = sd.load(sd.DigitsConfig(n_train=64, n_test=16))
+        x, y = jnp.asarray(data["train"][0][:16]), jnp.asarray(
+            data["train"][1][:16])
+
+        @jax.jit
+        def step(p):
+            (l, m), g = jax.value_and_grad(cn.loss_fn, has_aux=True)(
+                p, cfg, x, y)
+            return jax.tree.map(lambda a, b: a - 0.02 * b, p, g), l
+
+        losses = []
+        for _ in range(12):
+            params, l = step(params)
+            losses.append(float(l))
+        assert losses[-1] < losses[0]
+
+
+class TestPrunePipeline:
+    def test_masked_equals_compacted(self):
+        """Fig. 6 step: masked-dense forward == compacted forward."""
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        masks = cn.lakp_masks(params, cfg, 0.5, 0.75)
+        masked = cn.apply_masks(params, masks)
+        compact_p, compact_cfg, idx = cn.compact(masked, cfg, masks)
+        imgs = jax.random.uniform(jax.random.key(1), (2, 28, 28, 1))
+        l_masked, _ = cn.forward(masked, cfg, imgs)
+        l_compact, _ = cn.forward(compact_p, compact_cfg, imgs)
+        np.testing.assert_allclose(np.asarray(l_masked),
+                                   np.asarray(l_compact), atol=1e-4)
+
+    def test_capsule_elimination(self):
+        """The Fig. 6 "interconnection study": capsule types are eliminated
+        down to type_keep (paper: 32 -> 7 on MNIST -> 252 capsules)."""
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        masks = cn.lakp_masks(params, cfg, 0.0, 0.5, type_keep=2)
+        _, compact_cfg, idx = cn.compact(params, cfg, masks)
+        assert compact_cfg.caps_types == 2
+        assert compact_cfg.n_primary_caps == 2 * cfg.caps_out_hw ** 2
+
+    def test_elimination_preserves_forward_equivalence(self):
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        masks = cn.lakp_masks(params, cfg, 0.3, 0.5, type_keep=3)
+        masked = cn.apply_masks(params, masks)
+        compact_p, compact_cfg, _ = cn.compact(masked, cfg, masks)
+        imgs = jax.random.uniform(jax.random.key(1), (2, 28, 28, 1))
+        l_m, _ = cn.forward(masked, cfg, imgs)
+        l_c, _ = cn.forward(compact_p, compact_cfg, imgs)
+        np.testing.assert_allclose(np.asarray(l_m), np.asarray(l_c),
+                                   atol=1e-4)
+
+    def test_pipeline_compression_accounting(self):
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        res = pr.prune_capsnet(params, cfg, 0.8, 0.8, method="lakp")
+        assert 0.75 < res.compression < 0.85
+        assert res.index_overhead_frac < 0.02
+        n_dense = cn.param_count(params)
+        n_compact = cn.param_count(res.compact_params)
+        assert n_compact < n_dense
+
+    def test_kp_vs_lakp_differ(self):
+        """The two scoring methods pick different kernels in general."""
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(42))
+        m_l = cn.lakp_masks(params, cfg, 0.5, 0.5, method="lakp")
+        m_k = cn.lakp_masks(params, cfg, 0.5, 0.5, method="kp")
+        same = all(
+            bool(jnp.array_equal(a, b)) for a, b in zip(m_l, m_k))
+        assert not same
+
+    def test_mask_gradients(self):
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        masks = cn.lakp_masks(params, cfg, 0.5, 0.5)
+        grads = jax.tree.map(jnp.ones_like, params)
+        mg = pr.mask_gradients(grads, masks)
+        w1 = np.asarray(mg["conv1"]["w"])
+        m1 = np.asarray(masks[0])
+        assert (w1[m1 == 0] == 0).all()
+        assert (w1[m1 == 1] == 1).all()
+
+
+class TestRoutingWeightReduction:
+    def test_routing_params_shrink(self):
+        """Paper: each capsule carries n_classes*digit_dim*caps_dim routing
+        params; eliminating capsule types shrinks W proportionally."""
+        cfg = tiny_cfg()
+        params = cn.init(cfg, jax.random.key(0))
+        masks = cn.lakp_masks(params, cfg, 0.0, 0.95, type_keep=2)
+        c_params, c_cfg, _ = cn.compact(params, cfg, masks)
+        before = params["digit"]["w"].size
+        after = c_params["digit"]["w"].size
+        assert after * cfg.caps_types == before * c_cfg.caps_types
+        assert after < before

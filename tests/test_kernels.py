@@ -1,0 +1,102 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fops, ref as fref
+from repro.kernels.taylor_softmax import ops as tops, ref as tref
+
+
+class TestTaylorSoftmaxKernel:
+    @pytest.mark.parametrize("shape", [(8, 16), (33, 250), (4, 7, 64),
+                                       (1, 1024), (256, 10)])
+    def test_shapes_vs_oracle(self, shape):
+        x = jax.random.normal(jax.random.key(sum(shape)), shape) * 5
+        o_k = tops.taylor_softmax(x)
+        o_r = tref.taylor_softmax_ref(x)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = (jax.random.normal(jax.random.key(0), (16, 64)) * 3).astype(dtype)
+        o_k = tops.taylor_softmax(x)
+        o_r = tref.taylor_softmax_ref(x)
+        tol = 1e-6 if dtype == jnp.float32 else 1e-2
+        np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                                   np.asarray(o_r, np.float32), atol=tol)
+
+    def test_close_to_exact_softmax(self):
+        x = jax.random.normal(jax.random.key(1), (32, 128)) * 8
+        o_k = tops.taylor_softmax(x)
+        assert float(jnp.max(jnp.abs(o_k - jax.nn.softmax(x, -1)))) < 5e-3
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("b,s,t,h,k,d", [
+        (2, 256, 256, 8, 4, 64),      # GQA self
+        (1, 128, 128, 4, 4, 32),      # MHA
+        (2, 64, 256, 8, 2, 64),       # cross-shape (s != t)
+        (1, 512, 512, 2, 1, 128),     # MQA long
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_vs_oracle(self, b, s, t, h, k, d, causal):
+        if causal and s != t:
+            pytest.skip("causal requires aligned q/kv ranges here")
+        key = jax.random.key(b * 7 + s + h)
+        q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+        kk = jax.random.normal(jax.random.key(1), (b, t, k, d), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (b, t, k, d), jnp.float32)
+        o_k = fops.flash_attention(q, kk, v, causal=causal,
+                                   q_block=64, kv_block=64)
+        o_r = fref.attention_ref(q, kk, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("qb,kb", [(32, 32), (64, 128), (128, 64),
+                                       (256, 256)])
+    def test_block_shape_invariance(self, qb, kb):
+        q = jax.random.normal(jax.random.key(0), (1, 256, 4, 32))
+        k = jax.random.normal(jax.random.key(1), (1, 256, 2, 32))
+        v = jax.random.normal(jax.random.key(2), (1, 256, 2, 32))
+        o = fops.flash_attention(q, k, v, causal=True, q_block=qb,
+                                 kv_block=kb)
+        o_r = fref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                                   atol=2e-5)
+
+    def test_bf16(self):
+        q = (jax.random.normal(jax.random.key(0), (1, 128, 4, 64))
+             ).astype(jnp.bfloat16)
+        k = (jax.random.normal(jax.random.key(1), (1, 128, 2, 64))
+             ).astype(jnp.bfloat16)
+        v = (jax.random.normal(jax.random.key(2), (1, 128, 2, 64))
+             ).astype(jnp.bfloat16)
+        o_k = fops.flash_attention(q, k, v, q_block=64, kv_block=64)
+        o_r = fref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                                   np.asarray(o_r, np.float32), atol=3e-2)
+
+    def test_taylor_softmax_mode(self):
+        """FastCaps Eq. 2 exp inside attention: close to exact."""
+        q = jax.random.normal(jax.random.key(0), (1, 128, 4, 32))
+        k = jax.random.normal(jax.random.key(1), (1, 128, 2, 32))
+        v = jax.random.normal(jax.random.key(2), (1, 128, 2, 32))
+        o_t = fops.flash_attention(q, k, v, softmax_mode="taylor",
+                                   q_block=64, kv_block=64)
+        o_e = fref.attention_ref(q, k, v)
+        assert float(jnp.max(jnp.abs(o_t - o_e))) < 5e-2
+
+    def test_q_offset_decode_window(self):
+        """q_offset positions queries at the end of a longer KV context."""
+        b, s, t, h, k, d = 1, 64, 256, 4, 2, 32
+        q = jax.random.normal(jax.random.key(0), (b, s, h, d))
+        kk = jax.random.normal(jax.random.key(1), (b, t, k, d))
+        v = jax.random.normal(jax.random.key(2), (b, t, k, d))
+        o_k = fops.flash_attention(q, kk, v, causal=True,
+                                   q_offset=t - s, q_block=32, kv_block=64)
+        o_r = fref.attention_ref(q, kk, v, causal=True, q_offset=t - s)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   atol=2e-5)

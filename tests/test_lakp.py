@@ -1,0 +1,186 @@
+"""LAKP (Algorithm 1 / Eq. 1 / Fig. 7) unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lakp
+
+
+def make_w(sums, kh=3, kw=3):
+    """(O,I) kernel abs-sums -> OIHW weights realizing them."""
+    sums = np.asarray(sums, np.float32)
+    o, i = sums.shape
+    w = np.zeros((o, i, kh, kw), np.float32)
+    w[:, :, 0, 0] = sums
+    return jnp.asarray(w)
+
+
+class TestFig7WorkedExample:
+    """The paper's Fig. 7: scores 2295/2280/3060/3800, mask [[0,0],[1,1]]."""
+
+    def setup_method(self):
+        self.wi = make_w([[9, 8], [9, 10]])
+        self.wp = make_w([[8, 9], [10, 9]])
+        self.wn = make_w([[6, 10], [9, 10]])
+
+    def test_scores_exact(self):
+        s = lakp.lakp_kernel_scores(self.wi, self.wp, self.wn, norm="l1")
+        np.testing.assert_allclose(
+            np.asarray(s), [[2295.0, 2280.0], [3060.0, 3800.0]])
+
+    def test_mask_50pct(self):
+        s = lakp.lakp_kernel_scores(self.wi, self.wp, self.wn, norm="l1")
+        m = lakp.mask_from_scores(s, 0.5)
+        np.testing.assert_array_equal(np.asarray(m), [[0, 0], [1, 1]])
+
+    def test_masked_weight(self):
+        res = lakp.lakp_prune([self.wp, self.wi, self.wn],
+                              [0.0, 0.5, 0.0])
+        w_pruned = np.asarray(res.weights[1])
+        assert w_pruned[0].sum() == 0.0          # row 0 fully pruned
+        assert w_pruned[1].sum() > 0.0
+
+
+class TestBoundaries:
+    def test_first_layer_no_prev(self):
+        w = make_w([[1, 2], [3, 4]])
+        wn = make_w([[1, 1], [1, 1]])
+        s = lakp.lakp_kernel_scores(w, None, wn)
+        np.testing.assert_allclose(np.asarray(s), [[2, 4], [6, 8]])
+
+    def test_last_layer_no_next(self):
+        w = make_w([[1, 2], [3, 4]])
+        wp = make_w([[1, 1], [1, 1]])
+        s = lakp.lakp_kernel_scores(w, wp, None)
+        np.testing.assert_allclose(np.asarray(s), [[2, 4], [6, 8]])
+
+    def test_kp_equals_lakp_with_uniform_neighbours(self):
+        """With all-ones neighbours every look-ahead factor is equal, so the
+        LAKP ordering reduces to the KP (magnitude) ordering."""
+        rng = np.random.RandomState(0)
+        w = jnp.asarray(rng.rand(4, 3, 3, 3).astype(np.float32))
+        ones_p = jnp.ones((3, 2, 3, 3), jnp.float32)
+        ones_n = jnp.ones((5, 4, 3, 3), jnp.float32)
+        s_lakp = lakp.lakp_kernel_scores(w, ones_p, ones_n)
+        s_kp = lakp.kp_scores(w)
+        m1 = lakp.mask_from_scores(s_lakp, 0.5)
+        m2 = lakp.mask_from_scores(s_kp, 0.5)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+@st.composite
+def conv_chain(draw):
+    o1 = draw(st.integers(2, 5))
+    o2 = draw(st.integers(2, 5))
+    o3 = draw(st.integers(2, 5))
+    i1 = draw(st.integers(1, 3))
+    k = draw(st.sampled_from([1, 3]))
+    rng = np.random.RandomState(draw(st.integers(0, 2 ** 16)))
+    ws = [jnp.asarray(rng.randn(o1, i1, k, k).astype(np.float32)),
+          jnp.asarray(rng.randn(o2, o1, k, k).astype(np.float32)),
+          jnp.asarray(rng.randn(o3, o2, k, k).astype(np.float32))]
+    s = draw(st.floats(0.0, 0.95))
+    return ws, s
+
+
+class TestProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(conv_chain())
+    def test_sparsity_exact(self, chain):
+        """Exactly floor(s*N) kernels are pruned in every layer."""
+        ws, s = chain
+        res = lakp.lakp_prune(ws, [s, s, s])
+        for w, m in zip(ws, res.masks):
+            n = m.size
+            assert int((np.asarray(m) == 0).sum()) == int(s * n)
+
+    @settings(max_examples=20, deadline=None)
+    @given(conv_chain())
+    def test_mask_zeroes_lowest_scores(self, chain):
+        ws, s = chain
+        res = lakp.lakp_prune(ws, [s, s, s])
+        for scores, m in zip(res.scores, res.masks):
+            sc = np.asarray(scores).ravel()
+            mk = np.asarray(m).ravel()
+            if mk.min() == 1.0:
+                continue
+            assert sc[mk == 0].max() <= sc[mk == 1].min() + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 16), st.floats(0.05, 0.9))
+    def test_permutation_equivariance(self, seed, s):
+        """Permuting layer-i output channels permutes masks identically."""
+        rng = np.random.RandomState(seed)
+        w1 = rng.randn(4, 2, 3, 3).astype(np.float32)
+        w2 = rng.randn(6, 4, 3, 3).astype(np.float32)
+        w3 = rng.randn(3, 6, 3, 3).astype(np.float32)
+        perm = rng.permutation(6)
+        s2 = lakp.lakp_kernel_scores(jnp.asarray(w2), jnp.asarray(w1),
+                                     jnp.asarray(w3))
+        s2p = lakp.lakp_kernel_scores(jnp.asarray(w2[perm]),
+                                      jnp.asarray(w1),
+                                      jnp.asarray(w3[:, perm]))
+        np.testing.assert_allclose(np.asarray(s2)[perm], np.asarray(s2p),
+                                   rtol=1e-5)
+
+    def test_fro_matches_eq1(self):
+        """norm='fro' computes Eq. 1 verbatim (Frobenius factors)."""
+        rng = np.random.RandomState(1)
+        w = rng.randn(2, 2, 3, 3).astype(np.float32)
+        wp = rng.randn(2, 2, 3, 3).astype(np.float32)
+        wn = rng.randn(2, 2, 3, 3).astype(np.float32)
+        s = lakp.lakp_kernel_scores(jnp.asarray(w), jnp.asarray(wp),
+                                    jnp.asarray(wn), norm="fro")
+        # manual: sum|w| kernel * ||prev rows||_F * ||next cols||_F
+        own = np.abs(w).sum((2, 3))
+        prev = np.sqrt((wp ** 2).sum((1, 2, 3)))      # per out-ch of prev
+        nxt = np.sqrt((wn ** 2).sum((0, 2, 3)))       # per in-ch of next
+        # own for fro mode: sqrt of kernel sum of squares
+        own = np.sqrt((w ** 2).sum((2, 3)))
+        expect = own * prev[None, :] * nxt[:, None]
+        np.testing.assert_allclose(np.asarray(s), expect, rtol=1e-5)
+
+
+class TestBlocks:
+    def test_block_prune_and_compact_equivalence(self):
+        """Masked-dense FFN forward == compacted FFN forward (paper §III-C:
+        structured pruning -> physical removal)."""
+        rng = np.random.RandomState(0)
+        d, f, nb = 8, 16, 4
+        w_in = jnp.asarray(rng.randn(d, f).astype(np.float32))
+        w_out = jnp.asarray(rng.randn(f, d).astype(np.float32))
+        x = jnp.asarray(rng.randn(5, d).astype(np.float32))
+        wi_m, wo_m, mask = lakp.prune_blocks(w_in, w_out, nb, 0.5)
+        y_masked = jnp.maximum(x @ wi_m, 0) @ wo_m
+        wi_c, wo_c, idx = lakp.compact_blocks(wi_m, wo_m, mask)
+        y_compact = jnp.maximum(x @ wi_c, 0) @ wo_c
+        np.testing.assert_allclose(np.asarray(y_masked),
+                                   np.asarray(y_compact), rtol=1e-5,
+                                   atol=1e-5)
+        assert wi_c.shape[1] == int(mask.sum()) * (f // nb)
+
+    def test_unstructured_mask(self):
+        rng = np.random.RandomState(0)
+        w = jnp.asarray(rng.randn(10, 10).astype(np.float32))
+        m = lakp.unstructured_mask(w, 0.7)
+        assert int((np.asarray(m) == 0).sum()) == 70
+
+    def test_index_overhead_small(self):
+        """Paper §III-C: structured index memory ~0.1% of survivors."""
+        rng = np.random.RandomState(0)
+        ws = [jnp.asarray(rng.randn(64, 32, 9, 9).astype(np.float32))]
+        res = lakp.lakp_prune(ws, [0.9])
+        surv_bytes = int((np.asarray(res.masks[0]) > 0).sum()) * 81 * 4
+        overhead = lakp.index_overhead_bytes(res.masks) / surv_bytes
+        assert overhead < 0.01
+
+
+class TestCompression:
+    def test_effective_compression(self):
+        w = jnp.ones((10, 10, 3, 3))
+        res = lakp.kp_prune([w], [0.8])
+        c = lakp.effective_compression(res.masks, [w])
+        assert abs(c - 0.8) < 0.01

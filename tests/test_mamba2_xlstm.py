@@ -1,0 +1,137 @@
+"""SSM blocks: chunk-size invariance + chunked-vs-recurrent equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mamba2, xlstm
+from repro.models.common import LMConfig, SSMConfig, XLSTMConfig
+
+
+def mamba_cfg(chunk=8):
+    return LMConfig(arch_id="m", family="hybrid", n_layers=1, d_model=16,
+                    n_heads=2, n_kv_heads=2, d_ff=32, vocab=32,
+                    compute_dtype="float32", param_dtype="float32",
+                    ssm=SSMConfig(d_state=4, d_conv=4, expand=2, head_dim=8,
+                                  n_groups=1, chunk_size=chunk))
+
+
+def xlstm_cfg(chunk=8):
+    return LMConfig(arch_id="x", family="ssm", n_layers=2, d_model=16,
+                    n_heads=2, n_kv_heads=2, d_ff=0, vocab=32,
+                    compute_dtype="float32", param_dtype="float32",
+                    xlstm=XLSTMConfig(slstm_every=2, chunk_size=chunk))
+
+
+class TestMamba2:
+    def test_chunk_size_invariance(self):
+        """The SSD output must not depend on the chunk size."""
+        from repro.models.common import init_params
+        outs = []
+        for chunk in (4, 8, 16, 32):
+            cfg = mamba_cfg(chunk)
+            params = init_params(mamba2.mamba2_defs(cfg),
+                                 jax.random.key(0), jnp.float32)
+            x = jax.random.normal(jax.random.key(1), (2, 32, 16))
+            y, _ = mamba2.mamba2_apply(params, cfg, x)
+            outs.append(np.asarray(y))
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, atol=1e-4, rtol=1e-4)
+
+    def test_chunked_equals_stepwise_decode(self):
+        """Processing a sequence chunked == feeding tokens one at a time
+        through the recurrent state (the long_500k decode path)."""
+        from repro.models.common import init_params
+        cfg = mamba_cfg(8)
+        params = init_params(mamba2.mamba2_defs(cfg), jax.random.key(0),
+                             jnp.float32)
+        b, s = 2, 16
+        x = jax.random.normal(jax.random.key(1), (b, s, 16))
+        state = mamba2.mamba2_init_state(cfg, b)
+        y_full, _ = mamba2.mamba2_apply(params, cfg, x,
+                                        mamba2.mamba2_init_state(cfg, b))
+        ys = []
+        for t in range(s):
+            y_t, state = mamba2.mamba2_apply(params, cfg, x[:, t:t + 1],
+                                             state)
+            ys.append(y_t)
+        y_step = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_state_carries_context(self):
+        """Same token, different histories -> different outputs."""
+        from repro.models.common import init_params
+        cfg = mamba_cfg()
+        params = init_params(mamba2.mamba2_defs(cfg), jax.random.key(0),
+                             jnp.float32)
+        x1 = jax.random.normal(jax.random.key(1), (1, 8, 16))
+        x2 = jax.random.normal(jax.random.key(2), (1, 8, 16))
+        tok = jax.random.normal(jax.random.key(3), (1, 1, 16))
+        _, s1 = mamba2.mamba2_apply(params, cfg, x1,
+                                    mamba2.mamba2_init_state(cfg, 1))
+        _, s2 = mamba2.mamba2_apply(params, cfg, x2,
+                                    mamba2.mamba2_init_state(cfg, 1))
+        y1, _ = mamba2.mamba2_apply(params, cfg, tok, s1)
+        y2, _ = mamba2.mamba2_apply(params, cfg, tok, s2)
+        assert float(jnp.max(jnp.abs(y1 - y2))) > 1e-5
+
+
+class TestMLSTM:
+    def test_chunk_size_invariance(self):
+        from repro.models.common import init_params
+        outs = []
+        for chunk in (4, 8, 32):
+            cfg = xlstm_cfg(chunk)
+            params = init_params(xlstm.mlstm_defs(cfg), jax.random.key(0),
+                                 jnp.float32)
+            x = jax.random.normal(jax.random.key(1), (2, 32, 16))
+            y, _ = xlstm.mlstm_apply(params, cfg, x)
+            outs.append(np.asarray(y))
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, atol=1e-4, rtol=1e-4)
+
+    def test_chunked_equals_stepwise_decode(self):
+        from repro.models.common import init_params
+        cfg = xlstm_cfg(4)
+        params = init_params(xlstm.mlstm_defs(cfg), jax.random.key(0),
+                             jnp.float32)
+        b, s = 1, 12
+        x = jax.random.normal(jax.random.key(1), (b, s, 16))
+        zeros = jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            xlstm.mlstm_state_defs(cfg, b))
+        zeros["m"] = jnp.full_like(zeros["m"], -jnp.inf)
+        y_full, _ = xlstm.mlstm_apply(params, cfg, x, dict(zeros))
+        state = dict(zeros)
+        ys = []
+        for t in range(s):
+            y_t, state = xlstm.mlstm_apply(params, cfg, x[:, t:t + 1],
+                                           state)
+            ys.append(y_t)
+        y_step = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_step),
+                                   atol=1e-3, rtol=1e-3)
+
+
+class TestSLSTM:
+    def test_state_continuation(self):
+        """Splitting a sequence across two calls == one call."""
+        from repro.models.common import init_params
+        cfg = xlstm_cfg()
+        params = init_params(xlstm.slstm_defs(cfg), jax.random.key(0),
+                             jnp.float32)
+        b, s = 2, 16
+        x = jax.random.normal(jax.random.key(1), (b, s, 16))
+        zeros = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                             xlstm.slstm_state_defs(cfg, b))
+        zeros["m"] = jnp.full_like(zeros["m"], -1e30)
+        y_full, _ = xlstm.slstm_apply(params, cfg, x, dict(zeros))
+        y1, st = xlstm.slstm_apply(params, cfg, x[:, :8], dict(zeros))
+        y2, _ = xlstm.slstm_apply(params, cfg, x[:, 8:], st)
+        y_split = jnp.concatenate([y1, y2], axis=1)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_split),
+                                   atol=1e-4, rtol=1e-4)

@@ -1,0 +1,186 @@
+"""Serving engine, synthetic data, optimizer, LM structured pruning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning as pr
+from repro.data import synthetic_digits as sd
+from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.models import attention as attn_lib
+from repro.models import lm
+from repro.models import moe as moe_lib
+from repro.models.common import LMConfig, MoEConfig, init_params
+from repro.optim import adamw
+from repro.serving import Request, ServeEngine
+
+
+def tiny_lm(**kw):
+    base = dict(arch_id="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                compute_dtype="float32", param_dtype="float32")
+    base.update(kw)
+    return LMConfig(**base)
+
+
+class TestServing:
+    def test_generate_greedy_deterministic(self):
+        cfg = tiny_lm()
+        params = lm.init(cfg, jax.random.key(0))
+        eng = ServeEngine(cfg, params, max_len=64)
+        a = eng.generate([[1, 2, 3]], max_new_tokens=6)
+        b = eng.generate([[1, 2, 3]], max_new_tokens=6)
+        assert a == b
+        assert len(a[0]) == 9
+
+    def test_generate_matches_manual_decode(self):
+        """Engine greedy decode == manual argmax loop over decode_step."""
+        cfg = tiny_lm()
+        params = lm.init(cfg, jax.random.key(0))
+        eng = ServeEngine(cfg, params, max_len=32)
+        prompt = [5, 9, 2, 7]
+        out = eng.generate([prompt], max_new_tokens=4)[0]
+        caches = lm.make_caches(cfg, 1, 32)
+        logits, caches = lm.prefill_step(
+            params, cfg, {"tokens": jnp.asarray([prompt])}, caches)
+        toks = list(prompt)
+        pos = len(prompt)
+        for _ in range(4):
+            nxt = int(jnp.argmax(logits[0]))
+            toks.append(nxt)
+            logits, caches = lm.decode_step(
+                params, cfg, {"tokens": jnp.asarray([[nxt]]),
+                              "pos": jnp.int32(pos)}, caches)
+            pos += 1
+        assert out == toks
+
+    def test_slot_engine_completes_all(self):
+        cfg = tiny_lm()
+        params = lm.init(cfg, jax.random.key(0))
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=48)
+        reqs = [Request(prompt=[i + 1, i + 2], max_new_tokens=3, rid=i)
+                for i in range(5)]
+        comps = eng.serve(reqs)
+        assert sorted(c.rid for c in comps) == [0, 1, 2, 3, 4]
+        for c in comps:
+            assert len(c.tokens) == 2 + 3
+
+
+class TestData:
+    def test_digits_deterministic(self):
+        a = sd.load(sd.DigitsConfig(n_train=8, n_test=4, seed=3))
+        b = sd.load(sd.DigitsConfig(n_train=8, n_test=4, seed=3))
+        np.testing.assert_array_equal(a["train"][0], b["train"][0])
+
+    def test_digits_shapes_range(self):
+        d = sd.load(sd.DigitsConfig(n_train=16, n_test=8))
+        x, y = d["train"]
+        assert x.shape == (16, 28, 28, 1)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        assert set(np.unique(y)) <= set(range(10))
+
+    def test_classes_visually_distinct(self):
+        """Mean images of different classes differ substantially."""
+        d = sd.load(sd.DigitsConfig(n_train=200, n_test=8, noise=0.0))
+        x, y = d["train"]
+        means = [x[y == c].mean(0) for c in range(10) if (y == c).sum() > 3]
+        dists = [np.abs(a - b).mean() for i, a in enumerate(means)
+                 for b in means[i + 1:]]
+        assert min(dists) > 0.01
+
+    def test_token_stream_learnable_structure(self):
+        """Markov stream: successor distribution is concentrated."""
+        ts = TokenStream(TokenStreamConfig(vocab=64, seed=0))
+        batch = ts.sample(8, 256, seed=1)
+        toks, labels = batch["tokens"], batch["labels"]
+        assert toks.shape == (8, 256)
+        # labels are next tokens
+        np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])
+        # ~90% of transitions land in the branch successors
+        hits = 0
+        total = 0
+        for b in range(8):
+            for t in range(255):
+                total += 1
+                if labels[b, t] in ts.successors[toks[b, t]]:
+                    hits += 1
+        assert hits / total > 0.8
+
+
+class TestOptim:
+    def test_adamw_converges_on_quadratic(self):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        state = adamw.init_state(params)
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0,
+                                schedule="constant", warmup_steps=0,
+                                total_steps=100)
+        for _ in range(200):
+            g = {"w": 2 * (params["w"] - target)}
+            params, state, _ = adamw.apply_updates(params, g, state, cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(target), atol=1e-2)
+
+    def test_grad_clip(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+        assert float(norm) == pytest.approx(200.0)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                schedule="cosine", min_lr_frac=0.1)
+        assert float(adamw.schedule_lr(cfg, jnp.int32(5))) == \
+            pytest.approx(0.5)
+        assert float(adamw.schedule_lr(cfg, jnp.int32(10))) == \
+            pytest.approx(1.0)
+        assert float(adamw.schedule_lr(cfg, jnp.int32(100))) == \
+            pytest.approx(0.1, abs=1e-6)
+
+    def test_weight_decay_shrinks(self):
+        params = {"w": jnp.ones(4)}
+        state = adamw.init_state(params)
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=0.0,
+                                schedule="constant", warmup_steps=0)
+        g = {"w": jnp.zeros(4)}
+        p2, _, _ = adamw.apply_updates(params, g, state, cfg)
+        assert float(p2["w"][0]) < 1.0
+
+
+class TestLMPruning:
+    def test_prune_ffn_blocks(self):
+        cfg = tiny_lm()
+        from repro.models import mlp as mlp_lib
+        params = init_params(mlp_lib.mlp_defs(cfg), jax.random.key(0),
+                             jnp.float32)
+        pruned, mask = pr.prune_lm_ffn(params, n_blocks=8, sparsity=0.5)
+        assert int(mask.sum()) == 4
+        # zeroed columns of wi/wg and rows of wo line up
+        blk = cfg.d_ff // 8
+        for b in range(8):
+            sl = slice(b * blk, (b + 1) * blk)
+            if float(mask[b]) == 0.0:
+                assert float(jnp.abs(pruned["wi"][:, sl]).sum()) == 0.0
+                assert float(jnp.abs(pruned["wo"][sl, :]).sum()) == 0.0
+
+    def test_prune_heads_gqa_groups(self):
+        cfg = tiny_lm(n_heads=4, n_kv_heads=2)
+        params = init_params(attn_lib.attention_defs(cfg),
+                             jax.random.key(0), jnp.float32)
+        pruned, mask = pr.prune_lm_heads(params, 4, 2, sparsity=0.5)
+        assert mask.shape == (2,)
+        dead = int(jnp.argmin(mask))
+        assert float(jnp.abs(pruned["wk"][:, dead]).sum()) == 0.0
+
+    def test_prune_moe_experts_never_routes_to_dead(self):
+        cfg = tiny_lm(family="moe",
+                      moe=MoEConfig(n_experts=8, top_k=2, d_expert=16))
+        params = init_params(moe_lib.moe_defs(cfg), jax.random.key(0),
+                             jnp.float32)
+        pruned, mask = pr.prune_moe_experts(params, sparsity=0.5)
+        x = jax.random.normal(jax.random.key(1), (2, 32, 32))
+        logits = x @ pruned["router"] + pruned["router_b"]
+        _, ids = jax.lax.top_k(logits, 2)
+        dead = set(np.where(np.asarray(mask) == 0)[0].tolist())
+        assert not (set(np.unique(np.asarray(ids))) & dead)
