@@ -9,39 +9,32 @@ same three systems (197 TFLOP/s roofline), connecting to §Roofline.
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common as bc
-from repro.core import capsnet as cn
-from repro.core import pruning as pr
-from repro.core import routing as routing_lib
+from repro.deploy import (FastCapsPipeline, RoutingSpec,
+                          capsnet_flops_per_image)
 
 
 def run(quick: bool = True) -> dict:
     cfg = bc.bench_capsnet_cfg(quick)
-    params = cn.init(cfg, jax.random.key(0))
+    pipe = FastCapsPipeline(cfg).build(seed=0)
     batch = 64 if quick else 128
     imgs = jax.random.uniform(jax.random.key(1), (batch, 28, 28, 1))
 
     # 1) original (reference routing, exact math)
-    fwd_orig = jax.jit(lambda p, x: cn.forward(p, cfg, x)[0])
-    t_orig = bc.time_fn(lambda: fwd_orig(params, imgs))
+    dep_orig = pipe.compile(routing="reference")
+    t_orig = bc.time_fn(lambda: dep_orig.forward(imgs))
 
     # 2) pruned (LAKP + compaction), reference routing
-    res = pr.prune_capsnet(params, cfg, 0.6, 0.9,
-                           type_keep=max(cfg.caps_types // 4, 1))
-    p_cfg, p_params = res.compact_cfg, res.compact_params
-    fwd_pruned = jax.jit(lambda p, x: cn.forward(p, p_cfg, x)[0])
-    t_pruned = bc.time_fn(lambda: fwd_pruned(p_params, imgs))
+    pipe.prune(0.6, 0.9,
+               type_keep=max(cfg.caps_types // 4, 1)).compact()
+    dep_pruned = pipe.compile(routing="reference")
+    t_pruned = bc.time_fn(lambda: dep_pruned.forward(imgs))
 
     # 3) pruned + optimized routing (fused pallas kernel + Eq.2 softmax)
-    o_cfg = dataclasses.replace(p_cfg, routing_mode="pallas",
-                                softmax_mode="taylor")
-    fwd_opt = jax.jit(lambda p, x: cn.forward(p, o_cfg, x)[0])
-    t_opt = bc.time_fn(lambda: fwd_opt(p_params, imgs))
+    dep_opt = pipe.compile(routing=RoutingSpec.pallas(softmax="taylor"))
+    t_opt = bc.time_fn(lambda: dep_opt.forward(imgs))
 
     fps = [batch / t for t in (t_orig, t_pruned, t_opt)]
     rows = [
@@ -54,21 +47,16 @@ def run(quick: bool = True) -> dict:
     bc.print_table("Fig.1: CapsNet throughput (CPU wall-clock)",
                    ["system", "ms/batch", "FPS", "speedup"], rows)
 
-    # modelled TPU FPS from routing+conv FLOPs (single chip, 50% MFU)
-    def model_fps(c: cn.CapsNetConfig) -> float:
-        conv1 = 2 * c.conv1_out_hw**2 * c.conv1_channels * (
-            c.in_channels * c.conv1_kernel**2)
-        conv2 = 2 * c.caps_out_hw**2 * c.primary_conv_channels * (
-            c.conv1_channels * c.caps_kernel**2)
-        pred = 2 * c.n_primary_caps * c.n_classes * c.caps_dim * c.digit_dim
-        route = routing_lib.routing_flops(1, c.n_primary_caps, c.n_classes,
-                                          c.digit_dim, c.routing_iters)
-        return 0.5 * 197e12 / (conv1 + conv2 + pred + route)
+    # modelled TPU FPS from routing+conv FLOPs (single chip, 50% MFU),
+    # using the deploy pipeline's own FLOP accounting
+    def model_fps(flops_per_image: int) -> float:
+        return 0.5 * 197e12 / flops_per_image
 
-    bc.print_table("Fig.1 (modelled single-chip TPU-v5e FPS @50% MFU)",
-                   ["system", "FPS"],
-                   [["original", f"{model_fps(cfg):.0f}"],
-                    ["pruned", f"{model_fps(p_cfg):.0f}"]])
+    bc.print_table(
+        "Fig.1 (modelled single-chip TPU-v5e FPS @50% MFU)",
+        ["system", "FPS"],
+        [["original", f"{model_fps(capsnet_flops_per_image(cfg)):.0f}"],
+         ["pruned", f"{model_fps(dep_pruned.flops_per_image):.0f}"]])
     return {"fps": fps, "speedup_pruned": fps[1] / fps[0],
             "speedup_opt": fps[2] / fps[0]}
 

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from benchmarks import common as bc
 from repro.core import approx_math as am
-from repro.kernels.routing import ops as rops, ref as rref
+from repro.deploy import RoutingSpec, resolve
+from repro.kernels.routing import ref as rref
 
 
 def run(quick: bool = True) -> dict:
@@ -49,11 +50,14 @@ def run(quick: bool = True) -> dict:
     bc.print_table("Fig.8: per-op wall-clock (routing steps, us/op)",
                    ["operation", "us"], rows)
 
-    # whole-loop: unfused reference vs fused VMEM-resident kernel
+    # whole-loop: unfused reference vs fused VMEM-resident kernel, with the
+    # fused variants resolved through the repro.deploy routing registry
+    # (interpret mode chosen by the backend probe)
+    fused_exact = resolve(RoutingSpec.pallas(softmax="exact"))
+    fused_taylor = resolve(RoutingSpec.pallas(softmax="taylor"))
     t_ref = bc.time_fn(lambda: rref.fused_routing_ref(u)[0])
-    t_fused = bc.time_fn(lambda: rops.fused_routing(u)[0])
-    t_fused_taylor = bc.time_fn(
-        lambda: rops.fused_routing(u, softmax_mode="taylor")[0])
+    t_fused = bc.time_fn(lambda: fused_exact(u)[0])
+    t_fused_taylor = bc.time_fn(lambda: fused_taylor(u)[0])
     bc.print_table(
         "Routing loop: unfused vs fused kernel (3 iterations, ms)",
         ["variant", "ms"],

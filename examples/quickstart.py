@@ -1,43 +1,46 @@
-"""Quickstart: the FastCaps pipeline in ~60 lines.
+"""Quickstart: the canonical ``repro.deploy`` pipeline in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a CapsNet, scores its kernels with Look-Ahead Kernel Pruning
-(paper Algorithm 1), prunes + compacts it, and runs the optimized
-(fused-routing + Taylor-softmax) deployment — printing the compression
-and agreement between original and optimized predictions.
+``FastCapsPipeline`` carries a CapsNet through the paper's Fig. 6
+methodology — ``build() -> prune() -> compact() -> compile()`` — and
+returns an immutable ``DeployedCapsNet``.  Routing variants are typed
+``RoutingSpec``s resolved through the deploy registry (Pallas interpret
+mode is probed from the backend, never hand-threaded).  The old free
+functions (``capsnet.init/forward`` + ``pruning.prune_capsnet`` +
+``dataclasses.replace(cfg, routing_mode=...)``) remain as deprecated
+wrappers for one cycle.
 """
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import capsnet as cn
-from repro.core import pruning as pr
+from repro.deploy import FastCapsPipeline, RoutingSpec
 
-# 1. a CapsNet (Sabour et al. architecture; small for the demo)
+# 1. a CapsNet pipeline (Sabour et al. architecture; small for the demo)
 cfg = cn.CapsNetConfig(arch_id="quickstart", conv1_channels=32,
-                       caps_types=8, decoder_hidden=(64, 128))
-params = cn.init(cfg, jax.random.key(0))
-print(f"dense CapsNet: {cn.param_count(params):,} params, "
+                      caps_types=8, decoder_hidden=(64, 128))
+pipe = FastCapsPipeline(cfg).build(seed=0)
+print(f"dense CapsNet: {cn.param_count(pipe.params):,} params, "
       f"{cfg.n_primary_caps} primary capsules")
 
 # 2. LAKP prune (60% conv1 kernels, 90% conv2 kernels, keep 2/8 capsule
 #    types) and physically compact the survivors
-res = pr.prune_capsnet(params, cfg, sparsity_conv1=0.6, sparsity_conv2=0.9,
-                       method="lakp", type_keep=2)
-print(f"pruned: compression={res.compression:.2%}, "
-      f"{res.compact_cfg.n_primary_caps} capsules survive, "
-      f"{cn.param_count(res.compact_params):,} params, "
-      f"index overhead={res.index_overhead_frac:.4%}")
+pipe.prune(sparsity_conv1=0.6, sparsity_conv2=0.9, method="lakp",
+           type_keep=2).compact()
+print(f"pruned: compression={pipe.compression:.2%}, "
+      f"{pipe.cfg.n_primary_caps} capsules survive, "
+      f"{cn.param_count(pipe.params):,} params, "
+      f"index overhead={pipe.index_overhead_frac:.4%}")
 
-# 3. FastCaps deployment: fused VMEM-resident routing + Eq.2 softmax
-dep_cfg = dataclasses.replace(res.compact_cfg, routing_mode="pallas",
-                              softmax_mode="taylor")
+# 3. FastCaps deployment: fused VMEM-resident routing + Eq.2 softmax,
+#    compiled against the reference deployment for the agreement check
+dep_ref = pipe.compile(routing="reference")
+dep_opt = pipe.compile(routing=RoutingSpec.pallas(softmax="taylor"))
 images = jax.random.uniform(jax.random.key(1), (8, 28, 28, 1))
-lengths_ref, _ = cn.forward(res.compact_params, res.compact_cfg, images)
-lengths_opt, _ = cn.forward(res.compact_params, dep_cfg, images)
+lengths_ref = dep_ref.forward(images)
+lengths_opt = dep_opt.forward(images)
 agree = float(jnp.mean((jnp.argmax(lengths_ref, -1)
                         == jnp.argmax(lengths_opt, -1))))
 print(f"optimized-vs-reference prediction agreement: {agree:.0%}")

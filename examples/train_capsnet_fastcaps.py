@@ -1,19 +1,97 @@
-"""End-to-end driver (deliverable b): train a CapsNet for a few hundred
-steps on the synthetic digit set, run the full FastCaps methodology
-(LAKP prune -> fine-tune -> compact -> optimized routing), and report
-accuracy + compression + throughput — the complete paper pipeline.
+"""End-to-end FastCaps driver on the new ``repro.deploy`` API: train a
+CapsNet on the synthetic digit set, run the full Fig. 6 methodology
+(LAKP prune -> masked fine-tune -> compact) through ``FastCapsPipeline``,
+compile the ``DeployedCapsNet``, and serve the test set through
+``CapsuleEngine`` — reporting accuracy, compression, and served FPS.
 
     PYTHONPATH=src python examples/train_capsnet_fastcaps.py
     PYTHONPATH=src python examples/train_capsnet_fastcaps.py --steps 300
 """
 
-import subprocess
-import sys
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import capsnet as cn
+from repro.core import pruning as pr
+from repro.data import synthetic_digits as sd
+from repro.deploy import FastCapsPipeline
+from repro.optim import AdamWConfig
+from repro.serving import CapsuleEngine, ImageRequest
+from repro.training import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--finetune-steps", type=int, default=80)
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--sparsity", type=float, default=0.8)
+    ap.add_argument("--routing", default="pallas",
+                    choices=["reference", "optimized", "pallas"])
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = cn.CapsNetConfig(arch_id="fastcaps-demo", conv1_channels=16,
+                           caps_types=4, decoder_hidden=(32, 64))
+    data = sd.load(sd.DigitsConfig(n_train=args.n_train, n_test=256))
+    tr_x, tr_y = data["train"]
+    te_x, te_y = data["test"]
+
+    def loss_fn(p, b):
+        return cn.loss_fn(p, cfg, b["images"], b["labels"])
+
+    def batches(seed=0):
+        for bx, by in sd.batches(tr_x, tr_y, 32, seed, epochs=1000):
+            yield {"images": bx, "labels": by}
+
+    # 1. train dense
+    tcfg = TrainerConfig(
+        optim=AdamWConfig(lr=1e-3, weight_decay=0.0,
+                          warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps),
+        log_every=max(args.steps // 4, 1))
+    res = Trainer(tcfg, loss_fn, lambda k: cn.init(cfg, k)).run(
+        batches(), args.steps)
+    print(f"[{cfg.arch_id}] trained {res.step} steps; "
+          f"final: {res.history[-1] if res.history else {}}")
+
+    # 2. FastCapsPipeline: prune -> masked fine-tune -> compact -> compile
+    def finetune(masked, masks):
+        ft = Trainer(
+            TrainerConfig(optim=AdamWConfig(
+                lr=3e-4, weight_decay=0.0, warmup_steps=1,
+                total_steps=args.finetune_steps)),
+            loss_fn, lambda k: masked,
+            mask_fn=lambda g: pr.mask_gradients(g, masks))
+        return ft.run(batches(seed=7), args.finetune_steps).params
+
+    pipe = FastCapsPipeline(cfg, params=res.params)
+    pipe.prune(args.sparsity, args.sparsity, method="lakp")
+    pipe.finetune(finetune).compact()
+    deployed = pipe.compile(routing=args.routing)
+    print(f"  compression={pipe.compression:.4f} "
+          f"({deployed.cfg.caps_types}/{cfg.caps_types} capsule types, "
+          f"{deployed.cfg.n_primary_caps} capsules, "
+          f"{deployed.n_params:,} params)")
+
+    # 3. accuracy of the deployed artifact + served throughput
+    acc = float(jnp.mean((deployed.classify(te_x) == te_y)))
+    engine = CapsuleEngine(deployed, batch_size=args.batch)
+    engine.warmup()
+    rng = np.random.RandomState(0)
+    frames = np.asarray(te_x)
+    cuts = np.sort(rng.choice(np.arange(1, len(frames)),
+                              size=7, replace=False))
+    reqs = [ImageRequest(images=chunk, rid=i)
+            for i, chunk in enumerate(np.split(frames, cuts))]
+    engine.serve(reqs)
+    s = engine.stats()
+    print(f"  deployed[{deployed.spec.mode}] test acc: {acc:.4f}; served "
+          f"{s.frames} frames in {s.batches} batches: {s.fps:.1f} FPS")
+
 
 if __name__ == "__main__":
-    args = sys.argv[1:] or ["--steps", "200"]
-    cmd = [sys.executable, "-m", "repro.launch.train",
-           "--arch", "capsnet-mnist", "--reduced",
-           "--prune", "lakp:0.8", "--finetune-steps", "80",
-           "--n-train", "512"] + args
-    raise SystemExit(subprocess.call(cmd))
+    main()

@@ -25,7 +25,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import approx_math, routing as routing_lib
+from repro.core import approx_math
+from repro.deploy.registry import RoutingSpec, resolve as resolve_routing
 from repro.models.common import ParamDef, fanin_init, init_params, param_specs
 
 
@@ -43,9 +44,13 @@ class CapsNetConfig:
     caps_stride: int = 2
     digit_dim: int = 16           # DigitCaps dimension
     routing_iters: int = 3
-    routing_mode: str = "reference"   # reference | optimized | pallas
-    softmax_mode: str = "exact"       # exact | taylor (paper Eq. 2)
-    use_div_exp_log: bool = False     # paper Eq. 3
+    # Typed routing spec (repro.deploy) — the canonical way to select a
+    # variant.  The string fields below are the legacy path, kept for one
+    # deprecation cycle; ``routing`` wins when set.
+    routing: Optional[RoutingSpec] = None
+    routing_mode: str = "reference"   # legacy: reference | optimized | pallas
+    softmax_mode: str = "exact"       # legacy: exact | taylor (paper Eq. 2)
+    use_div_exp_log: bool = False     # legacy: paper Eq. 3
     decoder_hidden: Tuple[int, int] = (512, 1024)
     recon_weight: float = 0.0005
     param_dtype: str = "float32"
@@ -72,6 +77,14 @@ class CapsNetConfig:
 
     def pdtype(self):
         return jnp.dtype(self.param_dtype)
+
+    def routing_spec(self) -> RoutingSpec:
+        """The effective RoutingSpec: the typed field if set, else the
+        legacy string fields lifted into a spec."""
+        if self.routing is not None:
+            return self.routing
+        return RoutingSpec(mode=self.routing_mode, softmax=self.softmax_mode,
+                           div_exp_log=self.use_div_exp_log)
 
 
 # ---------------------------------------------------------------------------
@@ -165,9 +178,8 @@ def predictions(params: Dict[str, Any], u: jax.Array) -> jax.Array:
 def digit_capsules(params: Dict[str, Any], cfg: CapsNetConfig,
                    u: jax.Array) -> Tuple[jax.Array, jax.Array]:
     u_hat = predictions(params, u)
-    return routing_lib.route(
-        u_hat, n_iters=cfg.routing_iters, mode=cfg.routing_mode,
-        softmax_mode=cfg.softmax_mode, use_div_exp_log=cfg.use_div_exp_log)
+    route_fn = resolve_routing(cfg.routing_spec())
+    return route_fn(u_hat, n_iters=cfg.routing_iters)
 
 
 def decode(params: Dict[str, Any], cfg: CapsNetConfig, v: jax.Array,

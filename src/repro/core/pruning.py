@@ -9,6 +9,10 @@ model to the optimized-routing deployment path.
 The same pipeline generalizes to LM architectures (DESIGN.md §5): FFN hidden
 blocks, attention-head blocks and MoE experts are pruned with
 ``lakp.prune_blocks`` and compacted with ``lakp.compact_blocks``.
+
+The canonical CapsNet entry point is now ``repro.deploy.FastCapsPipeline``;
+``prune_capsnet`` here is a thin delegating wrapper kept for one
+deprecation cycle.
 """
 
 from __future__ import annotations
@@ -56,36 +60,43 @@ def prune_capsnet(
     type_keep: Optional[int] = None,
     finetune_fn: Optional[Callable[[Dict[str, Any], Any], Dict[str, Any]]] = None,
 ) -> PrunePipelineResult:
-    """Run the full Fig. 6 pipeline on a trained CapsNet.
+    """DEPRECATED thin wrapper over :class:`repro.deploy.FastCapsPipeline`.
+
+    Runs the full Fig. 6 pipeline on a trained CapsNet; prefer driving the
+    pipeline object directly (it also yields the compiled deployment
+    artifact).  Kept for one deprecation cycle.
 
     ``type_keep`` passes through to the capsule-type elimination step
     (paper: 7 on MNIST, 12 on F-MNIST).  ``finetune_fn(masked_params,
     masks) -> params`` is injected by the trainer (keeps this module free
     of the optimizer); None skips fine-tuning (shape-level tests).
     """
-    masks = capsnet_lib.lakp_masks(params, cfg, sparsity_conv1,
-                                   sparsity_conv2, method=method, norm=norm,
-                                   type_keep=type_keep)
-    masked = capsnet_lib.apply_masks(params, masks)
-    tuned = finetune_fn(masked, masks) if finetune_fn is not None else None
-    source = tuned if tuned is not None else masked
-    compact_params, compact_cfg, index = capsnet_lib.compact(
-        source, cfg, masks)
+    import warnings
 
-    conv_ws = [params["conv1"]["w"], params["conv2"]["w"]]
-    compression = lakp_lib.effective_compression(list(masks), conv_ws)
-    surviving = sum(int(x.size) for x in jax.tree.leaves(compact_params))
-    overhead = lakp_lib.index_overhead_bytes(list(masks)) / max(
-        surviving * 4, 1)
+    from repro.deploy.pipeline import FastCapsPipeline
+
+    warnings.warn(
+        "repro.core.pruning.prune_capsnet is deprecated; drive "
+        "repro.deploy.FastCapsPipeline directly", DeprecationWarning,
+        stacklevel=2)
+
+    pipe = FastCapsPipeline(cfg, params=params)
+    pipe.prune(sparsity_conv1, sparsity_conv2, method=method, norm=norm,
+               type_keep=type_keep)
+    masked = pipe.params
+    tuned = None
+    if finetune_fn is not None:
+        tuned = pipe.finetune(finetune_fn).params
+    pipe.compact()
     return PrunePipelineResult(
         masked_params=masked,
         finetuned_params=tuned,
-        compact_params=compact_params,
-        compact_cfg=compact_cfg,
-        index=index,
-        masks=masks,
-        compression=compression,
-        index_overhead_frac=overhead,
+        compact_params=pipe.params,
+        compact_cfg=pipe.cfg,
+        index=pipe.index,
+        masks=pipe.masks,
+        compression=pipe.compression,
+        index_overhead_frac=pipe.index_overhead_frac,
     )
 
 

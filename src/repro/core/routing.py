@@ -94,8 +94,13 @@ def route_optimized(u_hat: jax.Array, n_iters: int = 3,
 
 def route_pallas(u_hat: jax.Array, n_iters: int = 3,
                  softmax_mode: str = "taylor",
-                 interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
-    """Fused VMEM-resident routing kernel (kernels/routing)."""
+                 interpret: bool | None = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Fused VMEM-resident routing kernel (kernels/routing).
+
+    ``interpret=None`` lets the kernel wrapper probe the backend (compiled
+    on TPU, interpret mode elsewhere).
+    """
     from repro.kernels.routing import ops as routing_ops
 
     return routing_ops.fused_routing(
@@ -105,14 +110,23 @@ def route_pallas(u_hat: jax.Array, n_iters: int = 3,
 
 def route(u_hat: jax.Array, n_iters: int = 3, mode: str = "reference",
           softmax_mode: str = "exact", use_div_exp_log: bool = False,
-          interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
-    if mode == "reference":
-        return route_reference(u_hat, n_iters)
-    if mode == "optimized":
-        return route_optimized(u_hat, n_iters, softmax_mode, use_div_exp_log)
-    if mode == "pallas":
-        return route_pallas(u_hat, n_iters, softmax_mode, interpret)
-    raise ValueError(f"unknown routing mode {mode!r}")
+          interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
+    """DEPRECATED thin wrapper over the ``repro.deploy`` routing registry.
+
+    Build a :class:`repro.deploy.RoutingSpec` and ``resolve`` it instead;
+    this shim survives one deprecation cycle.
+    """
+    import warnings
+
+    from repro.deploy.registry import RoutingSpec, resolve
+
+    warnings.warn(
+        "repro.core.routing.route(mode=...) is deprecated; use "
+        "repro.deploy.RoutingSpec + resolve()", DeprecationWarning,
+        stacklevel=2)
+    spec = RoutingSpec(mode=mode, softmax=softmax_mode,
+                       div_exp_log=use_div_exp_log, interpret=interpret)
+    return resolve(spec)(u_hat, n_iters=n_iters)
 
 
 def routing_flops(bsz: int, n_in: int, n_out: int, d: int, n_iters: int = 3

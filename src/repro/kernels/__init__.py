@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+import jax
+
+
+def needs_interpret() -> bool:
+    """Shared backend capability probe for every Pallas wrapper: the
+    kernels compile natively only on TPU; all other backends (cpu, gpu)
+    run the Pallas interpreter."""
+    return jax.default_backend() != "tpu"

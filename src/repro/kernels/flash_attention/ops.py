@@ -7,11 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import needs_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
-
-
-def on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -23,7 +20,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     interpret: bool | None = None) -> jax.Array:
     """q (B, S, H, D); k, v (B, T, K, D); H = K * G -> (B, S, H, D)."""
     if interpret is None:
-        interpret = on_cpu()
+        interpret = needs_interpret()
     b, s, h, d = q.shape
     t, nkv = k.shape[1], k.shape[2]
     g = h // nkv

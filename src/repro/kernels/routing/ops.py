@@ -8,11 +8,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import needs_interpret
 from repro.kernels.routing.routing_kernel import fused_routing_pallas
-
-
-def on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit,
@@ -24,7 +21,7 @@ def fused_routing(u_hat: jax.Array, n_iters: int = 3,
                   ) -> Tuple[jax.Array, jax.Array]:
     """Fused dynamic routing; interpret defaults to True off-TPU."""
     if interpret is None:
-        interpret = on_cpu()
+        interpret = needs_interpret()
     bsz = u_hat.shape[0]
     bb = batch_block
     while bsz % bb:

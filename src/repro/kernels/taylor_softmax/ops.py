@@ -6,16 +6,13 @@ import functools
 
 import jax
 
+from repro.kernels import needs_interpret
 from repro.kernels.taylor_softmax.kernel import taylor_softmax_pallas
-
-
-def on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
 def taylor_softmax(x: jax.Array, row_block: int = 256,
                    interpret: bool | None = None) -> jax.Array:
     if interpret is None:
-        interpret = on_cpu()
+        interpret = needs_interpret()
     return taylor_softmax_pallas(x, row_block=row_block, interpret=interpret)

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from repro import configs as cfg_lib
 from repro.core import capsnet as capsnet_lib
 from repro.launch import hlo_analysis, hlo_cost
-from repro.launch.mesh import make_production_mesh, require_virtual_devices
+from repro.launch.mesh import (make_production_mesh, mesh_context,
+                              require_virtual_devices)
 from repro.models import common, lm
 from repro.models.common import LMConfig
 from repro.optim import adamw
@@ -204,7 +205,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     t0 = time.time()
     fn, structs, in_sh, out_sh = build_cell(arch, shape, rules, mesh,
                                             variant)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jitted.lower(*structs)
         t_lower = time.time() - t0
@@ -213,6 +214,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = hlo_analysis.collective_stats(hlo)
     census = hlo_analysis.op_census(hlo)

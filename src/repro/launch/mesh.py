@@ -10,6 +10,28 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: AxisType landed after 0.4.x."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    (new) -> ``jax.sharding.use_mesh`` -> the Mesh object itself (0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (data, model) single pod; 2x16x16 (pod, data, model) for two
     pods.  ``pod`` is the slow cross-pod (DCN/ICI-cross) axis and by
@@ -17,16 +39,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     collective is the gradient all-reduce (DESIGN.md §4)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1x1 mesh on the real local device (smoke tests, examples)."""
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def require_virtual_devices(n: int = 512) -> None:

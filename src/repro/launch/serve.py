@@ -1,7 +1,12 @@
-"""Serving launcher: batched prefill + decode demo on a reduced config.
+"""Serving launcher: LM decode or batched CapsNet image inference.
 
+    # LM: batched prefill + decode demo on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --requests 6 --max-new 12
+
+    # CapsNet: FastCapsPipeline -> CapsuleEngine, FPS report (paper Fig. 1)
+    PYTHONPATH=src python -m repro.launch.serve --arch capsnet-mnist \
+        --requests 8 --batch 16 --routing pallas
 """
 
 from __future__ import annotations
@@ -14,20 +19,10 @@ import numpy as np
 
 from repro import configs as cfg_lib
 from repro.models import lm
-from repro.serving import Request, ServeEngine
+from repro.serving import CapsuleEngine, ImageRequest, Request, ServeEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True,
-                    choices=cfg_lib.list_archs(include_paper=False))
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
-
+def serve_lm(args) -> None:
     cfg = cfg_lib.get_config(args.arch)
     if args.reduced:
         cfg = cfg_lib.reduced(cfg)
@@ -41,14 +36,81 @@ def main():
                                             size=rng.randint(3, 9))),
                     max_new_tokens=args.max_new, rid=i)
             for i in range(args.requests)]
+    prompt_len = {r.rid: len(r.prompt) for r in reqs}
     t0 = time.time()
     completions = engine.serve(reqs)
     dt = time.time() - t0
-    total_new = sum(c.tokens and len(c.tokens) for c in completions)
+    # Completion.tokens includes the prompt; report only generated tokens.
+    total_new = sum(len(c.tokens) - prompt_len[c.rid] for c in completions)
     print(f"[{cfg.arch_id}] served {len(completions)} requests "
-          f"({total_new} tokens) in {dt:.2f}s")
+          f"({total_new} new tokens) in {dt:.2f}s "
+          f"({total_new / max(dt, 1e-9):.1f} tok/s)")
     for c in sorted(completions, key=lambda c: c.rid):
         print(f"  rid={c.rid}: {c.tokens}")
+
+
+def serve_capsnet(args) -> None:
+    """The paper's deployment path: prune -> compact -> compile -> serve."""
+    from repro.deploy import FastCapsPipeline
+
+    cfg = cfg_lib.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg_lib.reduced(cfg)
+    pipe = FastCapsPipeline(cfg).build(seed=0)
+    if args.sparsity > 0:
+        pipe.prune(args.sparsity, args.sparsity,
+                   type_keep=max(cfg.caps_types // 4, 1)).compact()
+    deployed = pipe.compile(routing=args.routing)
+    print(f"[{cfg.arch_id}] deployed: routing={deployed.spec.mode}"
+          f"(softmax={deployed.spec.softmax}) "
+          f"{deployed.n_params:,} params, "
+          f"{deployed.flops_per_image / 1e6:.1f} MFLOP/image")
+
+    engine = CapsuleEngine(deployed, batch_size=args.batch)
+    engine.warmup()
+    rng = np.random.RandomState(0)
+    reqs = [ImageRequest(
+                images=rng.rand(rng.randint(1, 2 * args.batch),
+                                cfg.image_hw, cfg.image_hw,
+                                cfg.in_channels).astype(np.float32),
+                rid=i)
+            for i in range(args.requests)]
+    completions = engine.serve(reqs)
+    stats = engine.stats()
+    print(f"  served {len(completions)} requests / {stats.frames} frames "
+          f"in {stats.batches} batches ({stats.padded_frames} pad): "
+          f"{stats.fps:.1f} FPS, {stats.ms_per_batch:.2f} ms/batch")
+    for c in sorted(completions, key=lambda c: c.rid):
+        print(f"  rid={c.rid}: {len(c.classes)} frames, "
+              f"latency={c.latency_s * 1e3:.1f} ms, "
+              f"classes={c.classes[:8].tolist()}"
+              f"{'...' if len(c.classes) > 8 else ''}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=cfg_lib.list_archs())
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="CPU-smoke-sized config (--no-reduced for the "
+                         "published size)")
+    ap.add_argument("--requests", type=int, default=6)
+    # LM options
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=128)
+    # CapsNet options
+    ap.add_argument("--batch", type=int, default=16,
+                    help="CapsuleEngine micro-batch size")
+    ap.add_argument("--routing", default="pallas",
+                    choices=["reference", "optimized", "pallas"])
+    ap.add_argument("--sparsity", type=float, default=0.6,
+                    help="LAKP sparsity for both conv layers (0 = dense)")
+    args = ap.parse_args()
+    if args.arch.startswith("capsnet"):
+        serve_capsnet(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

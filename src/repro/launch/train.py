@@ -27,6 +27,7 @@ from repro import configs as cfg_lib
 from repro.core import capsnet as capsnet_lib
 from repro.core import pruning as pruning_lib
 from repro.data import synthetic_digits, tokens
+from repro.deploy import FastCapsPipeline
 from repro.models import lm
 from repro.optim import AdamWConfig
 from repro.training import Trainer, TrainerConfig
@@ -99,18 +100,16 @@ def train_capsnet(args) -> None:
                 mask_fn=lambda g: pruning_lib.mask_gradients(g, masks))
             return ft.run(batches(args.finetune_steps),
                           args.finetune_steps).params
-        result = pruning_lib.prune_capsnet(
-            res.params, cfg, sparsity_conv1=rate, sparsity_conv2=rate,
-            method=method, finetune_fn=finetune)
+        pipe = FastCapsPipeline(cfg, params=res.params)
+        pipe.prune(rate, rate, method=method).finetune(finetune)
         acc_p = float(jnp.mean((jnp.argmax(
-            eval_fn(result.finetuned_params, te_x), -1) == te_y)))
-        c_cfg, c_params = result.compact_cfg, result.compact_params
-        eval_c = jax.jit(lambda p, x: capsnet_lib.forward(p, c_cfg, x)[0])
-        acc_c = float(jnp.mean((jnp.argmax(eval_c(c_params, te_x), -1)
-                                == te_y)))
+            eval_fn(pipe.params, te_x), -1) == te_y)))
+        deployed = pipe.compact().compile()
+        acc_c = float(jnp.mean((deployed.classify(te_x) == te_y)))
+        c_cfg = deployed.cfg
         print(f"  pruned[{method}:{rate}] compression="
-              f"{result.compression:.4f} "
-              f"index_overhead={result.index_overhead_frac:.5f}")
+              f"{pipe.compression:.4f} "
+              f"index_overhead={pipe.index_overhead_frac:.5f}")
         print(f"  test acc (pruned+finetuned): {acc_p:.4f}; "
               f"compacted ({c_cfg.caps_types}/{cfg.caps_types} capsule "
               f"types, {c_cfg.n_primary_caps} capsules): {acc_c:.4f}")

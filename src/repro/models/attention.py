@@ -204,9 +204,9 @@ def _inner_attention(q, k, v, cfg: LMConfig, causal: bool, q_offset: int = 0,
         from repro.kernels.flash_attention import ops as fa_ops
 
         if kv_valid_len is None and q.shape[1] > 1:
+            # interpret mode defaults to the wrapper's own backend probe
             return fa_ops.flash_attention(q, k, v, causal=causal,
-                                          q_offset=q_offset,
-                                          interpret=fa_ops.on_cpu())
+                                          q_offset=q_offset)
         # decode and masked-cache paths fall back to chunked
     return _chunked_attention(q, k, v, cfg, causal, q_offset, kv_valid_len)
 

@@ -1,1 +1,4 @@
+from repro.serving.capsule_engine import (CapsuleEngine,  # noqa: F401
+                                          EngineStats, ImageCompletion,
+                                          ImageRequest)
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401

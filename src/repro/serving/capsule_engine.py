@@ -1,0 +1,175 @@
+"""CapsuleEngine: batched CapsNet image serving (the ServeEngine analogue).
+
+The paper's throughput story (Fig. 1: 82 -> 1351 FPS) is a *served*
+workload, not a bare jit loop.  This engine serves image-classification
+requests through one fixed-shape jitted forward:
+
+* **Request queue** — requests carry a ragged number of frames; the engine
+  flattens them into a frame queue.
+* **Slot recycling / padding-to-batch** — every tick packs exactly
+  ``batch_size`` frame slots: frames from different requests share a batch
+  (recycling slots freed by completed requests), and the final partial
+  batch is zero-padded so the compiled executable never changes shape
+  (the same shape-stability posture as ``ServeEngine``'s decode step).
+* **FPS / latency stats** — cumulative frames, batches, padding waste and
+  wall-clock, plus per-request latency from submit to completion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """A batch-of-frames classification request (ragged ``images`` count).
+
+    ``rid=None`` lets the engine assign the next free id at submit time.
+    """
+
+    images: np.ndarray                # (n_frames, H, W, C)
+    rid: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ImageCompletion:
+    rid: int
+    classes: np.ndarray               # (n_frames,) int32 predictions
+    lengths: np.ndarray               # (n_frames, n_classes) capsule lengths
+    latency_s: float                  # submit -> completion wall-clock
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative over the engine's lifetime (monotone non-decreasing)."""
+
+    frames: int = 0                   # real frames served
+    padded_frames: int = 0            # zero-pad waste
+    batches: int = 0
+    wall_s: float = 0.0               # time spent in forward ticks
+
+    @property
+    def fps(self) -> float:
+        return self.frames / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def ms_per_batch(self) -> float:
+        return 1e3 * self.wall_s / self.batches if self.batches else 0.0
+
+
+class CapsuleEngine:
+    """Fixed-shape micro-batched inference over a :class:`DeployedCapsNet`.
+
+    ``deployed`` is any object with ``cfg`` (a CapsNetConfig) and
+    ``forward(images) -> lengths`` — in practice the artifact returned by
+    ``FastCapsPipeline.compile``.
+    """
+
+    def __init__(self, deployed: Any, batch_size: int = 32):
+        self.deployed = deployed
+        self.batch_size = batch_size
+        cfg = deployed.cfg
+        self._frame_shape = (cfg.image_hw, cfg.image_hw, cfg.in_channels)
+        self._queue: Deque[ImageRequest] = deque()
+        self._submit_t: Dict[int, float] = {}
+        self._stats = EngineStats()
+        self._next_rid = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, request: ImageRequest) -> int:
+        """Enqueue one request; returns its rid (assigned if unset)."""
+        imgs = np.asarray(request.images, np.float32)
+        if imgs.ndim != 4 or imgs.shape[1:] != self._frame_shape:
+            raise ValueError(
+                f"request images must be (n,) + {self._frame_shape}, got "
+                f"{imgs.shape}")
+        if request.rid is None:
+            request.rid = self._next_rid
+            self._next_rid += 1
+        elif request.rid >= self._next_rid:
+            self._next_rid = request.rid + 1     # keep auto ids collision-free
+        if request.rid in self._submit_t:
+            raise ValueError(f"duplicate rid {request.rid}")
+        request.images = imgs
+        self._queue.append(request)
+        self._submit_t[request.rid] = time.perf_counter()
+        return request.rid
+
+    def warmup(self) -> None:
+        """Compile the fixed-shape executable outside the measured path."""
+        dummy = np.zeros((self.batch_size,) + self._frame_shape, np.float32)
+        jax.block_until_ready(self.deployed.forward(dummy))
+
+    # -- serving loop ------------------------------------------------------
+
+    def run(self) -> List[ImageCompletion]:
+        """Drain the queue; returns completions in completion order."""
+        bsz = self.batch_size
+        # flatten requests into (request, frame_index) slots
+        pending: Deque[tuple] = deque()
+        buffers: Dict[int, Dict[str, Any]] = {}
+        done: List[ImageCompletion] = []
+        while self._queue:
+            req = self._queue.popleft()
+            n = req.images.shape[0]
+            if n == 0:                        # empty request: complete now
+                done.append(ImageCompletion(
+                    rid=req.rid,
+                    classes=np.zeros((0,), np.int32),
+                    lengths=np.zeros((0, self.deployed.cfg.n_classes),
+                                     np.float32),
+                    latency_s=time.perf_counter()
+                    - self._submit_t.pop(req.rid)))
+                continue
+            buffers[req.rid] = {
+                "req": req, "left": n,
+                "lengths": np.zeros((n, self.deployed.cfg.n_classes),
+                                    np.float32)}
+            for k in range(n):
+                pending.append((req.rid, k))
+
+        batch = np.zeros((bsz,) + self._frame_shape, np.float32)
+        while pending:
+            slots: List[Optional[tuple]] = []
+            batch[:] = 0.0                     # padding slots stay zero
+            while pending and len(slots) < bsz:
+                rid, k = pending.popleft()
+                batch[len(slots)] = buffers[rid]["req"].images[k]
+                slots.append((rid, k))
+            t0 = time.perf_counter()
+            lengths = np.asarray(
+                jax.block_until_ready(self.deployed.forward(batch)))
+            dt = time.perf_counter() - t0
+            self._stats.batches += 1
+            self._stats.frames += len(slots)
+            self._stats.padded_frames += bsz - len(slots)
+            self._stats.wall_s += dt
+            now = time.perf_counter()
+            for s, (rid, k) in enumerate(slots):
+                buf = buffers[rid]
+                buf["lengths"][k] = lengths[s]
+                buf["left"] -= 1
+                if buf["left"] == 0:
+                    done.append(ImageCompletion(
+                        rid=rid,
+                        classes=np.argmax(buf["lengths"], -1).astype(
+                            np.int32),
+                        lengths=buf["lengths"],
+                        latency_s=now - self._submit_t.pop(rid)))
+        return done
+
+    def serve(self, requests: List[ImageRequest]) -> List[ImageCompletion]:
+        """Submit all requests and run them to completion."""
+        for r in requests:
+            self.submit(r)
+        return self.run()
+
+    def stats(self) -> EngineStats:
+        return dataclasses.replace(self._stats)

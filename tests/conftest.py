@@ -10,3 +10,10 @@ os.environ.pop("XLA_FLAGS", None)
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_configure(config):
+    # registered in pytest.ini too; kept here so running a test file from
+    # another rootdir still knows the marker
+    config.addinivalue_line(
+        "markers", "slow: long-running test (deselect with -m \"not slow\")")

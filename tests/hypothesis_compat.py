@@ -1,0 +1,42 @@
+"""Graceful hypothesis fallback for the property-based tests.
+
+When ``hypothesis`` is installed this module re-exports ``given``,
+``settings`` and ``strategies as st`` unchanged.  When it is absent (the
+CI image intentionally omits it), the decorators degrade to a runtime
+``pytest.skip`` so the property-based cases *skip* instead of erroring
+the whole module at collection time.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def _stub(*_args, **_kwargs):
+        """Self-returning callable: absorbs strategy construction and
+        ``@st.composite`` decorator chains; values are never drawn."""
+        return _stub
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return _stub
+
+    st = _StrategyStub()

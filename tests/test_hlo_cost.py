@@ -82,8 +82,8 @@ class TestWeightedCost:
 class TestCollectiveParse:
     def test_collective_stats_from_sharded_module(self):
         """A psum over a 1-device mesh still emits an all-reduce op."""
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((1,), ("x",), axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("x",))
 
         def f(a):
             return jax.lax.with_sharding_constraint(

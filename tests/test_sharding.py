@@ -104,15 +104,14 @@ def test_small_mesh_dryrun_subprocess(tmp_path):
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro import configs as cfg_lib
+from repro.launch.mesh import make_mesh, mesh_context
 from repro.models import lm
 from repro.optim import adamw
 from repro.parallel import sharding as shard_lib
 
 cfg = cfg_lib.reduced(cfg_lib.get_config("qwen3-1.7b"))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = shard_lib.rules_for_arch(cfg.arch_id)
 params = lm.param_structs(cfg)
 opt = jax.eval_shape(adamw.init_state, params)
@@ -131,11 +130,13 @@ def step(p, o, b):
         lambda p_: lm.loss_fn(p_, cfg, b), has_aux=True)(p)
     return adamw.apply_updates(p, g, o, ocfg)[:2]
 
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                        out_shardings=(p_sh, o_sh)).lower(
         params, opt, batch).compile()
 ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):     # older jax: one dict per computation
+    ca = ca[0]
 assert ca["flops"] > 0
 print("SUBPROCESS_DRYRUN_OK", ca["flops"])
 """
