@@ -5,13 +5,8 @@ claim STRUCTURE is relative — LAKP <= KP error, gap growing with sparsity).
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
-
 from benchmarks import common as bc
-from repro.core import capsnet as cn
-from repro.core import pruning as pr
+from repro.deploy import FastCapsPipeline
 
 
 def run(quick: bool = True) -> dict:
@@ -27,11 +22,11 @@ def run(quick: bool = True) -> dict:
         for s in sparsities:
             errs = {}
             for method in ("kp", "lakp"):
-                res = pr.prune_capsnet(
-                    params, cfg, s, s, method=method,
-                    finetune_fn=bc.finetune_fn_factory(cfg, data, ft_steps))
-                errs[method] = bc.test_error(res.finetuned_params, cfg,
-                                             data)
+                pipe = FastCapsPipeline(cfg, params=params)
+                pipe.prune(s, s, method=method).finetune(
+                    bc.finetune_fn_factory(cfg, data, ft_steps))
+                # masked-dense (pre-compaction) params score the error
+                errs[method] = bc.test_error(pipe.params, cfg, data)
             gain = (errs["kp"] - errs["lakp"]) / max(errs["kp"], 1e-9) * 100
             rows.append([variant, f"{base_err:.2f}",
                          f"{(1-s)*100:.1f}%", f"{errs['kp']:.2f}",

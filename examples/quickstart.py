@@ -6,10 +6,9 @@
 methodology — ``build() -> prune() -> compact() -> compile()`` — and
 returns an immutable ``DeployedCapsNet``.  Routing variants are typed
 ``RoutingSpec``s resolved through the deploy registry (Pallas interpret
-mode is probed from the backend, never hand-threaded).  The old free
-functions (``capsnet.init/forward`` + ``pruning.prune_capsnet`` +
-``dataclasses.replace(cfg, routing_mode=...)``) remain as deprecated
-wrappers for one cycle.
+mode is probed from the backend, never hand-threaded), and
+``deployed.serve(scheduler=...)`` hands the artifact straight to the
+async serving engine (``repro.serving``).
 """
 
 import jax

@@ -3,6 +3,7 @@ classes).  Paper: pruning keeps 12/32 capsule types (432 capsules),
 compression 98.84%."""
 
 from repro.core.capsnet import CapsNetConfig
+from repro.deploy import RoutingSpec
 
 CONFIG = CapsNetConfig(
     arch_id="capsnet-fmnist",
@@ -14,6 +15,5 @@ CONFIG = CapsNetConfig(
     caps_dim=8,
     digit_dim=16,
     routing_iters=3,
-    routing_mode="reference",
-    softmax_mode="exact",
+    routing=RoutingSpec.reference(),
 )

@@ -4,12 +4,15 @@ Conv1 9x9/256 -> PrimaryCaps 9x9 s2 (32 types x 8D = 1152 capsules) ->
 DigitCaps (10 x 16D, 3 routing iterations) + FC decoder 512/1024/784.
 
 The FastCaps deployment config (pruned + optimized) is derived from this
-via core/pruning.prune_capsnet at the paper's sparsity (conv2 kernels
-pruned until 7/32 capsule types survive -> 252 capsules) with
-routing_mode="pallas", softmax_mode="taylor".
+via ``repro.deploy.FastCapsPipeline`` at the paper's sparsity (conv2
+kernels pruned until 7/32 capsule types survive -> 252 capsules) with the
+typed ``RoutingSpec.pallas(softmax="taylor")`` routing.
 """
 
+import dataclasses as _dc
+
 from repro.core.capsnet import CapsNetConfig
+from repro.deploy import RoutingSpec
 
 CONFIG = CapsNetConfig(
     arch_id="capsnet-mnist",
@@ -21,11 +24,8 @@ CONFIG = CapsNetConfig(
     caps_dim=8,
     digit_dim=16,
     routing_iters=3,
-    routing_mode="reference",
-    softmax_mode="exact",
+    routing=RoutingSpec.reference(),
 )
 
 # FastCaps deployment variant (paper §III-B optimizations on)
-import dataclasses as _dc
-
-OPTIMIZED = _dc.replace(CONFIG, routing_mode="pallas", softmax_mode="taylor")
+OPTIMIZED = _dc.replace(CONFIG, routing=RoutingSpec.pallas(softmax="taylor"))

@@ -44,13 +44,8 @@ class CapsNetConfig:
     caps_stride: int = 2
     digit_dim: int = 16           # DigitCaps dimension
     routing_iters: int = 3
-    # Typed routing spec (repro.deploy) — the canonical way to select a
-    # variant.  The string fields below are the legacy path, kept for one
-    # deprecation cycle; ``routing`` wins when set.
+    # Typed routing spec (repro.deploy); None means the reference variant.
     routing: Optional[RoutingSpec] = None
-    routing_mode: str = "reference"   # legacy: reference | optimized | pallas
-    softmax_mode: str = "exact"       # legacy: exact | taylor (paper Eq. 2)
-    use_div_exp_log: bool = False     # legacy: paper Eq. 3
     decoder_hidden: Tuple[int, int] = (512, 1024)
     recon_weight: float = 0.0005
     param_dtype: str = "float32"
@@ -79,12 +74,10 @@ class CapsNetConfig:
         return jnp.dtype(self.param_dtype)
 
     def routing_spec(self) -> RoutingSpec:
-        """The effective RoutingSpec: the typed field if set, else the
-        legacy string fields lifted into a spec."""
+        """The effective RoutingSpec (reference routing when unset)."""
         if self.routing is not None:
             return self.routing
-        return RoutingSpec(mode=self.routing_mode, softmax=self.softmax_mode,
-                           div_exp_log=self.use_div_exp_log)
+        return RoutingSpec.reference()
 
 
 # ---------------------------------------------------------------------------

@@ -10,33 +10,20 @@ The same pipeline generalizes to LM architectures (DESIGN.md §5): FFN hidden
 blocks, attention-head blocks and MoE experts are pruned with
 ``lakp.prune_blocks`` and compacted with ``lakp.compact_blocks``.
 
-The canonical CapsNet entry point is now ``repro.deploy.FastCapsPipeline``;
-``prune_capsnet`` here is a thin delegating wrapper kept for one
-deprecation cycle.
+The canonical CapsNet entry point is ``repro.deploy.FastCapsPipeline``
+(the former ``prune_capsnet`` free function completed its deprecation
+cycle and is gone); this module keeps the optimizer-facing mask helper
+and the LM-substrate structured pruning.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import capsnet as capsnet_lib
 from repro.core import lakp as lakp_lib
-
-
-@dataclasses.dataclass
-class PrunePipelineResult:
-    masked_params: Dict[str, Any]
-    finetuned_params: Optional[Dict[str, Any]]
-    compact_params: Dict[str, Any]
-    compact_cfg: capsnet_lib.CapsNetConfig
-    index: Dict[str, jax.Array]
-    masks: Tuple[jax.Array, jax.Array]
-    compression: float
-    index_overhead_frac: float
 
 
 def mask_gradients(grads: Dict[str, Any], masks) -> Dict[str, Any]:
@@ -48,56 +35,6 @@ def mask_gradients(grads: Dict[str, Any], masks) -> Dict[str, Any]:
     out["conv1"]["w"] = lakp_lib.apply_kernel_mask(grads["conv1"]["w"], m1)
     out["conv2"]["w"] = lakp_lib.apply_kernel_mask(grads["conv2"]["w"], m2)
     return out
-
-
-def prune_capsnet(
-    params: Dict[str, Any],
-    cfg: capsnet_lib.CapsNetConfig,
-    sparsity_conv1: float,
-    sparsity_conv2: float,
-    method: str = "lakp",
-    norm: str = "l1",
-    type_keep: Optional[int] = None,
-    finetune_fn: Optional[Callable[[Dict[str, Any], Any], Dict[str, Any]]] = None,
-) -> PrunePipelineResult:
-    """DEPRECATED thin wrapper over :class:`repro.deploy.FastCapsPipeline`.
-
-    Runs the full Fig. 6 pipeline on a trained CapsNet; prefer driving the
-    pipeline object directly (it also yields the compiled deployment
-    artifact).  Kept for one deprecation cycle.
-
-    ``type_keep`` passes through to the capsule-type elimination step
-    (paper: 7 on MNIST, 12 on F-MNIST).  ``finetune_fn(masked_params,
-    masks) -> params`` is injected by the trainer (keeps this module free
-    of the optimizer); None skips fine-tuning (shape-level tests).
-    """
-    import warnings
-
-    from repro.deploy.pipeline import FastCapsPipeline
-
-    warnings.warn(
-        "repro.core.pruning.prune_capsnet is deprecated; drive "
-        "repro.deploy.FastCapsPipeline directly", DeprecationWarning,
-        stacklevel=2)
-
-    pipe = FastCapsPipeline(cfg, params=params)
-    pipe.prune(sparsity_conv1, sparsity_conv2, method=method, norm=norm,
-               type_keep=type_keep)
-    masked = pipe.params
-    tuned = None
-    if finetune_fn is not None:
-        tuned = pipe.finetune(finetune_fn).params
-    pipe.compact()
-    return PrunePipelineResult(
-        masked_params=masked,
-        finetuned_params=tuned,
-        compact_params=pipe.params,
-        compact_cfg=pipe.cfg,
-        index=pipe.index,
-        masks=pipe.masks,
-        compression=pipe.compression,
-        index_overhead_frac=pipe.index_overhead_frac,
-    )
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,10 @@ Algorithm (r iterations, r=3 in the paper):
         v_j  = squash(s_j)                                      (Squash step)
         b_ij += <u_hat_ij, v_j>                                 (Agreement step)
 
+Variant selection lives in ``repro.deploy``: build a typed
+``RoutingSpec`` and ``resolve()`` it through the registry; the free
+functions below are the registered implementations.
+
 Variants (``mode``):
   * ``reference``  — exact softmax/div, einsum contractions; the oracle.
   * ``optimized``  — the FastCaps §III-B simplifications mapped to TPU:
@@ -106,27 +110,6 @@ def route_pallas(u_hat: jax.Array, n_iters: int = 3,
     return routing_ops.fused_routing(
         u_hat, n_iters=n_iters, softmax_mode=softmax_mode,
         interpret=interpret)
-
-
-def route(u_hat: jax.Array, n_iters: int = 3, mode: str = "reference",
-          softmax_mode: str = "exact", use_div_exp_log: bool = False,
-          interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
-    """DEPRECATED thin wrapper over the ``repro.deploy`` routing registry.
-
-    Build a :class:`repro.deploy.RoutingSpec` and ``resolve`` it instead;
-    this shim survives one deprecation cycle.
-    """
-    import warnings
-
-    from repro.deploy.registry import RoutingSpec, resolve
-
-    warnings.warn(
-        "repro.core.routing.route(mode=...) is deprecated; use "
-        "repro.deploy.RoutingSpec + resolve()", DeprecationWarning,
-        stacklevel=2)
-    spec = RoutingSpec(mode=mode, softmax=softmax_mode,
-                       div_exp_log=use_div_exp_log, interpret=interpret)
-    return resolve(spec)(u_hat, n_iters=n_iters)
 
 
 def routing_flops(bsz: int, n_in: int, n_out: int, d: int, n_iters: int = 3

@@ -8,11 +8,13 @@
     (``build() -> prune() -> finetune() -> compact() -> compile()``)
     producing an immutable :class:`DeployedCapsNet`;
   * :class:`repro.serving.CapsuleEngine` consumes the deployed model for
-    batched, FPS-measured image serving.
+    batched, FPS-measured image serving — ``deployed.serve(scheduler=...)``
+    wires the Fig. 6 pipeline straight into the async serving engine.
 
-The old free functions (``core.routing.route``, ``core.pruning
-.prune_capsnet``) remain as thin delegating wrappers for one deprecation
-cycle.
+The old free functions (``core.routing.route``,
+``core.pruning.prune_capsnet``) and the stringly ``routing_mode=`` /
+``softmax_mode=`` config fields completed their deprecation cycle and are
+gone; typed :class:`RoutingSpec` is the only routing selection path.
 """
 
 from repro.deploy.registry import (RoutingRegistry, RoutingSpec,  # noqa: F401

@@ -9,7 +9,9 @@
 ``compile`` returns an immutable :class:`DeployedCapsNet`: config + params
 frozen together with a jitted fixed-signature forward, parameter/FLOP
 accounting, and a checkpoint hook — the artifact
-:class:`repro.serving.CapsuleEngine` serves.
+:class:`repro.serving.CapsuleEngine` serves.  ``deployed.serve(
+scheduler=...)`` wraps it in that engine directly, so the Fig. 6 pipeline
+flows into SLO-scheduled serving in one chain.
 
 Stages are enforced in order (``prune`` before ``compact``; ``compact``
 before a second ``prune``), matching the one-way arrows of Fig. 6; every
@@ -72,6 +74,18 @@ class DeployedCapsNet:
     def classify(self, images: jax.Array) -> jax.Array:
         """images -> predicted class ids (B,)."""
         return jnp.argmax(self.forward(images), axis=-1)
+
+    def serve(self, batch_size: int = 32, scheduler: Any = None):
+        """Wrap this artifact in a :class:`repro.serving.CapsuleEngine`
+        so the Fig. 6 pipeline flows straight into serving:
+
+            engine = pipe.compile(routing="pallas").serve(
+                scheduler=SLOBatchScheduler(target_p95_ms=20))
+        """
+        from repro.serving import CapsuleEngine
+
+        return CapsuleEngine(self, batch_size=batch_size,
+                             scheduler=scheduler)
 
     def save(self, directory: str, step: int = 0) -> str:
         """Checkpoint the params (atomic publish) + a deploy manifest."""

@@ -1,25 +1,33 @@
-"""Serving launcher: LM decode or batched CapsNet image inference.
+"""Serving launcher: LM decode or batched CapsNet image inference, both
+through the unified ``repro.serving`` engine API
+(``submit() / poll() / run_until_idle() / stats()``).
 
-    # LM: batched prefill + decode demo on a reduced config
+    # LM: continuous-batching ragged prefill + decode on a reduced config
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --requests 6 --max-new 12
 
-    # CapsNet: FastCapsPipeline -> CapsuleEngine, FPS report (paper Fig. 1)
+    # CapsNet: FastCapsPipeline -> DeployedCapsNet.serve(), FPS report
     PYTHONPATH=src python -m repro.launch.serve --arch capsnet-mnist \
-        --requests 8 --batch 16 --routing pallas
+        --requests 8 --batch 16 --routing pallas --scheduler slo --slo-ms 50
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro import configs as cfg_lib
 from repro.models import lm
-from repro.serving import CapsuleEngine, ImageRequest, Request, ServeEngine
+from repro.serving import (FIFOScheduler, ImageRequest, Request,
+                           ServeEngine, SLOBatchScheduler)
+
+
+def _make_scheduler(args):
+    if args.scheduler == "slo":
+        return SLOBatchScheduler(target_p95_ms=args.slo_ms)
+    return FIFOScheduler()
 
 
 def serve_lm(args) -> None:
@@ -30,23 +38,23 @@ def serve_lm(args) -> None:
         raise SystemExit("encoder-only arch has no decode path")
     params = lm.init(cfg, jax.random.key(0))
     engine = ServeEngine(cfg, params, n_slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len,
+                         scheduler=_make_scheduler(args))
     rng = np.random.RandomState(0)
     reqs = [Request(prompt=list(rng.randint(1, cfg.vocab // 2,
                                             size=rng.randint(3, 9))),
                     max_new_tokens=args.max_new, rid=i)
             for i in range(args.requests)]
-    prompt_len = {r.rid: len(r.prompt) for r in reqs}
-    t0 = time.time()
     completions = engine.serve(reqs)
-    dt = time.time() - t0
-    # Completion.tokens includes the prompt; report only generated tokens.
-    total_new = sum(len(c.tokens) - prompt_len[c.rid] for c in completions)
-    print(f"[{cfg.arch_id}] served {len(completions)} requests "
-          f"({total_new} new tokens) in {dt:.2f}s "
-          f"({total_new / max(dt, 1e-9):.1f} tok/s)")
+    stats = engine.stats()
+    # Completion.tokens includes the prompt; stats count generated tokens.
+    print(f"[{cfg.arch_id}] served {stats.completed} requests "
+          f"({stats.items} new tokens) in {stats.wall_s:.2f}s "
+          f"({stats.throughput:.1f} tok/s, "
+          f"{stats.ms_per_tick:.1f} ms/tick)")
     for c in sorted(completions, key=lambda c: c.rid):
-        print(f"  rid={c.rid}: {c.tokens}")
+        print(f"  rid={c.rid}: latency={c.latency_s * 1e3:.0f} ms "
+              f"{c.tokens}")
 
 
 def serve_capsnet(args) -> None:
@@ -66,20 +74,21 @@ def serve_capsnet(args) -> None:
           f"{deployed.n_params:,} params, "
           f"{deployed.flops_per_image / 1e6:.1f} MFLOP/image")
 
-    engine = CapsuleEngine(deployed, batch_size=args.batch)
+    engine = deployed.serve(batch_size=args.batch,
+                            scheduler=_make_scheduler(args))
     engine.warmup()
     rng = np.random.RandomState(0)
-    reqs = [ImageRequest(
-                images=rng.rand(rng.randint(1, 2 * args.batch),
-                                cfg.image_hw, cfg.image_hw,
-                                cfg.in_channels).astype(np.float32),
-                rid=i)
-            for i in range(args.requests)]
-    completions = engine.serve(reqs)
+    for i in range(args.requests):
+        engine.submit(ImageRequest(
+            images=rng.rand(rng.randint(1, 2 * args.batch),
+                            cfg.image_hw, cfg.image_hw,
+                            cfg.in_channels).astype(np.float32),
+            rid=i))
+    completions = engine.run_until_idle()
     stats = engine.stats()
-    print(f"  served {len(completions)} requests / {stats.frames} frames "
-          f"in {stats.batches} batches ({stats.padded_frames} pad): "
-          f"{stats.fps:.1f} FPS, {stats.ms_per_batch:.2f} ms/batch")
+    print(f"  served {stats.completed} requests / {stats.frames} frames "
+          f"in {stats.batches} ticks ({stats.padded_frames} pad): "
+          f"{stats.fps:.1f} FPS, {stats.ms_per_batch:.2f} ms/tick")
     for c in sorted(completions, key=lambda c: c.rid):
         print(f"  rid={c.rid}: {len(c.classes)} frames, "
               f"latency={c.latency_s * 1e3:.1f} ms, "
@@ -95,13 +104,17 @@ def main():
                     help="CPU-smoke-sized config (--no-reduced for the "
                          "published size)")
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--scheduler", default="fifo", choices=["fifo", "slo"],
+                    help="tick scheduler (slo adapts batch to --slo-ms)")
+    ap.add_argument("--slo-ms", type=float, default=100.0,
+                    help="SLO scheduler p95 tick-latency target")
     # LM options
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
     # CapsNet options
     ap.add_argument("--batch", type=int, default=16,
-                    help="CapsuleEngine micro-batch size")
+                    help="CapsuleEngine capacity (max frames per tick)")
     ap.add_argument("--routing", default="pallas",
                     choices=["reference", "optimized", "pallas"])
     ap.add_argument("--sparsity", type=float, default=0.6,

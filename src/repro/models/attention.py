@@ -246,11 +246,22 @@ def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
         new_cache = {"k": ck, "v": cv}
     else:  # decode one token
         idx = cache_index if cache_index is not None else positions[:, 0].max()
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
-        valid = jnp.full((x.shape[0],), idx + 1, jnp.int32)
+        if getattr(idx, "ndim", 0) == 1:
+            # per-slot cache indices (B,): ragged continuous batching —
+            # each slot writes its own row and attends its own prefix
+            b = x.shape[0]
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, idx].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, idx].set(
+                v[:, 0].astype(cache["v"].dtype))
+            valid = idx.astype(jnp.int32) + 1
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            valid = jnp.full((x.shape[0],), idx + 1, jnp.int32)
         out = _inner_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
                                causal=False, kv_valid_len=valid)
         new_cache = {"k": ck, "v": cv}

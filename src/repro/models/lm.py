@@ -246,7 +246,11 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
     if "positions" in batch:
         positions = batch["positions"]
     elif cache_index is not None:
-        positions = jnp.full((x.shape[0], s), 0, jnp.int32) + cache_index
+        ci = jnp.asarray(cache_index, jnp.int32)
+        if ci.ndim == 1:                 # per-slot decode positions (B,)
+            positions = jnp.broadcast_to(ci[:, None], (x.shape[0], s))
+        else:
+            positions = jnp.full((x.shape[0], s), 0, jnp.int32) + ci
     else:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
                                      (x.shape[0], s))
@@ -437,10 +441,45 @@ def prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
 def decode_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
                 caches: Dict[str, Any]
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One-token decode.  batch: tokens (B,1), pos scalar int32."""
+    """One-token decode.  batch: tokens (B,1), pos scalar or (B,) int32.
+
+    A vector ``pos`` gives every slot its own cache index (ragged
+    continuous batching); a scalar keeps the uniform-tick behaviour.
+    """
     x, new_caches, _ = forward(params, cfg, batch, caches,
                                cache_index=batch["pos"])
     logits = common.unembed(params["embed"], cfg, x[:, -1:, :])
+    return logits[:, 0], new_caches
+
+
+def ragged_prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
+                        caches: Dict[str, Any]
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill right-padded ragged prompts in one batched forward.
+
+    ``batch``: ``tokens`` (B, S) left-aligned with a zero pad *suffix*,
+    ``lengths`` (B,) real prompt lengths.  Positions are 0..S-1 per slot
+    and the causal mask keeps every real token from attending the pad
+    suffix, so dense/vlm families are exact; moe is exact up to GShard
+    expert-capacity effects (capacity derives from the padded length S).
+    Recurrent families (ssm/hybrid) fold the pad suffix into their state —
+    the same approximation the uniform-length engine made; keep their
+    prompts uniform when exactness matters.
+
+    Returns per-slot logits at each prompt's final *real* token and the
+    updated caches.  Cache rows at indices >= length hold pad garbage; the
+    vector-``pos`` decode path masks them via per-slot valid lengths.
+    """
+    tokens, lengths = batch["tokens"], batch["lengths"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    fwd_batch = dict(batch, positions=positions)
+    fwd_batch.pop("lengths")
+    x, new_caches, _ = forward(params, cfg, fwd_batch, caches)
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, s - 1)
+    last = x[jnp.arange(b), idx]                    # (B, d)
+    logits = common.unembed(params["embed"], cfg, last[:, None, :])
     return logits[:, 0], new_caches
 
 

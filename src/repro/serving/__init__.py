@@ -1,4 +1,19 @@
+"""``repro.serving`` — the unified async serving engine API.
+
+One :class:`EngineCore` owns slot state, fixed-shape jitted ticks and
+cumulative stats; pluggable :class:`Scheduler`s decide admission, batch
+shape and device placement; :class:`CapsuleEngine` (CapsNet image frames,
+the paper's Fig. 1 workload) and :class:`ServeEngine` (LM decode) are thin
+workload adapters sharing the ``submit() / poll() / run_until_idle() /
+stats()`` surface with true async admission.
+"""
+
 from repro.serving.capsule_engine import (CapsuleEngine,  # noqa: F401
-                                          EngineStats, ImageCompletion,
-                                          ImageRequest)
+                                          ImageCompletion, ImageRequest)
+from repro.serving.core import (EngineCore, EngineStats,  # noqa: F401
+                                SlotTask)
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401
+from repro.serving.schedulers import (FIFOScheduler,  # noqa: F401
+                                      Scheduler, ShardedScheduler,
+                                      SLOBatchScheduler, TickRecord,
+                                      pow2_bucket)

@@ -1,29 +1,37 @@
-"""CapsuleEngine: batched CapsNet image serving (the ServeEngine analogue).
+"""CapsuleEngine: batched CapsNet image serving over the shared EngineCore.
 
 The paper's throughput story (Fig. 1: 82 -> 1351 FPS) is a *served*
-workload, not a bare jit loop.  This engine serves image-classification
+workload, not a bare jit loop.  This adapter serves image-classification
 requests through one fixed-shape jitted forward:
 
-* **Request queue** — requests carry a ragged number of frames; the engine
-  flattens them into a frame queue.
-* **Slot recycling / padding-to-batch** — every tick packs exactly
-  ``batch_size`` frame slots: frames from different requests share a batch
-  (recycling slots freed by completed requests), and the final partial
-  batch is zero-padded so the compiled executable never changes shape
-  (the same shape-stability posture as ``ServeEngine``'s decode step).
-* **FPS / latency stats** — cumulative frames, batches, padding waste and
+* **Request expansion** — requests carry a ragged number of frames; each
+  frame becomes one slot task, so frames from different requests share a
+  tick's batch (slot recycling).
+* **Scheduler-shaped batches** — every tick packs the occupied slots into
+  a batch whose size the scheduler chose: the FIFO scheduler always runs
+  the one full-capacity executable (zero-padding the tail), the SLO
+  scheduler shrinks/grows power-of-two buckets against a p95 target, and
+  the sharded scheduler places the batch across a mesh.
+* **Async admission** — ``submit()`` is thread-safe and non-blocking;
+  frames submitted while a tick is in flight join the next tick.
+* **FPS / latency stats** — cumulative frames, ticks, padding waste and
   wall-clock, plus per-request latency from submit to completion.
+
+``engine = deployed.serve(scheduler=...)`` (on a
+:class:`repro.deploy.DeployedCapsNet`) is the canonical way in.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.serving.core import EngineCore, EngineStats, SlotTask  # noqa: F401
+from repro.serving.schedulers import Scheduler
 
 
 @dataclasses.dataclass
@@ -45,131 +53,65 @@ class ImageCompletion:
     latency_s: float                  # submit -> completion wall-clock
 
 
-@dataclasses.dataclass
-class EngineStats:
-    """Cumulative over the engine's lifetime (monotone non-decreasing)."""
-
-    frames: int = 0                   # real frames served
-    padded_frames: int = 0            # zero-pad waste
-    batches: int = 0
-    wall_s: float = 0.0               # time spent in forward ticks
-
-    @property
-    def fps(self) -> float:
-        return self.frames / self.wall_s if self.wall_s > 0 else 0.0
-
-    @property
-    def ms_per_batch(self) -> float:
-        return 1e3 * self.wall_s / self.batches if self.batches else 0.0
-
-
-class CapsuleEngine:
+class CapsuleEngine(EngineCore):
     """Fixed-shape micro-batched inference over a :class:`DeployedCapsNet`.
 
     ``deployed`` is any object with ``cfg`` (a CapsNetConfig) and
     ``forward(images) -> lengths`` — in practice the artifact returned by
-    ``FastCapsPipeline.compile``.
+    ``FastCapsPipeline.compile``.  ``batch_size`` is the engine capacity
+    (max frames per tick); the scheduler decides how much of it each tick
+    actually uses.
     """
 
-    def __init__(self, deployed: Any, batch_size: int = 32):
+    def __init__(self, deployed: Any, batch_size: int = 32,
+                 scheduler: Optional[Scheduler] = None,
+                 clock=time.perf_counter):
         self.deployed = deployed
         self.batch_size = batch_size
         cfg = deployed.cfg
         self._frame_shape = (cfg.image_hw, cfg.image_hw, cfg.in_channels)
-        self._queue: Deque[ImageRequest] = deque()
-        self._submit_t: Dict[int, float] = {}
-        self._stats = EngineStats()
-        self._next_rid = 0
+        self._n_classes = cfg.n_classes
+        super().__init__(capacity=batch_size, scheduler=scheduler,
+                         clock=clock)
 
-    # -- request intake ----------------------------------------------------
+    # -- workload hooks ----------------------------------------------------
 
-    def submit(self, request: ImageRequest) -> int:
-        """Enqueue one request; returns its rid (assigned if unset)."""
+    def _expand(self, request: ImageRequest
+                ) -> Tuple[List[SlotTask], Dict[str, Any]]:
         imgs = np.asarray(request.images, np.float32)
         if imgs.ndim != 4 or imgs.shape[1:] != self._frame_shape:
             raise ValueError(
                 f"request images must be (n,) + {self._frame_shape}, got "
                 f"{imgs.shape}")
-        if request.rid is None:
-            request.rid = self._next_rid
-            self._next_rid += 1
-        elif request.rid >= self._next_rid:
-            self._next_rid = request.rid + 1     # keep auto ids collision-free
-        if request.rid in self._submit_t:
-            raise ValueError(f"duplicate rid {request.rid}")
         request.images = imgs
-        self._queue.append(request)
-        self._submit_t[request.rid] = time.perf_counter()
-        return request.rid
+        n = imgs.shape[0]
+        state = {"lengths": np.zeros((n, self._n_classes), np.float32)}
+        return [SlotTask(payload=(k, imgs[k])) for k in range(n)], state
 
-    def warmup(self) -> None:
-        """Compile the fixed-shape executable outside the measured path."""
-        dummy = np.zeros((self.batch_size,) + self._frame_shape, np.float32)
-        jax.block_until_ready(self.deployed.forward(dummy))
+    def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
+              ) -> Tuple[List[int], int]:
+        batch = np.zeros((n_batch,) + self._frame_shape, np.float32)
+        for i, (_, task) in enumerate(active):
+            batch[i] = task.payload[1]
+        lengths = np.asarray(jax.block_until_ready(
+            self.deployed.forward(self.scheduler.place(batch))))
+        for i, (_, task) in enumerate(active):
+            k = task.payload[0]
+            self._requests[task.rid].state["lengths"][k] = lengths[i]
+        return [s for s, _ in active], len(active)
 
-    # -- serving loop ------------------------------------------------------
+    def _finalize(self, entry, latency_s: float) -> ImageCompletion:
+        buf = entry.state["lengths"]
+        return ImageCompletion(
+            rid=entry.request.rid,
+            classes=np.argmax(buf, -1).astype(np.int32),
+            lengths=buf,
+            latency_s=latency_s)
 
-    def run(self) -> List[ImageCompletion]:
-        """Drain the queue; returns completions in completion order."""
-        bsz = self.batch_size
-        # flatten requests into (request, frame_index) slots
-        pending: Deque[tuple] = deque()
-        buffers: Dict[int, Dict[str, Any]] = {}
-        done: List[ImageCompletion] = []
-        while self._queue:
-            req = self._queue.popleft()
-            n = req.images.shape[0]
-            if n == 0:                        # empty request: complete now
-                done.append(ImageCompletion(
-                    rid=req.rid,
-                    classes=np.zeros((0,), np.int32),
-                    lengths=np.zeros((0, self.deployed.cfg.n_classes),
-                                     np.float32),
-                    latency_s=time.perf_counter()
-                    - self._submit_t.pop(req.rid)))
-                continue
-            buffers[req.rid] = {
-                "req": req, "left": n,
-                "lengths": np.zeros((n, self.deployed.cfg.n_classes),
-                                    np.float32)}
-            for k in range(n):
-                pending.append((req.rid, k))
-
-        batch = np.zeros((bsz,) + self._frame_shape, np.float32)
-        while pending:
-            slots: List[Optional[tuple]] = []
-            batch[:] = 0.0                     # padding slots stay zero
-            while pending and len(slots) < bsz:
-                rid, k = pending.popleft()
-                batch[len(slots)] = buffers[rid]["req"].images[k]
-                slots.append((rid, k))
-            t0 = time.perf_counter()
-            lengths = np.asarray(
-                jax.block_until_ready(self.deployed.forward(batch)))
-            dt = time.perf_counter() - t0
-            self._stats.batches += 1
-            self._stats.frames += len(slots)
-            self._stats.padded_frames += bsz - len(slots)
-            self._stats.wall_s += dt
-            now = time.perf_counter()
-            for s, (rid, k) in enumerate(slots):
-                buf = buffers[rid]
-                buf["lengths"][k] = lengths[s]
-                buf["left"] -= 1
-                if buf["left"] == 0:
-                    done.append(ImageCompletion(
-                        rid=rid,
-                        classes=np.argmax(buf["lengths"], -1).astype(
-                            np.int32),
-                        lengths=buf["lengths"],
-                        latency_s=now - self._submit_t.pop(rid)))
-        return done
-
-    def serve(self, requests: List[ImageRequest]) -> List[ImageCompletion]:
-        """Submit all requests and run them to completion."""
-        for r in requests:
-            self.submit(r)
-        return self.run()
-
-    def stats(self) -> EngineStats:
-        return dataclasses.replace(self._stats)
+    def _warmup(self) -> None:
+        # compile every batch shape the scheduler can emit, so no tick
+        # (and no SLO latency observation) pays compile time
+        for n in self.scheduler.shapes(self.capacity):
+            dummy = np.zeros((n,) + self._frame_shape, np.float32)
+            jax.block_until_ready(
+                self.deployed.forward(self.scheduler.place(dummy)))

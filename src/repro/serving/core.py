@@ -1,0 +1,285 @@
+"""EngineCore: the one serving loop every workload adapter shares.
+
+The paper's Fig. 1 numbers are *served* throughput, so serving is a
+first-class API, not a demo loop.  ``EngineCore`` owns everything that is
+workload-independent about a slot-based, fixed-shape inference engine:
+
+  * **slot state** — ``capacity`` slots, each holding one
+    :class:`SlotTask`; a request expands into one or more tasks (CapsNet:
+    one per frame; LM: one per sequence) that occupy a slot from admission
+    until completion;
+  * **async admission** — ``submit()`` only touches the queue under a
+    lock, so requests can arrive from other threads (or from callbacks
+    fired mid-tick) while a tick is in flight; the next tick picks them
+    up;
+  * **the tick** — admit up to ``scheduler.plan()`` tasks, let the
+    workload prefill/step a schedulable, fixed-shape batch, then retire
+    finished slots and emit completions;
+  * **cumulative stats** — monotone counters (items, padding waste,
+    ticks, wall-clock, completed requests) shared by every workload.
+
+Workload adapters (:class:`repro.serving.CapsuleEngine`,
+:class:`repro.serving.ServeEngine`) subclass this and implement four
+hooks — ``_expand`` / ``_admit`` / ``_step`` / ``_finalize`` — giving both
+image serving and LM decode the same
+``submit() / poll() / run_until_idle() / stats()`` surface.
+
+Scheduling (effective batch size, compiled shape, device placement) is
+delegated to a pluggable :class:`repro.serving.Scheduler`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.serving.schedulers import FIFOScheduler, Scheduler, TickRecord
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative over the engine's lifetime (monotone non-decreasing).
+
+    ``items`` are workload units: frames for the image workload, generated
+    tokens for LM decode.  The ``frames``/``batches`` aliases keep the
+    image-serving vocabulary of the original CapsuleEngine stats.
+    """
+
+    items: int = 0                    # real work units served
+    padded: int = 0                   # zero-pad slot waste
+    ticks: int = 0                    # engine ticks that did work
+    wall_s: float = 0.0               # time spent in admit+step
+    completed: int = 0                # requests fully served
+
+    @property
+    def throughput(self) -> float:
+        """Items (frames / tokens) per second of engine wall-clock."""
+        return self.items / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def ms_per_tick(self) -> float:
+        return 1e3 * self.wall_s / self.ticks if self.ticks else 0.0
+
+    # image-serving aliases (Fig. 1 vocabulary)
+    fps = throughput
+    frames = property(lambda self: self.items)
+    padded_frames = property(lambda self: self.padded)
+    batches = property(lambda self: self.ticks)
+    ms_per_batch = ms_per_tick
+
+
+@dataclasses.dataclass
+class SlotTask:
+    """One schedulable unit of a request (a frame, or a whole sequence)."""
+
+    payload: Any                      # workload-specific immutable input
+    rid: int = -1                     # owning request id (set at submit)
+    state: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _RequestEntry:
+    request: Any
+    tasks: List[SlotTask]
+    state: Dict[str, Any]
+    left: int
+    t0: float
+
+
+class EngineCore:
+    """Slot engine skeleton; subclass and implement the workload hooks.
+
+    Hooks (called with the tick lock *released*, single ticker at a time):
+
+      * ``_expand(request) -> (tasks, request_state)`` — validate and
+        split a request into :class:`SlotTask`s (may raise ``ValueError``);
+      * ``_admit(new) -> (finished_slot_ids, items)`` — react to tasks
+        newly placed in slots (LM: ragged batched prefill);
+      * ``_step(active, n_batch) -> (finished_slot_ids, items)`` — run one
+        fixed-shape tick over the occupied slots;
+      * ``_finalize(entry, latency_s) -> completion`` — build the
+        completion object once all of a request's tasks finished;
+      * ``_batch_for(n_active) -> int`` — compiled batch for this tick
+        (defaults to ``scheduler.quantize``; fixed-cache workloads
+        override to capacity);
+      * ``_warmup()`` — optional eager compile outside the measured path.
+
+    ``clock`` is injectable so schedulers can be tested against a
+    deterministic time source.
+    """
+
+    def __init__(self, capacity: int, scheduler: Optional[Scheduler] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.scheduler = scheduler or FIFOScheduler()
+        self.scheduler.bind(self)
+        self._clock = clock
+        self._slots: List[Optional[SlotTask]] = [None] * self.capacity
+        self._queue: Deque[SlotTask] = deque()
+        self._requests: Dict[int, _RequestEntry] = {}
+        self._completions: Deque[Any] = deque()
+        self._stats = EngineStats()
+        self._next_rid = 0
+        self._lock = threading.Lock()          # queue / requests / stats
+        self._tick_lock = threading.Lock()     # one ticker at a time
+
+    # -- workload hooks ----------------------------------------------------
+
+    def _expand(self, request: Any) -> Tuple[List[SlotTask], Dict[str, Any]]:
+        raise NotImplementedError
+
+    def _admit(self, new: List[Tuple[int, SlotTask]]
+               ) -> Tuple[List[int], int]:
+        return [], 0
+
+    def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
+              ) -> Tuple[List[int], int]:
+        raise NotImplementedError
+
+    def _finalize(self, entry: _RequestEntry, latency_s: float) -> Any:
+        raise NotImplementedError
+
+    def _batch_for(self, n_active: int) -> int:
+        return self.scheduler.quantize(n_active, self.capacity)
+
+    def _warmup(self) -> None:
+        pass
+
+    # -- shared surface ----------------------------------------------------
+
+    def submit(self, request: Any) -> int:
+        """Enqueue one request (thread-safe, non-blocking); returns its rid.
+
+        ``request.rid`` is assigned when ``None``; explicit rids must be
+        unique among in-flight requests (completed rids may be reused).
+        Zero-task requests complete immediately.
+        """
+        tasks, state = self._expand(request)
+        with self._lock:
+            rid = getattr(request, "rid", None)
+            if rid is None:
+                rid = self._next_rid
+                self._next_rid += 1
+            elif rid >= self._next_rid:
+                self._next_rid = rid + 1   # keep auto ids collision-free
+            if rid in self._requests:
+                raise ValueError(f"duplicate rid {rid}")
+            request.rid = rid
+            for t in tasks:
+                t.rid = rid
+            entry = _RequestEntry(request=request, tasks=tasks, state=state,
+                                  left=len(tasks), t0=self._clock())
+            if not tasks:
+                self._completions.append(
+                    self._finalize(entry, max(self._clock() - entry.t0, 0.0)))
+                self._stats.completed += 1
+            else:
+                self._requests[rid] = entry
+                self._queue.extend(tasks)
+        return rid
+
+    def poll(self) -> List[Any]:
+        """Drain and return the completions ready so far (non-blocking)."""
+        out = []
+        with self._lock:
+            while self._completions:
+                out.append(self._completions.popleft())
+        return out
+
+    def tick(self) -> bool:
+        """One engine step: admit, run, retire.  Returns False when idle."""
+        with self._tick_lock:
+            with self._lock:
+                n_active = sum(s is not None for s in self._slots)
+                plan = self.scheduler.plan(len(self._queue), n_active)
+                plan = max(1, min(int(plan), self.capacity))
+                new: List[Tuple[int, SlotTask]] = []
+                for s in range(self.capacity):
+                    if n_active >= plan or not self._queue:
+                        break
+                    if self._slots[s] is None:
+                        task = self._queue.popleft()
+                        self._slots[s] = task
+                        new.append((s, task))
+                        n_active += 1
+                active = [(s, t) for s, t in enumerate(self._slots)
+                          if t is not None]
+            if not active:
+                return False
+
+            t0 = self._clock()
+            finished: List[int] = []
+            items = 0
+            if new:
+                f, i = self._admit(new)
+                finished += f
+                items += i
+            done = set(finished)
+            still = [(s, t) for s, t in active if s not in done]
+            n_batch = 0
+            if still:
+                n_batch = max(len(still),
+                              min(self._batch_for(len(still)), self.capacity))
+                f, i = self._step(still, n_batch)
+                finished += f
+                items += i
+            wall = max(self._clock() - t0, 0.0)
+
+            with self._lock:
+                st = self._stats
+                st.ticks += 1
+                st.items += items
+                st.padded += max(n_batch - len(still), 0)
+                st.wall_s += wall
+                now = self._clock()
+                for s in finished:
+                    task = self._slots[s]
+                    self._slots[s] = None
+                    entry = self._requests[task.rid]
+                    entry.left -= 1
+                    if entry.left == 0:
+                        del self._requests[task.rid]
+                        self._completions.append(
+                            self._finalize(entry, max(now - entry.t0, 0.0)))
+                        st.completed += 1
+            self.scheduler.observe(
+                TickRecord(n_active=len(still), n_batch=n_batch, wall_s=wall))
+            return True
+
+    def run_until_idle(self) -> List[Any]:
+        """Tick until queue and slots drain; returns the completions
+        ready at exit.  Submissions made while running — from other
+        threads or mid-tick callbacks — are served as long as they land
+        before the engine observes an empty queue; a submit racing that
+        final check stays queued for the next run/tick."""
+        while True:
+            if self.tick():
+                continue
+            if self.n_pending == 0:
+                return self.poll()
+
+    def serve(self, requests: List[Any]) -> List[Any]:
+        """Submit all requests and run them to completion."""
+        for r in requests:
+            self.submit(r)
+        return self.run_until_idle()
+
+    def warmup(self) -> None:
+        """Compile the tick executables outside the measured path."""
+        self._warmup()
+
+    def stats(self) -> EngineStats:
+        with self._lock:
+            return dataclasses.replace(self._stats)
+
+    @property
+    def n_pending(self) -> int:
+        """Queued tasks + occupied slots (0 means the engine is idle)."""
+        with self._lock:
+            return len(self._queue) + sum(
+                s is not None for s in self._slots)

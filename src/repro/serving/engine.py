@@ -1,20 +1,33 @@
-"""Serving engine: KV-cache slot management, batched prefill + decode.
+"""ServeEngine: LM decode serving over the shared EngineCore.
 
-A fixed-size batch of ``n_slots`` request slots (continuous-batching lite):
-requests join free slots, prefill writes their cache rows, and one fused
-``decode_step`` advances every active slot per tick.  Finished slots are
-recycled without disturbing the others — the decode step is shape-stable,
-which keeps it a single compiled executable (and keeps steps
-deterministic-size for the straggler posture, DESIGN.md §4).
+A fixed batch of ``n_slots`` KV-cache slots (continuous batching):
+requests join free slots as they arrive — mid-flight, no generational
+barrier — get a *ragged* batched prefill (per-slot prompt lengths and
+position ids), and one fused ``decode_step`` advances every active slot
+per tick with per-slot cache indices.  Finished slots are recycled without
+disturbing the others; the decode step stays one compiled executable.
 
-The engine works for every cached family (dense/moe/hybrid/vlm); encoder
-(audio) models have no decode path.
+Ragged prefill correctness: prompts are left-aligned with a zero pad
+*suffix*, so causal attention keeps real tokens from ever attending pads;
+per-slot last-token logits seed generation and the vector-``pos`` decode
+path masks each slot's cache beyond its own length.  Dense/vlm families
+are exact — matching per-request generation token-for-token (regression-
+tested); moe is exact up to GShard expert-capacity effects (capacity is
+derived from the *padded* length, which depends on who shares the prefill
+bucket); recurrent families (ssm/hybrid) fold the pad suffix into their
+state (the documented approximation of the previous engine).
+
+The engine shares ``submit() / poll() / run_until_idle() / stats()`` with
+:class:`repro.serving.CapsuleEngine` via :class:`repro.serving.EngineCore`
+and takes the same pluggable schedulers (an SLO scheduler throttles
+*admission concurrency* here; the decode shape is pinned by the caches).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +35,8 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.common import LMConfig
+from repro.serving.core import EngineCore, SlotTask
+from repro.serving.schedulers import Scheduler, ShardedScheduler, pow2_bucket
 
 
 @dataclasses.dataclass
@@ -29,115 +44,203 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0      # 0 -> greedy
-    rid: int = 0
+    rid: Optional[int] = None     # None -> engine-assigned
 
 
 @dataclasses.dataclass
 class Completion:
     rid: int
-    tokens: List[int]
+    tokens: List[int]             # prompt + generated
+    latency_s: float = 0.0        # submit -> completion wall-clock
 
 
-class ServeEngine:
+def _scatter_caches(cfg: LMConfig, slot_idx: jax.Array, new: Any, old: Any
+                    ) -> Any:
+    """Write sub-batch cache rows ``new`` into ``old`` at ``slot_idx``.
+
+    The batch dim sits at a different axis per cache family; its index is
+    recovered from the logical-axis tree (``lm.cache_specs``) rather than
+    hardcoded per family.  Out-of-range indices (the sub-batch's pad rows)
+    are dropped by the scatter.
+    """
+    specs = lm.cache_specs(cfg)
+
+    def one(axes, n, o):
+        if "batch" not in axes:
+            return o
+        ax = axes.index("batch")
+        om = jnp.moveaxis(o, ax, 0)
+        nm = jnp.moveaxis(n, ax, 0).astype(o.dtype)
+        return jnp.moveaxis(om.at[slot_idx].set(nm, mode="drop"), 0, ax)
+
+    return jax.tree.map(one, specs, new, old,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+class ServeEngine(EngineCore):
+    """Slot-based continuous-batching LM engine (one request per slot)."""
+
     def __init__(self, cfg: LMConfig, params: Any, n_slots: int = 4,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0,
+                 scheduler: Optional[Scheduler] = None,
+                 clock=time.perf_counter):
         assert cfg.family != "audio", "encoder models have no decode path"
+        if isinstance(scheduler, ShardedScheduler):
+            raise ValueError(
+                "ShardedScheduler targets the image workload (per-tick "
+                "batch placement); LM decode sharding would have to shard "
+                "the KV caches themselves — see ROADMAP follow-ups")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.key = jax.random.key(seed)
+        self._rng = np.random.RandomState(seed)
         self._decode = jax.jit(
-            lambda p, b, c: lm.decode_step(p, cfg, b, c))
+            lambda p, t, pos, c: lm.decode_step(
+                p, cfg, {"tokens": t, "pos": pos}, c))
         self._prefill = jax.jit(
-            lambda p, b, c: lm.prefill_step(p, cfg, b, c))
+            lambda p, t, ln, idx, c: self._prefill_scatter(p, t, ln, idx, c))
+        super().__init__(capacity=n_slots, scheduler=scheduler, clock=clock)
+        self._caches = lm.make_caches(cfg, n_slots, max_len)
+        self._tok = np.zeros((n_slots,), np.int32)   # pending token per slot
+        self._pos = np.zeros((n_slots,), np.int32)   # its cache index
+
+    def _prefill_scatter(self, params, tokens, lengths, slot_idx, caches):
+        """Prefill a (bucketed) sub-batch on fresh caches, then scatter its
+        rows into the engine caches at ``slot_idx`` — admission cost scales
+        with the number of admitted slots, not engine capacity."""
+        sub = lm.make_caches(self.cfg, tokens.shape[0], self.max_len)
+        logits, sub = lm.ragged_prefill_step(
+            params, self.cfg, {"tokens": tokens, "lengths": lengths}, sub)
+        return logits, _scatter_caches(self.cfg, slot_idx, sub, caches)
+
+    # -- sampling ----------------------------------------------------------
+
+    def _sample_row(self, logits_row: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / temperature
+        z -= z.max()
+        p = np.exp(z)
+        return int(self._rng.choice(p.shape[0], p=p / p.sum()))
 
     # -- single-batch convenience ------------------------------------------
 
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
                  temperature: float = 0.0) -> List[List[int]]:
-        """Batched prefill + greedy/temperature decode for equal-priority
-        prompts (right-aligned padding to the longest prompt)."""
-        cfg = self.cfg
+        """Batched prefill + greedy/temperature decode — ragged-correct:
+        each prompt keeps its own length and position ids, so the result
+        matches per-request generation (attention-cached families)."""
         b = len(prompts)
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((b, plen), np.int32)
+        for p in prompts:
+            self._check_prompt(p)
+        if max_new_tokens <= 0:
+            return [list(p) for p in prompts]
+        caches = lm.make_caches(self.cfg, b, self.max_len)
+        plen = pow2_bucket(max(len(p) for p in prompts), self.max_len)
+        tokens = np.zeros((b, plen), np.int32)
+        lengths = np.ones((b,), np.int32)
         for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p                # left-aligned, pad right
-        caches = lm.make_caches(cfg, b, self.max_len)
+            tokens[i, :len(p)] = p                   # left-aligned, pad right
+            lengths[i] = len(p)
         logits, caches = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, caches)
-        # NOTE: uniform prompt length assumed for cache-position simplicity;
-        # ragged prompts are padded and the pad tokens attended (documented
-        # serving limitation; slot engine below re-prefills per request).
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.arange(b), caches)
+        logits = np.asarray(jax.block_until_ready(logits))
         out = [list(p) for p in prompts]
-        pos = plen
-        for _ in range(max_new_tokens):
-            nxt = self._sample(logits, temperature)
+        pos = lengths.copy()
+        alive = np.ones((b,), bool)           # slots still within max_len
+        for k in range(max_new_tokens):
             for i in range(b):
-                out[i].append(int(nxt[i]))
-            batch = {"tokens": nxt[:, None],
-                     "pos": jnp.int32(pos)}
-            logits, caches = self._decode(self.params, batch, caches)
-            pos += 1
-            if pos >= self.max_len:
+                if alive[i]:
+                    out[i].append(self._sample_row(logits[i], temperature))
+            if k == max_new_tokens - 1:
                 break
+            alive &= pos < self.max_len       # per-slot stop (cache full)
+            if not alive.any():
+                break
+            nxt = np.array([out[i][-1] if alive[i] else 0
+                            for i in range(b)], np.int32)
+            logits, caches = self._decode(
+                self.params, jnp.asarray(nxt[:, None]),
+                jnp.asarray(np.minimum(pos, self.max_len - 1)), caches)
+            logits = np.asarray(jax.block_until_ready(logits))
+            pos += 1
         return out
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(
-            sub, logits / temperature, axis=-1).astype(jnp.int32)
+    # -- workload hooks ----------------------------------------------------
 
-    # -- slot-based continuous batching ------------------------------------
+    def _check_prompt(self, prompt) -> None:
+        if not len(prompt):
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} leaves no room to generate "
+                f"(max_len={self.max_len})")
 
-    def serve(self, requests: List[Request]) -> List[Completion]:
-        """Run all requests to completion with n_slots-way batched decode."""
-        cfg = self.cfg
-        queue = list(requests)
-        active: List[Optional[dict]] = [None] * self.n_slots
-        caches = lm.make_caches(cfg, self.n_slots, self.max_len)
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        pos = 0                                  # uniform tick position
-        done: List[Completion] = []
+    def _expand(self, request: Request
+                ) -> Tuple[List[SlotTask], Dict[str, Any]]:
+        prompt = [int(t) for t in request.prompt]
+        request.prompt = prompt
+        self._check_prompt(prompt)
+        if request.max_new_tokens <= 0:
+            return [], {}                 # prefill-free identity completion
+        return [SlotTask(payload=request)], {}
 
-        # simple generational scheme: fill all slots, decode until all
-        # finish, then admit the next generation (keeps `pos` uniform
-        # without per-slot position plumbing).
-        while queue or any(a is not None for a in active):
-            admitted = False
-            for s in range(self.n_slots):
-                if active[s] is None and queue:
-                    req = queue.pop(0)
-                    active[s] = {"req": req, "out": list(req.prompt),
-                                 "left": req.max_new_tokens}
-                    admitted = True
-            if admitted:
-                plen = max(len(a["req"].prompt) for a in active
-                           if a is not None)
-                toks = np.zeros((self.n_slots, plen), np.int32)
-                for s, a in enumerate(active):
-                    if a is not None:
-                        p = a["req"].prompt
-                        toks[s, :len(p)] = p
-                caches = lm.make_caches(cfg, self.n_slots, self.max_len)
-                logits, caches = self._prefill(
-                    self.params, {"tokens": jnp.asarray(toks)}, caches)
-                pos = plen
-            nxt = self._sample(logits, 0.0)
-            for s, a in enumerate(active):
-                if a is None:
-                    continue
-                a["out"].append(int(nxt[s]))
-                a["left"] -= 1
-                if a["left"] <= 0 or pos + 1 >= self.max_len:
-                    done.append(Completion(a["req"].rid, a["out"]))
-                    active[s] = None
-            if all(a is None for a in active):
-                continue                         # admit next generation
-            batch = {"tokens": nxt[:, None], "pos": jnp.int32(pos)}
-            logits, caches = self._decode(self.params, batch, caches)
-            pos += 1
-        return done
+    def _admit(self, new: List[Tuple[int, SlotTask]]
+               ) -> Tuple[List[int], int]:
+        """Ragged batched prefill for the newly admitted slots only: a
+        pow2-bucketed sub-batch (cost scales with admissions, not engine
+        capacity) whose cache rows are scattered into the slot caches."""
+        nb = pow2_bucket(len(new), self.capacity)
+        plen = pow2_bucket(
+            max(len(t.payload.prompt) for _, t in new), self.max_len)
+        tokens = np.zeros((nb, plen), np.int32)
+        lengths = np.ones((nb,), np.int32)
+        slot_idx = np.full((nb,), self.capacity, np.int32)  # pad rows: OOB
+        for i, (s, task) in enumerate(new):
+            p = task.payload.prompt
+            tokens[i, :len(p)] = p
+            lengths[i] = len(p)
+            slot_idx[i] = s
+        logits, self._caches = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(slot_idx), self._caches)
+        logits = np.asarray(jax.block_until_ready(logits))
+        finished = []
+        for i, (s, task) in enumerate(new):
+            req = task.payload
+            tok = self._sample_row(logits[i], req.temperature)
+            task.state = {"out": list(req.prompt) + [tok],
+                          "left": req.max_new_tokens - 1}
+            self._tok[s] = tok
+            self._pos[s] = lengths[i]
+            if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
+                finished.append(s)
+        return finished, len(new)
+
+    def _batch_for(self, n_active: int) -> int:
+        return self.capacity            # decode shape pinned by the caches
+
+    def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
+              ) -> Tuple[List[int], int]:
+        logits, self._caches = self._decode(
+            self.params, jnp.asarray(self._tok[:, None]),
+            jnp.asarray(self._pos), self._caches)
+        logits = np.asarray(jax.block_until_ready(logits))
+        finished = []
+        for s, task in active:
+            nxt = self._sample_row(logits[s], task.payload.temperature)
+            task.state["out"].append(nxt)
+            task.state["left"] -= 1
+            self._pos[s] += 1
+            self._tok[s] = nxt
+            if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
+                finished.append(s)
+        return finished, len(active)
+
+    def _finalize(self, entry, latency_s: float) -> Completion:
+        tokens = (entry.tasks[0].state["out"] if entry.tasks
+                  else list(entry.request.prompt))   # max_new_tokens <= 0
+        return Completion(rid=entry.request.rid, tokens=tokens,
+                          latency_s=latency_s)

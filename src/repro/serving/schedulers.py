@@ -1,0 +1,221 @@
+"""Pluggable tick schedulers for :class:`repro.serving.EngineCore`.
+
+A scheduler makes the three decisions the paper's throughput story hinges
+on (CapsAcc / PIM-CapsNet: scheduling and data movement around the compute,
+not the kernel alone):
+
+  * **admission** — ``plan()``: how many slots may be occupied this tick
+    (the *effective batch size*);
+  * **shape** — ``quantize()``: the concrete compiled batch the workload
+    pads to (a small, bounded set of shapes keeps the jit cache finite);
+  * **placement** — ``place()``: where the tick's batch lives (host,
+    single device, or sharded across a mesh via ``parallel.sharding``).
+
+The engine feeds back one :class:`~repro.serving.core.TickRecord` per tick
+through ``observe()`` so adaptive schedulers (the SLO controller) can close
+the loop on measured latency.
+
+Variants:
+
+  * :class:`FIFOScheduler` — admit everything, always run the full
+    fixed-shape batch (one executable; the shape-stability posture of the
+    original drain-the-queue engines).
+  * :class:`SLOBatchScheduler` — adapt the effective batch size to a
+    target p95 tick latency: halve when the observed p95 overshoots the
+    SLO, double back when a full window sits comfortably under it.
+  * :class:`ShardedScheduler` — split each tick's batch across the
+    ``batch``-mapped axes of a mesh (pure data parallelism) while
+    delegating admission decisions to an inner scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Optional
+
+import numpy as np
+
+
+def pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clipped to [1, cap]."""
+    n = max(1, min(int(n), int(cap)))
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, int(cap))
+
+
+@dataclasses.dataclass(frozen=True)
+class TickRecord:
+    """What the engine observed for one tick (scheduler feedback)."""
+
+    n_active: int                  # real slot tasks stepped
+    n_batch: int                   # compiled batch the workload ran
+    wall_s: float                  # admit + step wall-clock
+
+
+class Scheduler:
+    """Base scheduler: admit to capacity, one full-capacity shape.
+
+    ``bind(core)`` is called once by the engine; schedulers are stateful
+    and must not be shared between live engines.
+    """
+
+    capacity: int = 0
+
+    def bind(self, core: Any) -> None:
+        self.capacity = core.capacity
+
+    def plan(self, n_queued: int, n_active: int) -> int:
+        """Max slots that may be occupied this tick (effective batch)."""
+        return self.capacity
+
+    def quantize(self, n_active: int, capacity: int) -> int:
+        """Concrete compiled batch size for ``n_active`` filled slots."""
+        return capacity
+
+    def shapes(self, capacity: int) -> tuple:
+        """Every batch size ``quantize`` can emit (warmup compiles each,
+        so no tick pays compile time inside the measured path)."""
+        return (capacity,)
+
+    def place(self, batch: Any) -> Any:
+        """Device placement of a tick's batch array (default: leave it to
+        jit's host->default-device transfer)."""
+        return batch
+
+    def observe(self, record: TickRecord) -> None:
+        pass
+
+
+class FIFOScheduler(Scheduler):
+    """Admit in arrival order up to capacity; always run the one
+    full-capacity executable (maximum shape stability)."""
+
+
+class SLOBatchScheduler(Scheduler):
+    """Latency-SLO-aware effective batch size controller.
+
+    Tracks a sliding window of per-tick wall-clock and compares its p95
+    against ``target_p95_ms``:
+
+      * p95 above target  -> halve the effective batch (fast back-off;
+        acts as soon as ``min_samples`` ticks are in the window);
+      * a *full* window at or below ``grow_frac * target`` -> double it
+        (slow recovery, up to engine capacity).
+
+    Tick shapes are power-of-two buckets of the effective batch, so the
+    jit cache stays O(log capacity).
+    """
+
+    def __init__(self, target_p95_ms: float, window: int = 16,
+                 min_samples: int = 4, grow_frac: float = 0.5,
+                 initial_batch: Optional[int] = None):
+        if target_p95_ms < 0:
+            raise ValueError("target_p95_ms must be >= 0")
+        self.target_p95_ms = float(target_p95_ms)
+        self.window = int(window)
+        self.min_samples = max(1, int(min_samples))
+        self.grow_frac = float(grow_frac)
+        self._initial = initial_batch
+        self._batch = initial_batch or 1
+        self._lat: Deque[float] = deque(maxlen=self.window)
+
+    @property
+    def effective_batch(self) -> int:
+        return self._batch
+
+    def bind(self, core: Any) -> None:
+        super().bind(core)
+        self._batch = min(self._initial or self.capacity, self.capacity)
+        self._lat.clear()
+
+    def plan(self, n_queued: int, n_active: int) -> int:
+        return self._batch
+
+    def quantize(self, n_active: int, capacity: int) -> int:
+        return pow2_bucket(n_active, capacity)
+
+    def shapes(self, capacity: int) -> tuple:
+        out, b = [], 1
+        while b < capacity:
+            out.append(b)
+            b *= 2
+        return tuple(out) + (capacity,)
+
+    def observe(self, record: TickRecord) -> None:
+        if record.n_batch <= 0:
+            return
+        self._lat.append(record.wall_s * 1e3)
+        if len(self._lat) < self.min_samples:
+            return
+        p95 = float(np.percentile(np.asarray(self._lat), 95))
+        if p95 > self.target_p95_ms and self._batch > 1:
+            self._batch = max(1, self._batch // 2)
+            self._lat.clear()
+        elif (len(self._lat) == self.window
+              and p95 <= self.grow_frac * self.target_p95_ms
+              and self._batch < self.capacity):
+            self._batch = min(self.capacity, self._batch * 2)
+            self._lat.clear()
+
+
+class ShardedScheduler(Scheduler):
+    """Split each tick's batch across mesh devices (pure DP serving).
+
+    Placement maps the leading (batch) dim of the tick array onto the
+    mesh axes the ``batch`` logical axis resolves to under
+    ``parallel.sharding`` rules (``("pod", "data")`` by default), so the
+    jitted forward runs SPMD across the mesh.  Admission and latency
+    adaptation delegate to ``inner`` (FIFO unless given, so an SLO
+    controller can be composed under sharding).
+    """
+
+    def __init__(self, mesh: Any, inner: Optional[Scheduler] = None,
+                 rules: Any = None):
+        from repro.parallel import sharding as sharding_lib
+
+        self.mesh = mesh
+        self.inner = inner or FIFOScheduler()
+        self.rules = rules if rules is not None else sharding_lib.DEFAULT_RULES
+        axes = self.rules.lookup("batch", mesh.axis_names)
+        axes = (axes,) if isinstance(axes, str) else (axes or ())
+        self.n_devices = 1
+        for a in axes:
+            self.n_devices *= int(mesh.shape[a])
+
+    def bind(self, core: Any) -> None:
+        super().bind(core)
+        if self.capacity % self.n_devices:
+            raise ValueError(
+                f"engine capacity {self.capacity} not divisible by the "
+                f"{self.n_devices} batch-axis devices of the mesh")
+        self.inner.bind(core)
+
+    def plan(self, n_queued: int, n_active: int) -> int:
+        return self.inner.plan(n_queued, n_active)
+
+    def quantize(self, n_active: int, capacity: int) -> int:
+        b = self.inner.quantize(n_active, capacity)
+        b = -(-b // self.n_devices) * self.n_devices     # ceil to multiple
+        return min(b, capacity)
+
+    def shapes(self, capacity: int) -> tuple:
+        return tuple(sorted({self.quantize(b, capacity)
+                             for b in self.inner.shapes(capacity)}))
+
+    def place(self, batch: Any) -> Any:
+        import jax
+        from jax.sharding import NamedSharding
+
+        from repro.parallel import sharding as sharding_lib
+
+        arr = np.asarray(batch)
+        spec = sharding_lib.shape_aware_spec(
+            ("batch",) + (None,) * (arr.ndim - 1), arr.shape, self.rules,
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape)))
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def observe(self, record: TickRecord) -> None:
+        self.inner.observe(record)

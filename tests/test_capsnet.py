@@ -10,6 +10,7 @@ import pytest
 from repro.core import capsnet as cn
 from repro.core import pruning as pr
 from repro.data import synthetic_digits as sd
+from repro.deploy import FastCapsPipeline, RoutingSpec
 
 
 def tiny_cfg(**kw):
@@ -38,8 +39,8 @@ class TestShapes:
 
     @pytest.mark.parametrize("mode", ["reference", "optimized", "pallas"])
     def test_routing_modes_agree(self, mode):
-        cfg_ref = tiny_cfg(routing_mode="reference")
-        cfg_m = tiny_cfg(routing_mode=mode)
+        cfg_ref = tiny_cfg(routing=RoutingSpec.reference())
+        cfg_m = tiny_cfg(routing=RoutingSpec(mode=mode))   # exact softmax
         params = cn.init(cfg_ref, jax.random.key(0))
         imgs = jax.random.uniform(jax.random.key(1), (2, 28, 28, 1))
         l_ref, _ = cn.forward(params, cfg_ref, imgs)
@@ -49,9 +50,9 @@ class TestShapes:
 
     def test_taylor_softmax_mode_close(self):
         """Paper claim: optimized nonlinearities don't change predictions."""
-        cfg_e = tiny_cfg(routing_mode="optimized", softmax_mode="exact")
-        cfg_t = tiny_cfg(routing_mode="optimized", softmax_mode="taylor",
-                         use_div_exp_log=True)
+        cfg_e = tiny_cfg(routing=RoutingSpec.optimized(softmax="exact"))
+        cfg_t = tiny_cfg(routing=RoutingSpec.optimized(
+            softmax="taylor", div_exp_log=True))
         params = cn.init(cfg_e, jax.random.key(0))
         imgs = jax.random.uniform(jax.random.key(1), (4, 28, 28, 1))
         l_e, _ = cn.forward(params, cfg_e, imgs)
@@ -126,11 +127,12 @@ class TestPrunePipeline:
     def test_pipeline_compression_accounting(self):
         cfg = tiny_cfg()
         params = cn.init(cfg, jax.random.key(0))
-        res = pr.prune_capsnet(params, cfg, 0.8, 0.8, method="lakp")
-        assert 0.75 < res.compression < 0.85
-        assert res.index_overhead_frac < 0.02
+        pipe = FastCapsPipeline(cfg, params=params)
+        pipe.prune(0.8, 0.8, method="lakp").compact()
+        assert 0.75 < pipe.compression < 0.85
+        assert pipe.index_overhead_frac < 0.02
         n_dense = cn.param_count(params)
-        n_compact = cn.param_count(res.compact_params)
+        n_compact = cn.param_count(pipe.params)
         assert n_compact < n_dense
 
     def test_kp_vs_lakp_differ(self):

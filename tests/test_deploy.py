@@ -1,5 +1,5 @@
 """repro.deploy API: registry resolution/fallback, FastCapsPipeline
-equivalence with the legacy free-function path, CapsuleEngine batching."""
+equivalence with the core free functions, CapsuleEngine batching."""
 
 import dataclasses
 
@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro.core import capsnet as cn
-from repro.core import pruning as pr
 from repro.core import routing as routing_lib
 from repro.deploy import (DeployedCapsNet, FastCapsPipeline, PipelineError,
                           RoutingSpec, normalize, registry, resolve)
@@ -81,38 +80,36 @@ class TestRegistry:
         np.testing.assert_allclose(np.asarray(c_reg), np.asarray(c_ref),
                                    atol=1e-6)
 
-    def test_legacy_route_wrapper_delegates(self):
-        uh = u_hat(1)
-        with pytest.deprecated_call():
-            v_old, _ = routing_lib.route(uh, mode="optimized",
-                                         softmax_mode="taylor")
-        v_new, _ = resolve(RoutingSpec.optimized(softmax="taylor"))(uh)
-        np.testing.assert_allclose(np.asarray(v_old), np.asarray(v_new),
-                                   atol=1e-7)
+    def test_legacy_route_wrapper_gone(self):
+        """The PR-1 deprecation cycle is finished: no free route()."""
+        assert not hasattr(routing_lib, "route")
 
-    def test_config_routing_spec_precedence(self):
-        cfg = tiny_cfg(routing_mode="optimized", softmax_mode="taylor")
-        assert cfg.routing_spec() == RoutingSpec.optimized(softmax="taylor")
-        cfg2 = dataclasses.replace(cfg, routing=RoutingSpec.reference())
-        assert cfg2.routing_spec() == RoutingSpec.reference()
+    def test_config_routing_spec_default_and_override(self):
+        cfg = tiny_cfg()
+        assert cfg.routing_spec() == RoutingSpec.reference()
+        cfg2 = dataclasses.replace(
+            cfg, routing=RoutingSpec.optimized(softmax="taylor"))
+        assert cfg2.routing_spec() == RoutingSpec.optimized(softmax="taylor")
 
 
 class TestFastCapsPipeline:
-    def test_matches_legacy_prune_capsnet(self):
-        """Pipeline end-to-end == the legacy free-function path."""
+    def test_matches_core_free_functions(self):
+        """Pipeline stages == the core mask/apply/compact free functions."""
         cfg = tiny_cfg()
         params = cn.init(cfg, jax.random.key(0))
-        legacy = pr.prune_capsnet(params, cfg, 0.5, 0.75, type_keep=2)
+        masks = cn.lakp_masks(params, cfg, 0.5, 0.75, type_keep=2)
+        masked = cn.apply_masks(params, masks)
+        compact_p, compact_cfg, _ = cn.compact(masked, cfg, masks)
 
         pipe = FastCapsPipeline(cfg, params=params)
         pipe.prune(0.5, 0.75, type_keep=2).compact()
         assert pipe.cfg == dataclasses.replace(
-            legacy.compact_cfg, routing=pipe.cfg.routing)
+            compact_cfg, routing=pipe.cfg.routing)
         for a, b in zip(jax.tree.leaves(pipe.params),
-                        jax.tree.leaves(legacy.compact_params)):
+                        jax.tree.leaves(compact_p)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        assert pipe.compression == legacy.compression
-        assert pipe.index_overhead_frac == legacy.index_overhead_frac
+        assert pipe.compression is not None
+        assert pipe.index_overhead_frac is not None
 
     def test_compiled_forward_matches_free_function(self):
         cfg = tiny_cfg()
@@ -229,10 +226,10 @@ class TestCapsuleEngine:
     def test_zero_frame_request_completes_empty(self):
         eng = CapsuleEngine(self._deployed(), batch_size=4)
         rid = eng.submit(ImageRequest(np.zeros((0, 28, 28, 1), np.float32)))
-        comps = eng.run()
+        comps = eng.run_until_idle()
         assert [c.rid for c in comps] == [rid]
         assert comps[0].classes.shape == (0,)
-        assert eng._submit_t == {}          # no leaked submit-time entry
+        assert eng._requests == {}          # no leaked in-flight entry
 
     def test_rid_auto_assignment(self):
         """Requests with rid=None get unique engine-assigned ids, also
@@ -244,7 +241,7 @@ class TestCapsuleEngine:
         r2 = eng.submit(ImageRequest(frames.copy()))
         assert len({r0, r1, r2}) == 3
         assert r1 == 5 and r2 > 5
-        comps = eng.run()
+        comps = eng.run_until_idle()
         assert sorted(c.rid for c in comps) == sorted([r0, r1, r2])
 
     def test_duplicate_rid_rejected(self):

@@ -1,0 +1,315 @@
+"""The unified ``repro.serving`` engine API: shared EngineCore surface,
+async admission while ticking, SLO batch adaptation, sharded scheduling
+on a multi-device CPU mesh, stats monotonicity, and the ragged-prefill
+regression (slot serving == per-request generation)."""
+
+import os
+import subprocess
+import sys
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import capsnet as cn
+from repro.deploy import FastCapsPipeline
+from repro.models import lm
+from repro.models.common import LMConfig
+from repro.serving import (CapsuleEngine, EngineCore, ImageRequest,
+                           Request, ServeEngine, SLOBatchScheduler,
+                           TickRecord)
+
+
+def tiny_capsnet_cfg(**kw):
+    base = dict(conv1_channels=16, caps_types=4, decoder_hidden=(32, 64))
+    base.update(kw)
+    return cn.CapsNetConfig(**base)
+
+
+def deployed(**kw):
+    pipe = FastCapsPipeline(tiny_capsnet_cfg(**kw)).build(seed=0)
+    return pipe.compile(routing="optimized")
+
+
+def tiny_lm(**kw):
+    base = dict(arch_id="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                compute_dtype="float32", param_dtype="float32")
+    base.update(kw)
+    return LMConfig(**base)
+
+
+def frames(n, seed=0):
+    return np.random.RandomState(seed).rand(n, 28, 28, 1).astype(np.float32)
+
+
+class FakeClock:
+    """Deterministic clock: each read advances by ``step`` seconds."""
+
+    def __init__(self, step=0.01):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+class TestSharedSurface:
+    def test_both_engines_are_engine_cores(self):
+        caps = CapsuleEngine(deployed(), batch_size=4)
+        cfg = tiny_lm()
+        serve = ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                            n_slots=2, max_len=32)
+        for eng in (caps, serve):
+            assert isinstance(eng, EngineCore)
+            for name in ("submit", "poll", "run_until_idle", "stats",
+                         "serve", "tick", "warmup"):
+                assert callable(getattr(eng, name))
+
+    def test_poll_is_incremental(self):
+        eng = CapsuleEngine(deployed(), batch_size=4)
+        eng.submit(ImageRequest(frames(2)))
+        assert eng.poll() == []             # nothing ticked yet
+        assert eng.tick() is True
+        got = eng.poll()
+        assert len(got) == 1
+        assert eng.poll() == []             # drained
+        assert eng.tick() is False          # idle
+
+
+class TestAsyncAdmission:
+    def test_submit_mid_tick_is_served(self):
+        """A request submitted while a tick is in flight (from a callback
+        fired inside the jitted forward wrapper) joins the next tick of
+        the same run_until_idle call."""
+        dep = deployed()
+        eng = CapsuleEngine(dep, batch_size=2)
+        late_rid = []
+
+        class Hooked:
+            cfg = dep.cfg
+
+            def forward(self, x):
+                if not late_rid:
+                    late_rid.append(
+                        eng.submit(ImageRequest(frames(1, seed=9))))
+                return dep.forward(x)
+
+        eng.deployed = Hooked()
+        first = eng.submit(ImageRequest(frames(3)))
+        comps = eng.run_until_idle()
+        assert sorted(c.rid for c in comps) == sorted([first, late_rid[0]])
+
+    def test_submit_from_other_thread(self):
+        eng = CapsuleEngine(deployed(), batch_size=2)
+        eng.submit(ImageRequest(frames(4)))
+
+        def feeder():
+            for i in range(3):
+                eng.submit(ImageRequest(frames(1, seed=i + 1)))
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        comps = eng.run_until_idle()
+        t.join()
+        comps += eng.run_until_idle()       # anything that raced the drain
+        assert len(comps) == 4
+        assert eng.n_pending == 0
+
+
+class TestSLOScheduler:
+    def test_shrinks_under_impossible_target(self):
+        """Every tick overshoots a 0ms target -> effective batch backs off
+        to 1 (deterministic via the injected clock)."""
+        sched = SLOBatchScheduler(target_p95_ms=0.0, window=4,
+                                  min_samples=2)
+        eng = CapsuleEngine(deployed(), batch_size=8, scheduler=sched,
+                            clock=FakeClock(step=0.005))
+        eng.serve([ImageRequest(frames(40))])
+        assert sched.effective_batch == 1
+
+    def test_grows_under_loose_target(self):
+        """Ticks far below target -> effective batch doubles back up."""
+        sched = SLOBatchScheduler(target_p95_ms=1e9, window=2,
+                                  min_samples=2, initial_batch=1)
+        eng = CapsuleEngine(deployed(), batch_size=4, scheduler=sched,
+                            clock=FakeClock(step=0.001))
+        eng.serve([ImageRequest(frames(24))])
+        assert sched.effective_batch == 4
+
+    def test_observe_unit_logic(self):
+        """plan/observe contract without an engine: shrink on overshoot,
+        grow only on a full under-target window."""
+        sched = SLOBatchScheduler(target_p95_ms=10.0, window=4,
+                                  min_samples=2)
+        sched.capacity = 8
+        sched._batch = 8
+        for _ in range(2):
+            sched.observe(TickRecord(8, 8, wall_s=0.05))   # 50ms > 10ms
+        assert sched.effective_batch == 4
+        for _ in range(4):
+            sched.observe(TickRecord(4, 4, wall_s=0.001))  # 1ms << 10ms
+        assert sched.effective_batch == 8
+
+    def test_quantize_pow2(self):
+        sched = SLOBatchScheduler(target_p95_ms=10.0)
+        assert [sched.quantize(n, 8) for n in (1, 2, 3, 5, 8)] == \
+            [1, 2, 4, 8, 8]
+
+    def test_predictions_unchanged_by_slo_batching(self):
+        dep = deployed()
+        req = ImageRequest(frames(10))
+        eng = CapsuleEngine(dep, batch_size=8,
+                            scheduler=SLOBatchScheduler(target_p95_ms=0.0,
+                                                        min_samples=1))
+        comp = eng.serve([req])[0]
+        np.testing.assert_array_equal(
+            comp.classes, np.asarray(dep.classify(req.images)))
+
+
+class TestStatsMonotone:
+    def test_capsule_stats_monotone(self):
+        eng = CapsuleEngine(deployed(), batch_size=4)
+        eng.warmup()
+        eng.serve([ImageRequest(frames(5))])
+        s1 = eng.stats()
+        eng.serve([ImageRequest(frames(3, seed=1))])
+        s2 = eng.stats()
+        assert s1.fps > 0
+        assert (s2.items, s2.ticks, s2.completed) > \
+            (s1.items, s1.ticks, s1.completed)
+        assert s2.wall_s > s1.wall_s
+        assert s2.padded >= s1.padded
+
+    def test_lm_stats_monotone(self):
+        cfg = tiny_lm()
+        eng = ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                          n_slots=2, max_len=32)
+        eng.serve([Request(prompt=[1, 2], max_new_tokens=2)])
+        s1 = eng.stats()
+        eng.serve([Request(prompt=[3, 4, 5], max_new_tokens=3)])
+        s2 = eng.stats()
+        assert s1.items == 2 and s2.items == 5      # generated tokens
+        assert s2.ticks > s1.ticks
+        assert s2.wall_s > s1.wall_s
+        assert s2.completed == 2
+
+
+class TestRaggedLM:
+    """The PR's ragged-prefill fix: per-slot prompt lengths and position
+    ids must reproduce per-request generation exactly."""
+
+    PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+
+    def _engine(self, n_slots=2):
+        cfg = tiny_lm()
+        return ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                           n_slots=n_slots, max_len=48)
+
+    def test_ragged_generate_matches_per_request(self):
+        eng = self._engine()
+        batched = eng.generate(self.PROMPTS, max_new_tokens=5)
+        single = [eng.generate([p], max_new_tokens=5)[0]
+                  for p in self.PROMPTS]
+        assert batched == single
+
+    def test_slot_serve_matches_per_request_generation(self):
+        """Continuous batching (3 ragged requests over 2 slots, admission
+        mid-flight) produces the same greedy tokens as one-at-a-time."""
+        eng = self._engine(n_slots=2)
+        reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                for i, p in enumerate(self.PROMPTS)]
+        comps = {c.rid: c for c in eng.serve(reqs)}
+        for i, p in enumerate(self.PROMPTS):
+            assert comps[i].tokens == eng.generate([p], max_new_tokens=4)[0]
+
+    def test_generate_zero_new_tokens_is_identity(self):
+        eng = self._engine()
+        assert eng.generate(self.PROMPTS, max_new_tokens=0) == \
+            [list(p) for p in self.PROMPTS]
+
+    def test_serve_zero_new_tokens_is_identity(self):
+        """submit/serve agrees with generate: max_new_tokens<=0 returns
+        the prompt unchanged (prefill-free completion)."""
+        eng = self._engine()
+        comps = eng.serve([Request(prompt=[4, 5, 6], max_new_tokens=0)])
+        assert comps[0].tokens == [4, 5, 6]
+
+    def test_generate_overlong_prompt_rejected(self):
+        eng = self._engine()
+        with pytest.raises(ValueError, match="no room"):
+            eng.generate([list(range(1, 50))], max_new_tokens=2)
+
+    def test_sharded_scheduler_rejected_for_lm(self):
+        import jax.numpy  # noqa: F401  (jax already imported)
+        from repro.launch.mesh import make_mesh
+        from repro.serving import ShardedScheduler
+
+        cfg = tiny_lm()
+        with pytest.raises(ValueError, match="image workload"):
+            ServeEngine(cfg, lm.init(cfg, jax.random.key(0)), n_slots=2,
+                        max_len=32,
+                        scheduler=ShardedScheduler(make_mesh((1,),
+                                                             ("data",))))
+
+    def test_generate_per_slot_max_len_stop(self):
+        """A slot hitting max_len stops alone; shorter prompts keep
+        generating — batched still equals per-request."""
+        cfg = tiny_lm()
+        eng = ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                          n_slots=2, max_len=16)
+        prompts = [[1, 2], [3] * 14]
+        batched = eng.generate(prompts, max_new_tokens=8)
+        single = [eng.generate([p], max_new_tokens=8)[0] for p in prompts]
+        assert batched == single
+        assert len(batched[0]) == 2 + 8        # unaffected by the other slot
+
+    def test_empty_and_overlong_prompts_rejected(self):
+        eng = self._engine()
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(Request(prompt=[]))
+        with pytest.raises(ValueError, match="no room"):
+            eng.submit(Request(prompt=list(range(1, 50))))
+
+
+def test_sharded_scheduler_on_cpu_mesh():
+    """ShardedScheduler splits tick batches over a 2-device CPU mesh
+    (subprocess: the test process is pinned to one device)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, numpy as np
+from repro.core import capsnet as cn
+from repro.deploy import FastCapsPipeline
+from repro.launch.mesh import make_mesh
+from repro.serving import (CapsuleEngine, ImageRequest, ShardedScheduler,
+                           SLOBatchScheduler)
+
+cfg = cn.CapsNetConfig(conv1_channels=8, caps_types=2,
+                       decoder_hidden=(16, 32))
+dep = FastCapsPipeline(cfg).build(seed=0).compile(routing="optimized")
+mesh = make_mesh((2,), ("data",))
+# SLO inner -> power-of-two buckets, rounded up to device multiples
+sched = ShardedScheduler(mesh, inner=SLOBatchScheduler(target_p95_ms=1e9))
+assert sched.n_devices == 2
+eng = CapsuleEngine(dep, batch_size=4, scheduler=sched)
+assert sched.quantize(3, 4) == 4 and sched.quantize(1, 4) == 2
+rng = np.random.RandomState(0)
+reqs = [ImageRequest(rng.rand(n, 28, 28, 1).astype(np.float32), rid=i)
+        for i, n in enumerate([3, 2])]
+comps = {c.rid: c for c in eng.serve(reqs)}
+for r in reqs:
+    got = comps[r.rid].classes
+    want = np.asarray(dep.classify(r.images))
+    assert (got == want).all(), (got, want)
+st = eng.stats()
+assert st.frames == 5 and st.ticks == 2
+print("SHARDED_SERVE_OK", st.frames)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SHARDED_SERVE_OK" in r.stdout, r.stdout + r.stderr

@@ -2,9 +2,8 @@
 train -> LAKP prune -> fine-tune -> compact -> optimized deployment —
 on the synthetic digits set, verifying the paper's claim STRUCTURE:
 pruned+optimized model keeps accuracy within ~1% while shrinking
-parameters by >90%."""
-
-import dataclasses
+parameters by >90%.  Driven through the canonical ``repro.deploy``
+pipeline and typed ``RoutingSpec``s."""
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +12,7 @@ import numpy as np
 from repro.core import capsnet as cn
 from repro.core import pruning as pr
 from repro.data import synthetic_digits as sd
+from repro.deploy import FastCapsPipeline, RoutingSpec
 from repro.optim import AdamWConfig
 from repro.training import Trainer, TrainerConfig
 
@@ -37,10 +37,9 @@ def test_fastcaps_pipeline_end_to_end():
     res = Trainer(tcfg, loss_fn, lambda k: cn.init(cfg, k)).run(
         batches(), 60)
 
-    eval_fn = jax.jit(lambda p, c, x: cn.forward(p, c, x)[0],
-                      static_argnums=1)
-    acc_dense = float(jnp.mean(
-        (jnp.argmax(eval_fn(res.params, cfg, te_x), -1) == te_y)))
+    pipe = FastCapsPipeline(cfg, params=res.params)
+    dep_dense = pipe.compile(routing="reference")
+    acc_dense = float(jnp.mean((dep_dense.classify(te_x) == te_y)))
     assert acc_dense > 0.5, f"dense model failed to learn ({acc_dense})"
 
     # prune (50% conv kernels, keep 4/8 capsule types) + fine-tune
@@ -53,22 +52,19 @@ def test_fastcaps_pipeline_end_to_end():
             mask_fn=lambda g: pr.mask_gradients(g, masks))
         return ft.run(batches(seed=7), 30).params
 
-    result = pr.prune_capsnet(res.params, cfg, 0.5, 0.5, method="lakp",
-                              type_keep=4, finetune_fn=finetune)
-    # deployment config: compacted + optimized routing (paper §III-B)
-    dep_cfg = dataclasses.replace(result.compact_cfg,
-                                  routing_mode="pallas",
-                                  softmax_mode="taylor")
-    acc_pruned = float(jnp.mean(
-        (jnp.argmax(eval_fn(result.compact_params, dep_cfg, te_x), -1)
-         == te_y)))
+    pipe.prune(0.5, 0.5, method="lakp", type_keep=4)
+    pipe.finetune(finetune)
+    pipe.compact()
+    # deployment: compacted + optimized routing (paper §III-B)
+    dep = pipe.compile(routing=RoutingSpec.pallas(softmax="taylor"))
+    acc_pruned = float(jnp.mean((dep.classify(te_x) == te_y)))
     n_dense = cn.param_count(res.params)
-    n_compact = cn.param_count(result.compact_params)
+    n_compact = dep.n_params
 
     # claim structure: large compression, modest accuracy cost
     assert n_compact < 0.6 * n_dense
     assert acc_pruned > acc_dense - 0.15, (acc_dense, acc_pruned)
-    assert result.index_overhead_frac < 0.02
+    assert pipe.index_overhead_frac < 0.02
 
 
 def test_pruned_model_output_consistency():
@@ -76,14 +72,13 @@ def test_pruned_model_output_consistency():
     compacted model (the paper's 16-bit finding: no accuracy change)."""
     cfg = cn.CapsNetConfig(arch_id="t", conv1_channels=16, caps_types=8,
                            decoder_hidden=(32, 64))
-    params = cn.init(cfg, jax.random.key(0))
-    res = pr.prune_capsnet(params, cfg, 0.6, 0.6, type_keep=4)
+    pipe = FastCapsPipeline(cfg).build(seed=0)
+    pipe.prune(0.6, 0.6, type_keep=4).compact()
+    dep_ref = pipe.compile(routing="reference")
+    dep_opt = pipe.compile(routing=RoutingSpec.pallas(softmax="taylor"))
     imgs = jax.random.uniform(jax.random.key(1), (8, 28, 28, 1))
-    ref_cfg = res.compact_cfg
-    opt_cfg = dataclasses.replace(ref_cfg, routing_mode="pallas",
-                                  softmax_mode="taylor")
-    l_ref, _ = cn.forward(res.compact_params, ref_cfg, imgs)
-    l_opt, _ = cn.forward(res.compact_params, opt_cfg, imgs)
+    l_ref = dep_ref.forward(imgs)
+    l_opt = dep_opt.forward(imgs)
     assert (jnp.argmax(l_ref, -1) == jnp.argmax(l_opt, -1)).all()
     np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_opt),
                                atol=2e-3)
