@@ -91,6 +91,17 @@ def run(quick: bool = True, tiny: bool = False, slo_ms: float = 200.0
         f"SLO p95<={slo_ms:.0f}ms)",
         ["system", "ms/tick", "frames", "FPS", "speedup"], rows)
 
+    # request-latency histograms (EngineStats): p50/p95 per request class
+    # (frames-per-request bucket) for each served system
+    lat_rows = []
+    for name, st in (("original", st_orig), ("pruned (LAKP)", st_pruned),
+                     ("pruned+optimized", st_opt)):
+        for cls, (n, p50, p95) in st.latency_summary().items():
+            lat_rows.append([name, cls, f"{n}", f"{p50:.1f}", f"{p95:.1f}"])
+    bc.print_table(
+        "Fig.1: served request latency (per request class)",
+        ["system", "class", "requests", "p50 ms", "p95 ms"], lat_rows)
+
     # modelled TPU FPS from routing+conv FLOPs (single chip, 50% MFU),
     # using the deploy pipeline's own FLOP accounting
     def model_fps(flops_per_image: int) -> float:

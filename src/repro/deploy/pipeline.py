@@ -81,6 +81,12 @@ class DeployedCapsNet:
 
             engine = pipe.compile(routing="pallas").serve(
                 scheduler=SLOBatchScheduler(target_p95_ms=20))
+
+        ``batch_size`` is the engine capacity (max frames per tick);
+        ``scheduler`` is any :class:`repro.serving.Scheduler` (FIFO when
+        None).  The returned engine's ``submit()`` is thread-safe and
+        non-blocking; drive it with ``run_until_idle()`` or a ``tick()``
+        loop and read per-class latency p50/p95 from ``stats()``.
         """
         from repro.serving import CapsuleEngine
 

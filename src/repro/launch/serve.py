@@ -6,6 +6,14 @@ through the unified ``repro.serving`` engine API
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --requests 6 --max-new 12
 
+    # LM, token-streaming, prefill/decode-interleaved ticks
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --scheduler interleave --stream
+
+    # LM, KV caches sharded across every local device (slot-parallel)
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --scheduler sharded --slots 4
+
     # CapsNet: FastCapsPipeline -> DeployedCapsNet.serve(), FPS report
     PYTHONPATH=src python -m repro.launch.serve --arch capsnet-mnist \
         --requests 8 --batch 16 --routing pallas --scheduler slo --slo-ms 50
@@ -20,14 +28,27 @@ import numpy as np
 
 from repro import configs as cfg_lib
 from repro.models import lm
-from repro.serving import (FIFOScheduler, ImageRequest, Request,
-                           ServeEngine, SLOBatchScheduler)
+from repro.serving import (FIFOScheduler, ImageRequest,
+                           InterleavingScheduler, Request, ServeEngine,
+                           ShardedScheduler, SLOBatchScheduler)
 
 
 def _make_scheduler(args):
     if args.scheduler == "slo":
         return SLOBatchScheduler(target_p95_ms=args.slo_ms)
+    if args.scheduler == "interleave":
+        return InterleavingScheduler()
+    if args.scheduler == "sharded":
+        from repro.launch.mesh import make_mesh
+
+        n = jax.device_count()
+        return ShardedScheduler(make_mesh((n,), ("data",)))
     return FIFOScheduler()
+
+
+def _print_latency(stats) -> None:
+    for cls, (n, p50, p95) in stats.latency_summary().items():
+        print(f"  latency[{cls}]: n={n} p50={p50:.1f} ms p95={p95:.1f} ms")
 
 
 def serve_lm(args) -> None:
@@ -43,15 +64,33 @@ def serve_lm(args) -> None:
     rng = np.random.RandomState(0)
     reqs = [Request(prompt=list(rng.randint(1, cfg.vocab // 2,
                                             size=rng.randint(3, 9))),
-                    max_new_tokens=args.max_new, rid=i)
+                    max_new_tokens=args.max_new, rid=i, stream=args.stream)
             for i in range(args.requests)]
-    completions = engine.serve(reqs)
+    if args.stream:
+        # token-level results as they are generated (poll(stream=True))
+        for r in reqs:
+            engine.submit(r)
+        completions = []
+        while True:
+            busy = engine.tick()
+            for ev in engine.poll(stream=True):
+                if ev.done:
+                    completions.append(ev.completion)
+                    print(f"  rid={ev.rid}: done")
+                else:
+                    print(f"  rid={ev.rid} #{ev.seq}: token {ev.item}")
+            if not busy and engine.n_pending == 0:
+                break
+        engine.poll()                      # drain the compat channel
+    else:
+        completions = engine.serve(reqs)
     stats = engine.stats()
     # Completion.tokens includes the prompt; stats count generated tokens.
     print(f"[{cfg.arch_id}] served {stats.completed} requests "
           f"({stats.items} new tokens) in {stats.wall_s:.2f}s "
           f"({stats.throughput:.1f} tok/s, "
           f"{stats.ms_per_tick:.1f} ms/tick)")
+    _print_latency(stats)
     for c in sorted(completions, key=lambda c: c.rid):
         print(f"  rid={c.rid}: latency={c.latency_s * 1e3:.0f} ms "
               f"{c.tokens}")
@@ -89,6 +128,7 @@ def serve_capsnet(args) -> None:
     print(f"  served {stats.completed} requests / {stats.frames} frames "
           f"in {stats.batches} ticks ({stats.padded_frames} pad): "
           f"{stats.fps:.1f} FPS, {stats.ms_per_batch:.2f} ms/tick")
+    _print_latency(stats)
     for c in sorted(completions, key=lambda c: c.rid):
         print(f"  rid={c.rid}: {len(c.classes)} frames, "
               f"latency={c.latency_s * 1e3:.1f} ms, "
@@ -104,12 +144,18 @@ def main():
                     help="CPU-smoke-sized config (--no-reduced for the "
                          "published size)")
     ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--scheduler", default="fifo", choices=["fifo", "slo"],
-                    help="tick scheduler (slo adapts batch to --slo-ms)")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "slo", "interleave", "sharded"],
+                    help="tick scheduler (slo adapts batch to --slo-ms; "
+                         "interleave separates prefill/decode ticks; "
+                         "sharded places slots across all local devices)")
     ap.add_argument("--slo-ms", type=float, default=100.0,
                     help="SLO scheduler p95 tick-latency target")
     # LM options
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stream", action="store_true",
+                    help="LM: print token-level StreamEvents as they are "
+                         "generated (poll(stream=True))")
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
     # CapsNet options

@@ -227,6 +227,14 @@ def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
       * cache given, x.shape[1] > 1     — prefill: writes cache[0:S].
       * cache given, x.shape[1] == 1    — decode: writes cache[idx], attends
                                           to cache[0:idx+1].
+
+    Sharding contract (serving): a vector ``cache_index`` (B,) addresses
+    each batch row's own cache row, and both the row-aligned scatter
+    (``cache.at[arange(B), idx]``) and the ``kv_valid_len`` mask are
+    elementwise along the batch dim — so when ``repro.serving`` shards
+    the cache's ``batch`` (slot) axis across a mesh, XLA SPMD keeps every
+    per-slot read/write device-local and the sharded decode is
+    bit-identical to the single-device engine.
     """
     q, k, v = _project_qkv(params, cfg, x, x)
     q = common.apply_rope(q, positions, cfg.rope_theta)

@@ -573,6 +573,27 @@ def cache_specs(cfg: LMConfig) -> Optional[Dict[str, Any]]:
     raise ValueError(fam)
 
 
+def cache_shardings(cfg: LMConfig, caches: Any, mesh: Any,
+                    rules: Any = None) -> Any:
+    """NamedShardings placing a ``make_caches`` pytree onto ``mesh``.
+
+    Composes :func:`cache_specs` (the logical-axis tree) with the
+    shape-aware single-pass policy of ``parallel.sharding``: the cache
+    ``batch`` axis — the *slot* axis in continuous-batching serving —
+    claims the data-parallel mesh axes when the slot count divides them,
+    so every device owns an equal contiguous block of slots for the whole
+    decode (no cross-device cache traffic; the per-slot scatter/gather of
+    ``attention.self_attention`` stays device-local).  Indivisible dims
+    replicate, and freed axes fall through to ``kv_seq``/``kv_head_dim``
+    exactly as in training placement.
+    """
+    from repro.parallel import sharding as sharding_lib
+
+    if rules is None:
+        rules = sharding_lib.DEFAULT_RULES
+    return sharding_lib.shardings_for(caches, cache_specs(cfg), rules, mesh)
+
+
 def model_flops_per_token(cfg: LMConfig, params_total: int,
                           params_active: Optional[int] = None) -> float:
     """MODEL_FLOPS ~ 6 * N (active) per token (roofline §)."""

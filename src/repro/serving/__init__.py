@@ -1,19 +1,23 @@
 """``repro.serving`` — the unified async serving engine API.
 
-One :class:`EngineCore` owns slot state, fixed-shape jitted ticks and
-cumulative stats; pluggable :class:`Scheduler`s decide admission, batch
-shape and device placement; :class:`CapsuleEngine` (CapsNet image frames,
-the paper's Fig. 1 workload) and :class:`ServeEngine` (LM decode) are thin
-workload adapters sharing the ``submit() / poll() / run_until_idle() /
-stats()`` surface with true async admission.
+One :class:`EngineCore` owns slot state, fixed-shape jitted ticks,
+streaming results and cumulative stats (with per-request-class latency
+histograms); pluggable :class:`Scheduler`s decide admission, batch shape,
+device placement and prefill/decode tick interleaving;
+:class:`CapsuleEngine` (CapsNet image frames, the paper's Fig. 1
+workload) and :class:`ServeEngine` (LM decode, optionally sharded across
+a mesh) are thin workload adapters sharing the ``submit() / poll() /
+run_until_idle() / stats()`` surface with true async admission.
+
+See ``docs/serving.md`` for the engine lifecycle and design notes.
 """
 
 from repro.serving.capsule_engine import (CapsuleEngine,  # noqa: F401
                                           ImageCompletion, ImageRequest)
 from repro.serving.core import (EngineCore, EngineStats,  # noqa: F401
-                                SlotTask)
+                                LatencyHistogram, SlotTask, StreamEvent)
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401
 from repro.serving.schedulers import (FIFOScheduler,  # noqa: F401
-                                      Scheduler, ShardedScheduler,
-                                      SLOBatchScheduler, TickRecord,
-                                      pow2_bucket)
+                                      InterleavingScheduler, Scheduler,
+                                      ShardedScheduler, SLOBatchScheduler,
+                                      TickRecord, pow2_bucket)

@@ -31,7 +31,7 @@ import jax
 import numpy as np
 
 from repro.serving.core import EngineCore, EngineStats, SlotTask  # noqa: F401
-from repro.serving.schedulers import Scheduler
+from repro.serving.schedulers import Scheduler, pow2_bucket
 
 
 @dataclasses.dataclass
@@ -39,10 +39,15 @@ class ImageRequest:
     """A batch-of-frames classification request (ragged ``images`` count).
 
     ``rid=None`` lets the engine assign the next free id at submit time.
+    ``stream=True`` emits one :class:`repro.serving.StreamEvent` per
+    classified frame (``item=(frame_index, class_id)``) on the
+    ``poll(stream=True)`` channel as ticks complete, instead of waiting
+    for the whole request.
     """
 
     images: np.ndarray                # (n_frames, H, W, C)
     rid: Optional[int] = None
+    stream: bool = False
 
 
 @dataclasses.dataclass
@@ -98,7 +103,13 @@ class CapsuleEngine(EngineCore):
         for i, (_, task) in enumerate(active):
             k = task.payload[0]
             self._requests[task.rid].state["lengths"][k] = lengths[i]
+            self._emit(task.rid, (k, int(np.argmax(lengths[i]))))
         return [s for s, _ in active], len(active)
+
+    def _request_class(self, request: ImageRequest) -> str:
+        """Latency histogram key: frame counts bucketed to powers of two
+        (``"image/f4"`` = requests carrying 3-4 frames)."""
+        return f"image/f{pow2_bucket(len(request.images), self.capacity)}"
 
     def _finalize(self, entry, latency_s: float) -> ImageCompletion:
         buf = entry.state["lengths"]

@@ -14,9 +14,16 @@ workload-independent about a slot-based, fixed-shape inference engine:
     up;
   * **the tick** — admit up to ``scheduler.plan()`` tasks, let the
     workload prefill/step a schedulable, fixed-shape batch, then retire
-    finished slots and emit completions;
+    finished slots and emit completions; ``scheduler.phase()`` may
+    dedicate a tick to admission (prefill) or stepping (decode) instead
+    of the default mixed tick;
+  * **streaming** — workloads may emit per-item :class:`StreamEvent`\\ s
+    (LM: one per generated token) for requests that opted in;
+    ``poll(stream=True)`` drains them while plain ``poll()`` keeps the
+    completion-level contract;
   * **cumulative stats** — monotone counters (items, padding waste,
-    ticks, wall-clock, completed requests) shared by every workload.
+    ticks, wall-clock, completed requests) plus per-request-class
+    latency histograms (p50/p95), shared by every workload.
 
 Workload adapters (:class:`repro.serving.CapsuleEngine`,
 :class:`repro.serving.ServeEngine`) subclass this and implement four
@@ -30,6 +37,7 @@ delegated to a pluggable :class:`repro.serving.Scheduler`.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
 import time
@@ -39,6 +47,68 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 from repro.serving.schedulers import FIFOScheduler, Scheduler, TickRecord
 
 
+class LatencyHistogram:
+    """Fixed-bucket log2 latency histogram (counts only, O(1) memory).
+
+    Buckets span 50 us to ~45 min with power-of-two upper bounds, plus an
+    overflow bucket, so ``record`` never rebins and two snapshots of the
+    same histogram are comparable bucket by bucket.  ``percentile_ms``
+    reports the upper bound of the bucket the requested quantile falls in
+    (Prometheus-style: pessimistic by at most one bucket width).
+    """
+
+    BOUNDS_MS = tuple(0.05 * 2 ** i for i in range(26))   # 0.05ms..~45min
+
+    def __init__(self):
+        self.counts = [0] * (len(self.BOUNDS_MS) + 1)
+        self.count = 0
+        self.total_s = 0.0
+
+    def record(self, seconds: float) -> None:
+        ms = max(float(seconds), 0.0) * 1e3
+        i = bisect.bisect_left(self.BOUNDS_MS, ms)
+        self.counts[i] += 1
+        self.count += 1
+        self.total_s += max(float(seconds), 0.0)
+
+    def percentile_ms(self, q: float) -> float:
+        """Latency (ms) below which ``q`` percent of requests completed;
+        0.0 for an empty histogram."""
+        if not self.count:
+            return 0.0
+        rank = q / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                return (self.BOUNDS_MS[i] if i < len(self.BOUNDS_MS)
+                        else float("inf"))
+        return float("inf")
+
+    @property
+    def p50_ms(self) -> float:
+        return self.percentile_ms(50.0)
+
+    @property
+    def p95_ms(self) -> float:
+        return self.percentile_ms(95.0)
+
+    @property
+    def mean_ms(self) -> float:
+        return 1e3 * self.total_s / self.count if self.count else 0.0
+
+    def copy(self) -> "LatencyHistogram":
+        out = LatencyHistogram()
+        out.counts = list(self.counts)
+        out.count = self.count
+        out.total_s = self.total_s
+        return out
+
+    def __repr__(self) -> str:
+        return (f"LatencyHistogram(n={self.count}, p50={self.p50_ms:.3g}ms, "
+                f"p95={self.p95_ms:.3g}ms)")
+
+
 @dataclasses.dataclass
 class EngineStats:
     """Cumulative over the engine's lifetime (monotone non-decreasing).
@@ -46,6 +116,13 @@ class EngineStats:
     ``items`` are workload units: frames for the image workload, generated
     tokens for LM decode.  The ``frames``/``batches`` aliases keep the
     image-serving vocabulary of the original CapsuleEngine stats.
+
+    ``latency`` maps a *request class* (the workload's coarse label for a
+    request, e.g. ``"lm/p8"`` for prompts bucketed to length 8 — see
+    ``EngineCore._request_class``) to a :class:`LatencyHistogram` of
+    submit-to-completion wall-clock, so p50/p95 can be read per class
+    without retaining per-request records.  Snapshots from ``stats()``
+    deep-copy the histograms: they never mutate under the caller.
     """
 
     items: int = 0                    # real work units served
@@ -53,6 +130,8 @@ class EngineStats:
     ticks: int = 0                    # engine ticks that did work
     wall_s: float = 0.0               # time spent in admit+step
     completed: int = 0                # requests fully served
+    latency: Dict[str, LatencyHistogram] = dataclasses.field(
+        default_factory=dict)         # request class -> latency histogram
 
     @property
     def throughput(self) -> float:
@@ -62,6 +141,11 @@ class EngineStats:
     @property
     def ms_per_tick(self) -> float:
         return 1e3 * self.wall_s / self.ticks if self.ticks else 0.0
+
+    def latency_summary(self) -> Dict[str, Tuple[int, float, float]]:
+        """``{request class: (count, p50 ms, p95 ms)}`` for reporting."""
+        return {k: (h.count, h.p50_ms, h.p95_ms)
+                for k, h in sorted(self.latency.items())}
 
     # image-serving aliases (Fig. 1 vocabulary)
     fps = throughput
@@ -81,12 +165,36 @@ class SlotTask:
 
 
 @dataclasses.dataclass
+class StreamEvent:
+    """One token-level (or frame-level) result on the streaming channel.
+
+    ``seq`` is the 0-based per-request emission index — strictly
+    increasing per rid, so consumers can assert ordering.  The final
+    event of a request has ``done=True``, ``item=None`` and carries the
+    request's completion object (the same object plain ``poll()``
+    returns), making the stream self-contained.  One caveat: completed
+    rids may be reused by a later ``submit()``, and a reused rid's
+    events restart at ``seq=0`` — drain ``poll(stream=True)`` before
+    reusing an explicit rid, or let the engine assign fresh rids.
+    """
+
+    rid: int
+    seq: int
+    item: Any = None                  # token id / frame class, None on done
+    done: bool = False
+    completion: Any = None            # set on the done event only
+
+
+@dataclasses.dataclass
 class _RequestEntry:
     request: Any
     tasks: List[SlotTask]
     state: Dict[str, Any]
     left: int
     t0: float
+    cls: str = "default"              # request class (latency histogram key)
+    stream: bool = False              # emit StreamEvents for this request
+    emitted: int = 0                  # next StreamEvent.seq
 
 
 class EngineCore:
@@ -123,6 +231,7 @@ class EngineCore:
         self._queue: Deque[SlotTask] = deque()
         self._requests: Dict[int, _RequestEntry] = {}
         self._completions: Deque[Any] = deque()
+        self._events: Deque[StreamEvent] = deque()
         self._stats = EngineStats()
         self._next_rid = 0
         self._lock = threading.Lock()          # queue / requests / stats
@@ -150,14 +259,60 @@ class EngineCore:
     def _warmup(self) -> None:
         pass
 
+    def _request_class(self, request: Any) -> str:
+        """Coarse label keying the latency histogram (override per
+        workload; a small, bounded set of labels keeps stats O(1))."""
+        return "default"
+
+    def _wants_stream(self, request: Any) -> bool:
+        """Whether this request opted into token-level StreamEvents
+        (default: its ``stream`` attribute; absent means completion-only,
+        so the legacy request types stream nothing)."""
+        return bool(getattr(request, "stream", False))
+
+    # -- internal helpers --------------------------------------------------
+
+    def _emit(self, rid: int, item: Any) -> None:
+        """Queue one streaming item for ``rid`` (no-op unless the request
+        opted in).  Workload hooks may call this with the lock released —
+        it re-acquires it — but only from the single ticker thread, which
+        is what keeps ``seq`` strictly increasing per request."""
+        with self._lock:
+            entry = self._requests.get(rid)
+            if entry is None or not entry.stream:
+                return
+            self._events.append(StreamEvent(rid=rid, seq=entry.emitted,
+                                            item=item))
+            entry.emitted += 1
+
+    def _complete_locked(self, entry: _RequestEntry, now: float) -> None:
+        """Finalize one request: completion queue, latency histogram, and
+        the terminal StreamEvent for streaming requests.  Call with
+        ``self._lock`` held."""
+        completion = self._finalize(entry, max(now - entry.t0, 0.0))
+        self._completions.append(completion)
+        st = self._stats
+        st.completed += 1
+        st.latency.setdefault(
+            entry.cls, LatencyHistogram()).record(max(now - entry.t0, 0.0))
+        if entry.stream:
+            self._events.append(StreamEvent(
+                rid=entry.request.rid, seq=entry.emitted, done=True,
+                completion=completion))
+            entry.emitted += 1
+
     # -- shared surface ----------------------------------------------------
 
     def submit(self, request: Any) -> int:
         """Enqueue one request (thread-safe, non-blocking); returns its rid.
 
+        May be called from any thread, including callbacks fired while a
+        tick is in flight; the request joins the next tick's admission.
         ``request.rid`` is assigned when ``None``; explicit rids must be
         unique among in-flight requests (completed rids may be reused).
-        Zero-task requests complete immediately.
+        Zero-task requests complete immediately.  Raises ``ValueError``
+        (from the workload's ``_expand``) on malformed payloads before
+        any engine state changes.
         """
         tasks, state = self._expand(request)
         with self._lock:
@@ -173,40 +328,76 @@ class EngineCore:
             for t in tasks:
                 t.rid = rid
             entry = _RequestEntry(request=request, tasks=tasks, state=state,
-                                  left=len(tasks), t0=self._clock())
+                                  left=len(tasks), t0=self._clock(),
+                                  cls=self._request_class(request),
+                                  stream=self._wants_stream(request))
             if not tasks:
-                self._completions.append(
-                    self._finalize(entry, max(self._clock() - entry.t0, 0.0)))
-                self._stats.completed += 1
+                self._complete_locked(entry, self._clock())
             else:
                 self._requests[rid] = entry
                 self._queue.extend(tasks)
         return rid
 
-    def poll(self) -> List[Any]:
-        """Drain and return the completions ready so far (non-blocking)."""
-        out = []
+    def poll(self, stream: bool = False) -> List[Any]:
+        """Drain results ready so far (thread-safe, non-blocking).
+
+        * ``poll()`` — the completion-level contract: one workload
+          completion object per finished request, in finish order.
+          Every request (streaming or not) lands here, so
+          ``run_until_idle()``/``serve()`` callers are unaffected by
+          streaming.
+        * ``poll(stream=True)`` — the token-level channel: ordered
+          :class:`StreamEvent`\\ s for requests that opted in
+          (``request.stream=True``), one per emitted item, terminated
+          per request by a ``done=True`` event carrying the completion.
+          Events for different requests interleave in emission order;
+          ``seq`` is strictly increasing within a rid.
+
+        The two channels drain independently: a streaming consumer that
+        never calls plain ``poll()`` should discard its completions
+        eventually, and vice versa a completion-level consumer of a
+        streaming request should drain ``poll(stream=True)`` or not set
+        ``stream`` — both queues are unbounded.
+        """
+        out: List[Any] = []
         with self._lock:
-            while self._completions:
-                out.append(self._completions.popleft())
+            src = self._events if stream else self._completions
+            while src:
+                out.append(src.popleft())
         return out
 
     def tick(self) -> bool:
-        """One engine step: admit, run, retire.  Returns False when idle."""
+        """One engine step: admit, run, retire.  Returns False when idle.
+
+        ``scheduler.phase()`` picks the tick kind: ``"mixed"`` admits and
+        steps (prefill rides the admission tick — the legacy behaviour),
+        ``"prefill"`` dedicates the tick to admission (resident slots
+        idle one tick), ``"decode"`` dedicates it to stepping (the queue
+        waits).  Impossible answers are coerced back to ``"mixed"`` —
+        ``"decode"`` with nothing resident, ``"prefill"`` with nothing
+        queued — so no scheduler can stall the engine.
+        """
         with self._tick_lock:
             with self._lock:
                 n_active = sum(s is not None for s in self._slots)
-                plan = self.scheduler.plan(len(self._queue), n_active)
-                plan = max(1, min(int(plan), self.capacity))
+                n_queued = len(self._queue)
+                phase = self.scheduler.phase(n_queued, n_active)
+                if phase == "decode" and n_active == 0:
+                    phase = "mixed"
+                elif phase == "prefill" and n_queued == 0:
+                    phase = "mixed"
                 new: List[Tuple[int, SlotTask]] = []
-                for s in range(self.capacity):
-                    if n_active >= plan or not self._queue:
-                        break
-                    if self._slots[s] is None:
-                        task = self._queue.popleft()
-                        self._slots[s] = task
-                        new.append((s, task))
-                        n_active += 1
+                if phase != "decode":
+                    plan = self.scheduler.plan(n_queued, n_active)
+                    plan = max(1, min(int(plan), self.capacity))
+                    for s in range(self.capacity):
+                        if n_active >= plan or not self._queue:
+                            break
+                        if self._slots[s] is None:
+                            task = self._queue.popleft()
+                            self._slots[s] = task
+                            new.append((s, task))
+                            n_active += 1
                 active = [(s, t) for s, t in enumerate(self._slots)
                           if t is not None]
             if not active:
@@ -222,7 +413,7 @@ class EngineCore:
             done = set(finished)
             still = [(s, t) for s, t in active if s not in done]
             n_batch = 0
-            if still:
+            if still and not (phase == "prefill" and new):
                 n_batch = max(len(still),
                               min(self._batch_for(len(still)), self.capacity))
                 f, i = self._step(still, n_batch)
@@ -244,19 +435,18 @@ class EngineCore:
                     entry.left -= 1
                     if entry.left == 0:
                         del self._requests[task.rid]
-                        self._completions.append(
-                            self._finalize(entry, max(now - entry.t0, 0.0)))
-                        st.completed += 1
+                        self._complete_locked(entry, now)
             self.scheduler.observe(
                 TickRecord(n_active=len(still), n_batch=n_batch, wall_s=wall))
             return True
 
     def run_until_idle(self) -> List[Any]:
         """Tick until queue and slots drain; returns the completions
-        ready at exit.  Submissions made while running — from other
-        threads or mid-tick callbacks — are served as long as they land
-        before the engine observes an empty queue; a submit racing that
-        final check stays queued for the next run/tick."""
+        ready at exit (completion-level — streaming events stay queued
+        for ``poll(stream=True)``).  Submissions made while running —
+        from other threads or mid-tick callbacks — are served as long as
+        they land before the engine observes an empty queue; a submit
+        racing that final check stays queued for the next run/tick."""
         while True:
             if self.tick():
                 continue
@@ -274,8 +464,15 @@ class EngineCore:
         self._warmup()
 
     def stats(self) -> EngineStats:
+        """Snapshot of the cumulative :class:`EngineStats` (thread-safe).
+
+        The snapshot is detached — counters and latency histograms are
+        copied, so it never mutates as the engine keeps serving."""
         with self._lock:
-            return dataclasses.replace(self._stats)
+            return dataclasses.replace(
+                self._stats,
+                latency={k: h.copy()
+                         for k, h in self._stats.latency.items()})
 
     @property
     def n_pending(self) -> int:

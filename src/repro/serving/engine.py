@@ -21,6 +21,21 @@ The engine shares ``submit() / poll() / run_until_idle() / stats()`` with
 :class:`repro.serving.CapsuleEngine` via :class:`repro.serving.EngineCore`
 and takes the same pluggable schedulers (an SLO scheduler throttles
 *admission concurrency* here; the decode shape is pinned by the caches).
+
+Sharded decode: under a :class:`repro.serving.ShardedScheduler` the KV
+caches themselves are sharded — the cache ``batch`` axis is the slot
+axis, so the mesh's data-parallel devices each own ``n_slots /
+n_devices`` cache rows for the whole decode (``lm.cache_shardings``),
+params are replicated, and each tick's token/position vectors are placed
+with the same rules.  Decode then runs SPMD: per-slot cache reads/writes
+stay device-local, and results are bit-identical to the unsharded engine
+(regression-tested on a 2-device mesh).  ``n_slots`` must divide evenly
+over the mesh's batch-axis devices.
+
+Streaming: requests submitted with ``stream=True`` additionally emit one
+:class:`repro.serving.StreamEvent` per generated token (prompt tokens are
+not echoed), drained via ``poll(stream=True)``; the final event carries
+the :class:`Completion`.  Plain ``poll()`` stays completion-level.
 """
 
 from __future__ import annotations
@@ -45,6 +60,7 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0      # 0 -> greedy
     rid: Optional[int] = None     # None -> engine-assigned
+    stream: bool = False          # emit per-token StreamEvents
 
 
 @dataclasses.dataclass
@@ -78,18 +94,24 @@ def _scatter_caches(cfg: LMConfig, slot_idx: jax.Array, new: Any, old: Any
 
 
 class ServeEngine(EngineCore):
-    """Slot-based continuous-batching LM engine (one request per slot)."""
+    """Slot-based continuous-batching LM engine (one request per slot).
+
+    Thread-safety follows :class:`repro.serving.EngineCore`: ``submit``
+    may be called from any thread while ticks are in flight; ``tick`` /
+    ``run_until_idle`` assume a single ticker thread.  Shape contracts:
+    prompts are 1-D int token lists with ``0 < len < max_len``;
+    completions carry ``prompt + generated`` tokens; stats count
+    *generated* tokens as items.  Under a
+    :class:`repro.serving.ShardedScheduler` the KV caches are sharded
+    over the mesh's batch axes (slot-parallel) — ``n_slots`` must divide
+    the mesh's batch-axis device count.
+    """
 
     def __init__(self, cfg: LMConfig, params: Any, n_slots: int = 4,
                  max_len: int = 512, seed: int = 0,
                  scheduler: Optional[Scheduler] = None,
                  clock=time.perf_counter):
         assert cfg.family != "audio", "encoder models have no decode path"
-        if isinstance(scheduler, ShardedScheduler):
-            raise ValueError(
-                "ShardedScheduler targets the image workload (per-tick "
-                "batch placement); LM decode sharding would have to shard "
-                "the KV caches themselves — see ROADMAP follow-ups")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -104,6 +126,24 @@ class ServeEngine(EngineCore):
         self._caches = lm.make_caches(cfg, n_slots, max_len)
         self._tok = np.zeros((n_slots,), np.int32)   # pending token per slot
         self._pos = np.zeros((n_slots,), np.int32)   # its cache index
+        if isinstance(self.scheduler, ShardedScheduler):
+            self._shard_state(self.scheduler)
+
+    def _shard_state(self, sched: ShardedScheduler) -> None:
+        """Pin the decode state onto the scheduler's mesh: params
+        replicated (decode wants weights stationary), KV caches sharded
+        along their slot (``batch``) axis via ``lm.cache_shardings`` so
+        each data-parallel device owns ``n_slots / n_devices`` slots end
+        to end.  Per-tick token/position arrays follow through
+        ``scheduler.place()``; the jitted prefill-scatter and decode
+        steps then run SPMD with device-local cache updates."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self.params = jax.device_put(
+            self.params, NamedSharding(sched.mesh, PartitionSpec()))
+        self._caches = jax.device_put(
+            self._caches, lm.cache_shardings(self.cfg, self._caches,
+                                             sched.mesh, sched.rules))
 
     def _prefill_scatter(self, params, tokens, lengths, slot_idx, caches):
         """Prefill a (bucketed) sub-batch on fresh caches, then scatter its
@@ -203,9 +243,10 @@ class ServeEngine(EngineCore):
             tokens[i, :len(p)] = p
             lengths[i] = len(p)
             slot_idx[i] = s
+        place = self.scheduler.place
         logits, self._caches = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(slot_idx), self._caches)
+            self.params, place(tokens), place(lengths),
+            place(slot_idx), self._caches)
         logits = np.asarray(jax.block_until_ready(logits))
         finished = []
         for i, (s, task) in enumerate(new):
@@ -213,6 +254,7 @@ class ServeEngine(EngineCore):
             tok = self._sample_row(logits[i], req.temperature)
             task.state = {"out": list(req.prompt) + [tok],
                           "left": req.max_new_tokens - 1}
+            self._emit(task.rid, tok)
             self._tok[s] = tok
             self._pos[s] = lengths[i]
             if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
@@ -224,20 +266,28 @@ class ServeEngine(EngineCore):
 
     def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
               ) -> Tuple[List[int], int]:
+        place = self.scheduler.place
         logits, self._caches = self._decode(
-            self.params, jnp.asarray(self._tok[:, None]),
-            jnp.asarray(self._pos), self._caches)
+            self.params, place(self._tok[:, None]),
+            place(self._pos), self._caches)
         logits = np.asarray(jax.block_until_ready(logits))
         finished = []
         for s, task in active:
             nxt = self._sample_row(logits[s], task.payload.temperature)
             task.state["out"].append(nxt)
             task.state["left"] -= 1
+            self._emit(task.rid, nxt)
             self._pos[s] += 1
             self._tok[s] = nxt
             if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
                 finished.append(s)
         return finished, len(active)
+
+    def _request_class(self, request: Request) -> str:
+        """Latency histogram key: prompts bucketed to powers of two, so
+        p50/p95 are reported per prefill-cost class (``"lm/p8"`` = prompt
+        length in (4, 8])."""
+        return f"lm/p{pow2_bucket(len(request.prompt), self.max_len)}"
 
     def _finalize(self, entry, latency_s: float) -> Completion:
         tokens = (entry.tasks[0].state["out"] if entry.tasks

@@ -1,6 +1,6 @@
 """Pluggable tick schedulers for :class:`repro.serving.EngineCore`.
 
-A scheduler makes the three decisions the paper's throughput story hinges
+A scheduler makes the four decisions the paper's throughput story hinges
 on (CapsAcc / PIM-CapsNet: scheduling and data movement around the compute,
 not the kernel alone):
 
@@ -9,7 +9,11 @@ not the kernel alone):
   * **shape** — ``quantize()``: the concrete compiled batch the workload
     pads to (a small, bounded set of shapes keeps the jit cache finite);
   * **placement** — ``place()``: where the tick's batch lives (host,
-    single device, or sharded across a mesh via ``parallel.sharding``).
+    single device, or sharded across a mesh via ``parallel.sharding``);
+  * **interleaving** — ``phase()``: whether a tick admits new work
+    (prefill), steps the resident work (decode), or does both.  The
+    default ``"mixed"`` keeps the legacy behaviour where prefill rides
+    the admission tick.
 
 The engine feeds back one :class:`~repro.serving.core.TickRecord` per tick
 through ``observe()`` so adaptive schedulers (the SLO controller) can close
@@ -26,6 +30,9 @@ Variants:
   * :class:`ShardedScheduler` — split each tick's batch across the
     ``batch``-mapped axes of a mesh (pure data parallelism) while
     delegating admission decisions to an inner scheduler.
+  * :class:`InterleavingScheduler` — dedicate whole ticks to prefill
+    (admission) or decode (stepping) so a burst of long prompts cannot
+    stretch the inter-token latency of the already-resident slots.
 """
 
 from __future__ import annotations
@@ -59,7 +66,10 @@ class Scheduler:
     """Base scheduler: admit to capacity, one full-capacity shape.
 
     ``bind(core)`` is called once by the engine; schedulers are stateful
-    and must not be shared between live engines.
+    and must not be shared between live engines.  All hooks are invoked
+    by the engine with its tick lock held by a single ticker thread, so
+    implementations need no locking of their own; they must not call
+    back into the engine.
     """
 
     capacity: int = 0
@@ -70,6 +80,15 @@ class Scheduler:
     def plan(self, n_queued: int, n_active: int) -> int:
         """Max slots that may be occupied this tick (effective batch)."""
         return self.capacity
+
+    def phase(self, n_queued: int, n_active: int) -> str:
+        """Tick interleaving policy: ``"mixed"`` (admit *and* step — the
+        legacy behaviour where prefill rides the admission tick),
+        ``"prefill"`` (admission/prefill only; resident slots idle one
+        tick) or ``"decode"`` (step only; the queue waits).  The engine
+        coerces impossible answers (e.g. ``"decode"`` with no resident
+        work) back to ``"mixed"`` so a scheduler can never stall it."""
+        return "mixed"
 
     def quantize(self, n_active: int, capacity: int) -> int:
         """Concrete compiled batch size for ``n_active`` filled slots."""
@@ -161,15 +180,94 @@ class SLOBatchScheduler(Scheduler):
             self._lat.clear()
 
 
+class InterleavingScheduler(Scheduler):
+    """Prefill/decode tick interleaving (disaggregated-in-time serving).
+
+    The mixed tick couples two very different costs: a newly admitted
+    slot's prefill is O(prompt length) while a resident slot's decode
+    step is O(1) token.  Under the legacy ``"mixed"`` policy a burst of
+    long prompts rides the same tick as everyone else's decode step and
+    stretches inter-token latency for the whole batch.  This scheduler
+    dedicates whole ticks instead:
+
+      * queue non-empty and a slot free -> a **prefill** tick (admit and
+        prefill the newcomers; residents idle exactly one tick);
+      * otherwise -> a **decode** tick (step residents; the queue waits
+        for the next free slot).
+
+    ``decode_ratio`` bounds how often prefill may steal a tick: after a
+    prefill tick, at least ``decode_ratio`` decode ticks run before the
+    next admission (0 = admit whenever possible).  Admission size and
+    shape delegate to ``inner``, so SLO batching composes underneath.
+    """
+
+    def __init__(self, inner: Optional[Scheduler] = None,
+                 decode_ratio: int = 0):
+        if decode_ratio < 0:
+            raise ValueError("decode_ratio must be >= 0")
+        self.inner = inner or FIFOScheduler()
+        self.decode_ratio = int(decode_ratio)
+        self._since_prefill = 0
+
+    def bind(self, core: Any) -> None:
+        super().bind(core)
+        self.inner.bind(core)
+        self._since_prefill = self.decode_ratio   # first tick may admit
+
+    def plan(self, n_queued: int, n_active: int) -> int:
+        return self.inner.plan(n_queued, n_active)
+
+    def quantize(self, n_active: int, capacity: int) -> int:
+        return self.inner.quantize(n_active, capacity)
+
+    def shapes(self, capacity: int) -> tuple:
+        return self.inner.shapes(capacity)
+
+    def place(self, batch: Any) -> Any:
+        return self.inner.place(batch)
+
+    def phase(self, n_queued: int, n_active: int) -> str:
+        if n_active == 0 and n_queued > 0:
+            # idle engine: admit now (answering "decode" here would be
+            # coerced to "mixed" by the engine, silently bypassing the
+            # decode_ratio promise and leaving the counter stale)
+            self._since_prefill = 0
+            return "prefill"
+        free = self.capacity - n_active
+        may_admit = (n_queued > 0 and free > 0
+                     and self._since_prefill >= self.decode_ratio)
+        if may_admit and self.plan(n_queued, n_active) > n_active:
+            self._since_prefill = 0
+            return "prefill"
+        self._since_prefill += 1
+        return "decode"
+
+    def observe(self, record: TickRecord) -> None:
+        self.inner.observe(record)
+
+
 class ShardedScheduler(Scheduler):
     """Split each tick's batch across mesh devices (pure DP serving).
 
     Placement maps the leading (batch) dim of the tick array onto the
     mesh axes the ``batch`` logical axis resolves to under
     ``parallel.sharding`` rules (``("pod", "data")`` by default), so the
-    jitted forward runs SPMD across the mesh.  Admission and latency
-    adaptation delegate to ``inner`` (FIFO unless given, so an SLO
-    controller can be composed under sharding).
+    jitted forward runs SPMD across the mesh.  Admission, latency
+    adaptation and tick phasing delegate to ``inner`` (FIFO unless
+    given, so an SLO or interleaving controller composes under
+    sharding).
+
+    Workloads:
+
+      * **image** (:class:`repro.serving.CapsuleEngine`) — stateless
+        ticks; only the per-tick frame batch is placed, via ``place()``.
+      * **LM decode** (:class:`repro.serving.ServeEngine`) — stateful:
+        the engine additionally shards its *KV caches* over the mesh at
+        construction (the cache ``batch`` axis is the slot axis, so each
+        device owns ``capacity / n_devices`` slots end to end) and
+        routes the per-tick token/position arrays through ``place()``.
+        Engine capacity must divide evenly over the batch-axis devices
+        (checked in ``bind``).
     """
 
     def __init__(self, mesh: Any, inner: Optional[Scheduler] = None,
@@ -195,6 +293,9 @@ class ShardedScheduler(Scheduler):
 
     def plan(self, n_queued: int, n_active: int) -> int:
         return self.inner.plan(n_queued, n_active)
+
+    def phase(self, n_queued: int, n_active: int) -> str:
+        return self.inner.phase(n_queued, n_active)
 
     def quantize(self, n_active: int, capacity: int) -> int:
         b = self.inner.quantize(n_active, capacity)

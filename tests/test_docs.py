@@ -1,0 +1,21 @@
+"""Docs-consistency: the tier-1 mirror of the CI docs job.
+
+``tools/check_docs.py`` must pass — every ``repro.*`` module named in
+``docs/*.md`` resolves, and the README quickstart snippet executes.
+Runs in a subprocess so a broken snippet cannot poison this process's
+jax/device state.
+"""
+
+import os
+import subprocess
+import sys
+
+
+def test_check_docs_passes():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "tools", "check_docs.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -1,7 +1,9 @@
 """The unified ``repro.serving`` engine API: shared EngineCore surface,
 async admission while ticking, SLO batch adaptation, sharded scheduling
-on a multi-device CPU mesh, stats monotonicity, and the ragged-prefill
-regression (slot serving == per-request generation)."""
+on a multi-device CPU mesh (image ticks and LM KV-cache decode), stats
+monotonicity with per-class latency histograms, streaming ``poll()``,
+prefill/decode tick interleaving, and the ragged-prefill regression
+(slot serving == per-request generation)."""
 
 import os
 import subprocess
@@ -17,6 +19,7 @@ from repro.deploy import FastCapsPipeline
 from repro.models import lm
 from repro.models.common import LMConfig
 from repro.serving import (CapsuleEngine, EngineCore, ImageRequest,
+                           InterleavingScheduler, LatencyHistogram,
                            Request, ServeEngine, SLOBatchScheduler,
                            TickRecord)
 
@@ -242,17 +245,25 @@ class TestRaggedLM:
         with pytest.raises(ValueError, match="no room"):
             eng.generate([list(range(1, 50))], max_new_tokens=2)
 
-    def test_sharded_scheduler_rejected_for_lm(self):
-        import jax.numpy  # noqa: F401  (jax already imported)
+    def test_sharded_scheduler_accepted_for_lm(self):
+        """ServeEngine takes a ShardedScheduler: the KV caches are placed
+        via lm.cache_shardings and decode matches the plain engine (a
+        1-device mesh here; the 2-device exactness regression runs in
+        test_sharded_lm_decode_on_cpu_mesh)."""
         from repro.launch.mesh import make_mesh
         from repro.serving import ShardedScheduler
 
         cfg = tiny_lm()
-        with pytest.raises(ValueError, match="image workload"):
-            ServeEngine(cfg, lm.init(cfg, jax.random.key(0)), n_slots=2,
-                        max_len=32,
-                        scheduler=ShardedScheduler(make_mesh((1,),
-                                                             ("data",))))
+        params = lm.init(cfg, jax.random.key(0))
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=48,
+                          scheduler=ShardedScheduler(make_mesh((1,),
+                                                               ("data",))))
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=48)
+        reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                for i, p in enumerate(self.PROMPTS)]
+        comps = {c.rid: c for c in eng.serve(reqs)}
+        for i, p in enumerate(self.PROMPTS):
+            assert comps[i].tokens == ref.generate([p], max_new_tokens=4)[0]
 
     def test_generate_per_slot_max_len_stop(self):
         """A slot hitting max_len stops alone; shorter prompts keep
@@ -272,6 +283,241 @@ class TestRaggedLM:
             eng.submit(Request(prompt=[]))
         with pytest.raises(ValueError, match="no room"):
             eng.submit(Request(prompt=list(range(1, 50))))
+
+
+class TestStreamingPoll:
+    """Token-level poll(stream=True): ordered StreamEvents per request,
+    terminated by a done event carrying the completion; the plain poll()
+    completion channel is unaffected."""
+
+    def _engine(self):
+        cfg = tiny_lm()
+        return ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                           n_slots=2, max_len=48)
+
+    def test_token_events_ordered_and_match_completion(self):
+        eng = self._engine()
+        rid = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=5,
+                                 stream=True))
+        assert eng.poll(stream=True) == []      # nothing generated yet
+        events = []
+        while eng.tick():
+            events += eng.poll(stream=True)
+        events += eng.poll(stream=True)
+        comps = eng.poll()                      # compat channel still works
+        assert len(comps) == 1 and comps[0].rid == rid
+        assert [e.seq for e in events] == list(range(len(events)))
+        assert all(e.rid == rid for e in events)
+        tokens = [e.item for e in events if not e.done]
+        assert len(tokens) == 5                 # one event per new token
+        assert events[-1].done and events[-1].item is None
+        assert events[-1].completion.tokens == comps[0].tokens
+        assert comps[0].tokens == [1, 2, 3] + tokens
+        assert eng.poll(stream=True) == []      # drained
+
+    def test_interleaved_streams_keep_per_rid_order(self):
+        eng = self._engine()
+        rids = [eng.submit(Request(prompt=p, max_new_tokens=3, stream=True))
+                for p in ([1, 2], [3, 4, 5], [6])]
+        comps = {c.rid: c for c in eng.run_until_idle()}
+        per_rid = {r: [] for r in rids}
+        for ev in eng.poll(stream=True):
+            per_rid[ev.rid].append(ev)
+        for r in rids:
+            evs = per_rid[r]
+            assert [e.seq for e in evs] == list(range(len(evs)))
+            assert evs[-1].done
+            toks = [e.item for e in evs if not e.done]
+            assert comps[r].tokens[-len(toks):] == toks
+
+    def test_non_streaming_request_emits_nothing(self):
+        eng = self._engine()
+        eng.serve([Request(prompt=[1, 2], max_new_tokens=3)])
+        assert eng.poll(stream=True) == []
+
+    def test_image_engine_streams_per_frame(self):
+        eng = CapsuleEngine(deployed(), batch_size=2)
+        req = ImageRequest(frames(3), stream=True)
+        comp = eng.serve([req])[0]
+        events = eng.poll(stream=True)
+        assert [e.seq for e in events] == list(range(len(events)))
+        assert events[-1].done and events[-1].completion.rid == comp.rid
+        got = dict(e.item for e in events if not e.done)
+        assert sorted(got) == [0, 1, 2]         # every frame streamed once
+        for k, cls_id in got.items():
+            assert cls_id == int(comp.classes[k])
+
+
+class TestLatencyHistogram:
+    def test_record_and_percentiles(self):
+        h = LatencyHistogram()
+        assert h.p50_ms == 0.0 and h.count == 0
+        for ms in (1.0, 1.0, 1.0, 100.0):
+            h.record(ms / 1e3)
+        assert h.count == 4
+        # p50 lands in the 1ms bucket (upper bound 1.6ms), p95 in 100ms's
+        assert h.p50_ms == pytest.approx(1.6)
+        assert 100.0 <= h.p95_ms <= 204.8
+        assert h.p50_ms <= h.p95_ms
+        assert h.mean_ms == pytest.approx((3 * 1.0 + 100.0) / 4)
+
+    def test_copy_is_detached(self):
+        h = LatencyHistogram()
+        h.record(0.01)
+        snap = h.copy()
+        h.record(10.0)
+        assert snap.count == 1 and h.count == 2
+
+    def test_engine_histograms_monotone_per_class(self):
+        cfg = tiny_lm()
+        eng = ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                          n_slots=2, max_len=48)
+        eng.serve([Request(prompt=[1, 2, 3], max_new_tokens=2)])
+        s1 = eng.stats()
+        eng.serve([Request(prompt=[4, 5, 6], max_new_tokens=2),
+                   Request(prompt=[7, 8], max_new_tokens=2)])
+        s2 = eng.stats()
+        # prompt lengths 3 -> class lm/p4, 2 -> lm/p2
+        assert s1.latency["lm/p4"].count == 1
+        assert s2.latency["lm/p4"].count == 2
+        assert s2.latency["lm/p2"].count == 1
+        for cls, h1 in s1.latency.items():
+            h2 = s2.latency[cls]
+            assert h2.count >= h1.count
+            assert all(b >= a for a, b in zip(h1.counts, h2.counts))
+        assert s2.latency_summary()["lm/p4"][0] == 2
+
+    def test_stats_snapshot_is_detached(self):
+        """stats() deep-copies the histograms: a held snapshot must not
+        mutate as the engine keeps serving."""
+        cfg = tiny_lm()
+        eng = ServeEngine(cfg, lm.init(cfg, jax.random.key(0)),
+                          n_slots=2, max_len=48)
+        eng.serve([Request(prompt=[1, 2, 3], max_new_tokens=2)])
+        snap = eng.stats()
+        eng.serve([Request(prompt=[3, 2, 1], max_new_tokens=2)])
+        assert snap.latency["lm/p4"].count == 1
+        assert eng.stats().latency["lm/p4"].count == 2
+
+    def test_capsule_engine_classes(self):
+        eng = CapsuleEngine(deployed(), batch_size=4)
+        eng.serve([ImageRequest(frames(1)), ImageRequest(frames(3, seed=1))])
+        summary = eng.stats().latency_summary()
+        assert set(summary) == {"image/f1", "image/f4"}
+
+
+class TestInterleaving:
+    """Prefill/decode tick separation: same results, decode ticks never
+    admit, prefill ticks never step residents."""
+
+    def test_phase_unit_logic(self):
+        sched = InterleavingScheduler()
+        sched.capacity = 4
+        sched.inner.capacity = 4
+        assert sched.phase(n_queued=2, n_active=1) == "prefill"
+        assert sched.phase(n_queued=0, n_active=2) == "decode"
+        assert sched.phase(n_queued=2, n_active=4) == "decode"  # no free slot
+
+    def test_decode_ratio_throttles_admission(self):
+        sched = InterleavingScheduler(decode_ratio=2)
+        sched.capacity = 4
+        sched.inner.capacity = 4
+        sched.bind(type("C", (), {"capacity": 4})())
+        assert sched.phase(2, 1) == "prefill"      # first tick may admit
+        assert sched.phase(2, 2) == "decode"       # then 2 decode ticks
+        assert sched.phase(2, 2) == "decode"
+        assert sched.phase(2, 2) == "prefill"
+        # an idle engine admits immediately — the ratio never starves it
+        assert sched.phase(2, 0) == "prefill"
+
+    def test_lm_results_match_mixed_ticks(self):
+        cfg = tiny_lm()
+        params = lm.init(cfg, jax.random.key(0))
+        prompts = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=48,
+                          scheduler=InterleavingScheduler())
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=48)
+        reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                for i, p in enumerate(prompts)]
+        comps = {c.rid: c for c in eng.serve(reqs)}
+        for i, p in enumerate(prompts):
+            assert comps[i].tokens == ref.generate([p], max_new_tokens=4)[0]
+        # dedicated prefill ticks: more ticks than the mixed engine needs
+        ref_comps = {c.rid: c for c in ref.serve(
+            [Request(prompt=p, max_new_tokens=4, rid=i)
+             for i, p in enumerate(prompts)])}
+        assert eng.stats().ticks > ref.stats().ticks
+        assert comps[0].tokens == ref_comps[0].tokens
+
+    def test_default_phase_is_mixed(self):
+        from repro.serving import FIFOScheduler, Scheduler
+        for sched in (Scheduler(), FIFOScheduler(),
+                      SLOBatchScheduler(target_p95_ms=10.0)):
+            assert sched.phase(3, 1) == "mixed"
+
+
+def test_sharded_lm_decode_on_cpu_mesh():
+    """The tentpole regression: ServeEngine under a ShardedScheduler on a
+    2-device CPU mesh — KV caches sharded along the slot axis — generates
+    exactly the same greedy tokens as per-request generation on the plain
+    engine, for the dense and vlm families (subprocess: the test process
+    is pinned to one device)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, numpy as np
+from jax.sharding import NamedSharding
+from repro.models import lm
+from repro.models.common import LMConfig
+from repro.launch.mesh import make_mesh
+from repro.serving import Request, ServeEngine, ShardedScheduler
+
+def tiny(family="dense", **kw):
+    base = dict(arch_id="tiny-" + family, family=family, n_layers=2,
+                d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                remat=False, compute_dtype="float32",
+                param_dtype="float32")
+    base.update(kw)
+    return LMConfig(**base)
+
+PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+for name, cfg in [("dense", tiny()),
+                  ("vlm", tiny("vlm", n_layers=3, cross_attn_every=2,
+                               n_image_tokens=8))]:
+    params = lm.init(cfg, jax.random.key(0))
+    mesh = make_mesh((2,), ("data",))
+    sched = ShardedScheduler(mesh)
+    assert sched.n_devices == 2
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=48, scheduler=sched)
+    # the slot (batch) axis of the KV cache is really sharded
+    leaf = jax.tree.leaves(eng._caches)[0]
+    assert isinstance(leaf.sharding, NamedSharding)
+    assert "data" in tuple(leaf.sharding.spec), leaf.sharding
+    ref = ServeEngine(cfg, params, n_slots=2, max_len=48)
+    reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+            for i, p in enumerate(PROMPTS)]
+    comps = {c.rid: c for c in eng.serve(reqs)}
+    for i, p in enumerate(PROMPTS):
+        want = ref.generate([p], max_new_tokens=4)[0]
+        assert comps[i].tokens == want, (name, i, comps[i].tokens, want)
+    print(name, "OK")
+
+# capacity must divide over the mesh's batch devices
+try:
+    ServeEngine(tiny(), lm.init(tiny(), jax.random.key(0)), n_slots=3,
+                max_len=48, scheduler=ShardedScheduler(
+                    make_mesh((2,), ("data",))))
+except ValueError as e:
+    assert "divisible" in str(e), e
+    print("DIVISIBILITY_OK")
+print("SHARDED_LM_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SHARDED_LM_OK" in r.stdout, r.stdout + r.stderr
+    assert "DIVISIBILITY_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_sharded_scheduler_on_cpu_mesh():

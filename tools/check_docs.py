@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs-consistency check (run by CI and tests/test_docs.py).
+
+Two guarantees, so the docs cannot silently rot:
+
+1. **Module map** — every backticked dotted ``repro.*`` reference in
+   ``docs/architecture.md`` (and the other ``docs/*.md``) must resolve:
+   either importable as a module, or an attribute of its importable
+   parent (classes/functions like ``repro.serving.EngineCore``).
+2. **README quickstart** — every ```` ```python ```` fenced block in
+   ``README.md`` is extracted and executed (doctest-style, one shared
+   namespace in file order), so the quickstart keeps running as the API
+   moves.
+
+Usage: ``PYTHONPATH=src python tools/check_docs.py`` from the repo root
+(CI does exactly this).  Exits non-zero listing every failure.
+"""
+
+from __future__ import annotations
+
+import importlib
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "docs" / "architecture.md",
+             REPO / "docs" / "serving.md",
+             REPO / "docs" / "benchmarks.md"]
+README = REPO / "README.md"
+
+_REF_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+_PY_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_module_refs() -> list:
+    """Resolve every `repro.x[.y...]` reference named in the docs."""
+    failures = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            failures.append(f"{doc.relative_to(REPO)}: file missing")
+            continue
+        for ref in sorted(set(_REF_RE.findall(doc.read_text()))):
+            if not _resolves(ref):
+                failures.append(
+                    f"{doc.relative_to(REPO)}: `{ref}` does not resolve "
+                    "to a module or module attribute")
+    return failures
+
+
+def _resolves(ref: str) -> bool:
+    try:
+        if importlib.util.find_spec(ref) is not None:
+            return True
+    except ModuleNotFoundError:
+        pass
+    parent, _, attr = ref.rpartition(".")
+    try:
+        return hasattr(importlib.import_module(parent), attr)
+    except Exception:
+        return False
+
+
+def check_readme_snippets() -> list:
+    """Execute the README's ```python blocks in one shared namespace."""
+    failures = []
+    blocks = _PY_BLOCK_RE.findall(README.read_text())
+    if not blocks:
+        return [f"{README.name}: no ```python quickstart block found"]
+    ns: dict = {"__name__": "__readme__"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"README.md[python #{i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            failures.append(f"README.md python block #{i} failed: "
+                            f"{type(e).__name__}: {e}")
+            break               # later blocks may depend on this one
+    return failures
+
+
+def main() -> int:
+    failures = check_module_refs()
+    print(f"[check_docs] module refs: "
+          f"{'OK' if not failures else f'{len(failures)} broken'}")
+    snippet_failures = check_readme_snippets()
+    print(f"[check_docs] README snippets: "
+          f"{'OK' if not snippet_failures else 'FAILED'}")
+    failures += snippet_failures
+    for f in failures:
+        print(f"  FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
