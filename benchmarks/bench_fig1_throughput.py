@@ -124,5 +124,10 @@ if __name__ == "__main__":
                     help="paper-scale settings (slow on CPU)")
     ap.add_argument("--slo-ms", type=float, default=200.0,
                     help="SLO scheduler p95 tick-latency target")
+    ap.add_argument("--json", default=None,
+                    help="write a BENCH_fig1.json perf-trajectory record")
     args = ap.parse_args()
-    run(quick=not args.full, tiny=args.tiny, slo_ms=args.slo_ms)
+    results = run(quick=not args.full, tiny=args.tiny, slo_ms=args.slo_ms)
+    if args.json:
+        mode = "tiny" if args.tiny else ("full" if args.full else "quick")
+        bc.write_bench_json(args.json, "fig1", results, mode=mode)

@@ -91,6 +91,48 @@ def test_error(params, cfg, data) -> float:
     return 100.0 * (1.0 - float(jnp.mean((preds == te_y))))
 
 
+def jsonable(x: Any) -> Any:
+    """Best-effort conversion of a bench result tree to JSON types."""
+    if isinstance(x, dict):
+        return {str(k): jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [jsonable(v) for v in x]
+    if isinstance(x, (np.floating, np.integer)):
+        return x.item()
+    if isinstance(x, (jnp.ndarray, np.ndarray)):
+        return np.asarray(x).tolist()
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    return repr(x)
+
+
+def write_bench_json(path: str, bench: str, results: Any,
+                     mode: str = "quick") -> str:
+    """Write one machine-readable ``BENCH_<key>.json`` perf-trajectory
+    record: the bench's result dict plus enough metadata (timestamp,
+    backend, mode) for CI artifacts to accumulate into a history."""
+    import json
+    import os
+    import platform
+
+    payload = {
+        "schema": "repro-bench-v1",
+        "bench": bench,
+        "mode": mode,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "results": jsonable(results),
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"[bench] wrote {path}")
+    return path
+
+
 def print_table(title: str, header: List[str],
                 rows: List[List[Any]]) -> None:
     print(f"\n== {title} ==")

@@ -8,12 +8,13 @@
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
 from benchmarks import (bench_fig1_throughput, bench_fig5_curves,
                         bench_fig8_routing_ops, bench_table1_pruning,
-                        bench_table2_resources)
+                        bench_table2_resources, common as bc)
 
 BENCHES = {
     "fig1": ("Fig.1 throughput orig/pruned/optimized",
@@ -31,6 +32,9 @@ def main():
                     help="paper-scale settings (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig1,fig8")
+    ap.add_argument("--json-dir", default=None,
+                    help="write one machine-readable BENCH_<key>.json "
+                         "perf-trajectory record per bench to this dir")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(BENCHES)
 
@@ -42,8 +46,12 @@ def main():
         print(f"\n##### [{key}] {title} " + "#" * 20)
         t0 = time.time()
         try:
-            fn(quick=not args.full)
+            results = fn(quick=not args.full)
             print(f"[{key}] done in {time.time() - t0:.1f}s")
+            if args.json_dir:
+                bc.write_bench_json(
+                    os.path.join(args.json_dir, f"BENCH_{key}.json"),
+                    key, results, mode="full" if args.full else "quick")
         except Exception as e:  # noqa: BLE001 — report all benches
             failures.append((key, repr(e)))
             traceback.print_exc()

@@ -100,14 +100,16 @@ def route_pallas(u_hat: jax.Array, n_iters: int = 3,
                  softmax_mode: str = "taylor",
                  interpret: bool | None = None
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Fused VMEM-resident routing kernel (kernels/routing).
+    """Fused VMEM-resident routing kernel, dispatched through the
+    :data:`repro.kernels.registry` (block sizes come from the tuner cache
+    or the deterministic legalized defaults).
 
-    ``interpret=None`` lets the kernel wrapper probe the backend (compiled
-    on TPU, interpret mode elsewhere).
+    ``interpret=None`` lets the registry probe the backend (compiled on
+    TPU, interpret mode elsewhere).
     """
-    from repro.kernels.routing import ops as routing_ops
+    from repro import kernels
 
-    return routing_ops.fused_routing(
+    return kernels.fused_routing(
         u_hat, n_iters=n_iters, softmax_mode=softmax_mode,
         interpret=interpret)
 

@@ -75,7 +75,8 @@ class DeployedCapsNet:
         """images -> predicted class ids (B,)."""
         return jnp.argmax(self.forward(images), axis=-1)
 
-    def serve(self, batch_size: int = 32, scheduler: Any = None):
+    def serve(self, batch_size: int = 32, scheduler: Any = None,
+              kernel_tune: Any = None):
         """Wrap this artifact in a :class:`repro.serving.CapsuleEngine`
         so the Fig. 6 pipeline flows straight into serving:
 
@@ -87,11 +88,14 @@ class DeployedCapsNet:
         None).  The returned engine's ``submit()`` is thread-safe and
         non-blocking; drive it with ``run_until_idle()`` or a ``tick()``
         loop and read per-class latency p50/p95 from ``stats()``.
+        ``kernel_tune=True`` makes ``engine.warmup()`` autotune the fused
+        routing kernel's block sizes and bind the winners into the tick
+        executables (see :mod:`repro.kernels.tuning`).
         """
         from repro.serving import CapsuleEngine
 
         return CapsuleEngine(self, batch_size=batch_size,
-                             scheduler=scheduler)
+                             scheduler=scheduler, kernel_tune=kernel_tune)
 
     def save(self, directory: str, step: int = 0) -> str:
         """Checkpoint the params (atomic publish) + a deploy manifest."""

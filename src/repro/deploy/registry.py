@@ -157,18 +157,18 @@ def _build_optimized(spec: RoutingSpec) -> RouteFn:
 
 
 def _pallas_available() -> bool:
-    try:
-        from jax.experimental import pallas  # noqa: F401
-    except Exception:
-        return False
-    return True
+    # thin view over the kernel registry: availability is whatever the
+    # fused_routing KernelSpec's own probe says
+    from repro.kernels.registry import registry as kernel_registry
+
+    return kernel_registry.get("fused_routing").is_available()
 
 
 def _build_pallas(spec: RoutingSpec) -> RouteFn:
-    from repro.kernels.routing import ops as routing_ops
+    from repro import kernels
 
     def route_pallas(u_hat, n_iters: int = 3):
-        return routing_ops.fused_routing(
+        return kernels.fused_routing(
             u_hat, n_iters=n_iters, softmax_mode=spec.softmax,
             interpret=spec.interpret)
 

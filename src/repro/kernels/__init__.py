@@ -1,12 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel subsystem: registry-dispatched, autotunable kernels.
 
-import jax
+Every kernel in this package is registered once in
+:mod:`repro.kernels.registry` as a typed :class:`KernelSpec` — Pallas
+impl, pure-jnp reference, availability probe, and its tunable
+block-size space — and dispatched through :data:`registry` (or the
+ergonomic wrappers re-exported here).  Block sizes come from the
+deterministic legalized defaults (``tune=False``, the CI path) or the
+measured on-disk autotuner cache (:mod:`repro.kernels.tuning`).
 
+Backend capability (Pallas compiles natively only on TPU; cpu/gpu run
+the interpreter) is probed in exactly one place: ``needs_interpret``.
+"""
 
-def needs_interpret() -> bool:
-    """Shared backend capability probe for every Pallas wrapper: the
-    kernels compile natively only on TPU; all other backends (cpu, gpu)
-    run the Pallas interpreter."""
-    return jax.default_backend() != "tpu"
+from repro.kernels.registry import (KernelRegistry, KernelSpec,  # noqa: F401
+                                    flash_attention, fused_routing,
+                                    needs_interpret, registry,
+                                    taylor_softmax)
+from repro.kernels import tuning  # noqa: F401

@@ -1,0 +1,4 @@
+# Dispatch lives in repro.kernels.registry ("flash_attention"); this
+# package keeps the Pallas body and the jnp oracle only.
+from repro.kernels.attention import ref  # noqa: F401
+from repro.kernels.attention.kernel import flash_attention_pallas  # noqa: F401

@@ -1,0 +1,417 @@
+"""Unified kernel registry: typed specs + capability-probed dispatch.
+
+This generalizes the probe-and-fallback design of
+``repro.deploy.registry`` from routing variants to *every* Pallas kernel
+in the repo.  One :class:`KernelSpec` per kernel declares:
+
+  * ``build()`` — the jitted Pallas entry point (lazy import, so merely
+    importing ``repro.kernels`` never pulls ``jax.experimental.pallas``);
+  * ``reference()`` — the pure-jnp oracle with the same semantics;
+  * ``is_available()`` — the capability probe (Pallas importable);
+  * ``space`` — the FastCaps design space for this kernel: the tunable
+    block sizes (measured by :mod:`repro.kernels.tuning`) plus the
+    numerics-changing knobs (``softmax_mode``) that benchmarks and the
+    parity harness sweep but the timing tuner never flips;
+  * ``legalize`` — shape-aware config legalization (every block size
+    becomes a divisor of its dimension via ``largest_divisor``);
+  * ``example_cases`` / ``make_example`` — canonical inputs shared by
+    the parity tests, the selfcheck CLI and the pretuner.
+
+Dispatch (:meth:`KernelRegistry.call`) resolves, in order: explicit
+per-call overrides > tuned config from the on-disk cache (when the
+:func:`repro.kernels.tuning.tuning` scope or ``tune=`` asks for it) >
+the deterministic legalized defaults (the ``tune=False`` CI path).
+Backend capability (``interpret`` mode off-TPU) is probed in exactly one
+place — :func:`repro.kernels.tuning.needs_interpret` — and an
+unavailable Pallas toolchain falls back to the reference oracle, so the
+same call sites run everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+from repro.kernels import tuning
+from repro.kernels.tuning import largest_divisor, needs_interpret  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel: impls, probe, and its tunable design space.
+
+    ``space`` maps every design-space knob to its candidate values;
+    ``tuned`` names the subset the measured autotuner may vary (block
+    sizes — numerics-preserving by construction).  ``base_config`` holds
+    the historical hard-coded values; ``legalize(config, *args, **kw)``
+    clamps a candidate to the concrete shapes (divisibility).  The
+    ``example_cases`` dicts drive the registry-wide parity harness and
+    the pretune CLI: ``make_example(case) -> (args, kwargs)``.
+    """
+
+    name: str
+    build: Callable[[], Callable[..., Any]]
+    reference: Callable[[], Callable[..., Any]]
+    space: Mapping[str, tuple]
+    tuned: Tuple[str, ...]
+    base_config: Mapping[str, Any]
+    legalize: Callable[..., Dict[str, Any]]
+    make_example: Callable[[Mapping[str, Any]], Tuple[tuple, dict]]
+    example_cases: Tuple[Mapping[str, Any], ...] = ()
+    ref_accepts: Tuple[str, ...] = ()     # semantic kwargs the oracle takes
+    is_available: Callable[[], bool] = lambda: True
+
+    def ref_call(self, *args, **kwargs):
+        """Invoke the jnp oracle, filtering kwargs it does not accept."""
+        fn = self.reference()
+        return fn(*args, **{k: v for k, v in kwargs.items()
+                            if k in self.ref_accepts})
+
+
+class KernelRegistry:
+    """Name -> :class:`KernelSpec`; resolution + dispatch."""
+
+    def __init__(self):
+        self._specs: Dict[str, KernelSpec] = {}
+
+    def register(self, spec: KernelSpec) -> KernelSpec:
+        self._specs[spec.name] = spec
+        return spec
+
+    def names(self):
+        return sorted(self._specs)
+
+    def get(self, name: str) -> KernelSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise ValueError(f"unknown kernel {name!r}; registered: "
+                             f"{self.names()}") from None
+
+    # -- config resolution -------------------------------------------------
+
+    def default_config(self, name: str, *args, **kwargs) -> Dict[str, Any]:
+        """The deterministic ``tune=False`` config for these shapes."""
+        spec = self.get(name)
+        return spec.legalize(dict(spec.base_config), *args, **kwargs)
+
+    def resolve_config(self, name: str, *args,
+                       overrides: Optional[Dict[str, Any]] = None,
+                       tune: Optional[bool] = None, **kwargs
+                       ) -> Dict[str, Any]:
+        """Overrides > tuned cache entry (if tuning) > legalized defaults.
+
+        With tuning on and a cache miss, concrete arguments trigger a
+        measured :func:`repro.kernels.tuning.autotune` on the spot;
+        tracers (dispatch at ``jax.jit`` trace time) only read the cache.
+        """
+        spec = self.get(name)
+        config = spec.legalize(dict(spec.base_config), *args, **kwargs)
+        use_tune = tune if tune is not None else tuning.tune_enabled()
+        if use_tune:
+            cache = tuning.default_cache()
+            cached = cache.get(tuning.cache_key_for(spec, args))
+            if cached is None and _all_concrete(args):
+                cached, _ = tuning.autotune(spec, args, kwargs, cache=cache)
+            if cached is not None:
+                merged = dict(spec.base_config)
+                merged.update(cached)
+                config = spec.legalize(merged, *args, **kwargs)
+        if overrides:
+            config.update({k: v for k, v in overrides.items()
+                           if v is not None})
+            config = spec.legalize(config, *args, **kwargs)
+        return config
+
+    # -- dispatch ----------------------------------------------------------
+
+    def call(self, name: str, *args,
+             config: Optional[Dict[str, Any]] = None,
+             interpret: Optional[bool] = None,
+             tune: Optional[bool] = None, **kwargs) -> Any:
+        """Dispatch ``name`` on ``args``: Pallas impl with the resolved
+        config when available, the jnp reference otherwise.  ``kwargs``
+        are semantic (``n_iters``, ``softmax_mode``, ``causal``, ...);
+        tunable overrides ride in ``config``."""
+        spec = self.get(name)
+        if not spec.is_available():
+            return spec.ref_call(*args, **kwargs)
+        resolved = self.resolve_config(name, *args, overrides=config,
+                                       tune=tune, **kwargs)
+        if interpret is None:
+            interpret = needs_interpret()
+        return spec.build()(*args, interpret=interpret, **kwargs, **resolved)
+
+
+def _all_concrete(args) -> bool:
+    import jax
+
+    return not any(isinstance(a, jax.core.Tracer) for a in args)
+
+
+def _pallas_available() -> bool:
+    try:
+        from jax.experimental import pallas  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Registered kernels (jitted entry points live here; the kernel packages
+# keep only the Pallas bodies and the jnp oracles)
+# ---------------------------------------------------------------------------
+
+registry = KernelRegistry()
+
+
+def _rand(seed: int, shape, dtype="float32", scale: float = 1.0):
+    import jax
+    import jax.numpy as jnp
+
+    x = jax.random.normal(jax.random.key(seed), shape) * scale
+    return x.astype(jnp.dtype(dtype))
+
+
+# -- fused_routing ----------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fused_routing():
+    import jax
+
+    from repro.kernels.routing.routing_kernel import fused_routing_pallas
+
+    @functools.partial(jax.jit, static_argnames=(
+        "n_iters", "softmax_mode", "batch_block", "interpret"))
+    def fused_routing_entry(u_hat, n_iters=3, softmax_mode="exact",
+                            batch_block=8, interpret=True):
+        return fused_routing_pallas(
+            u_hat, n_iters=n_iters, softmax_mode=softmax_mode,
+            batch_block=batch_block, interpret=interpret)
+
+    return fused_routing_entry
+
+
+def _routing_reference():
+    from repro.kernels.routing.ref import fused_routing_ref
+
+    return fused_routing_ref
+
+
+def _routing_legalize(config, u_hat, **kwargs):
+    config["batch_block"] = largest_divisor(u_hat.shape[0],
+                                            config["batch_block"])
+    return config
+
+
+def _routing_example(case):
+    shape = case.get("shape", (4, 24, 10, 16))
+    u = _rand(case.get("seed", 0), shape, case.get("dtype", "float32"),
+              scale=0.2)
+    return (u,), {"n_iters": case.get("n_iters", 3),
+                  "softmax_mode": case.get("softmax_mode", "exact")}
+
+
+registry.register(KernelSpec(
+    name="fused_routing",
+    build=_build_fused_routing,
+    reference=_routing_reference,
+    space={"batch_block": (1, 2, 4, 8, 16),
+           "softmax_mode": ("exact", "taylor")},
+    tuned=("batch_block",),
+    base_config={"batch_block": 8},
+    legalize=_routing_legalize,
+    make_example=_routing_example,
+    example_cases=(
+        {"shape": (4, 24, 10, 16), "softmax_mode": "exact", "atol": 1e-5},
+        {"shape": (9, 30, 10, 16), "softmax_mode": "exact", "atol": 1e-5},
+        {"shape": (6, 36, 5, 8), "softmax_mode": "taylor", "atol": 1e-4},
+        {"shape": (3, 252, 10, 16), "softmax_mode": "taylor", "atol": 1e-4},
+    ),
+    ref_accepts=("n_iters", "softmax_mode"),
+    is_available=_pallas_available,
+))
+
+
+# -- taylor_softmax ---------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_taylor_softmax():
+    import jax
+
+    from repro.kernels.softmax.kernel import taylor_softmax_pallas
+
+    @functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+    def taylor_softmax_entry(x, row_block=256, interpret=True):
+        return taylor_softmax_pallas(x, row_block=row_block,
+                                     interpret=interpret)
+
+    return taylor_softmax_entry
+
+
+def _softmax_reference():
+    from repro.kernels.softmax.ref import taylor_softmax_ref
+
+    return taylor_softmax_ref
+
+
+def _softmax_legalize(config, x, **kwargs):
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    config["row_block"] = largest_divisor(rows, config["row_block"])
+    return config
+
+
+def _softmax_example(case):
+    shape = case.get("shape", (8, 16))
+    x = _rand(case.get("seed", 0), shape, case.get("dtype", "float32"),
+              scale=case.get("scale", 5.0))
+    return (x,), {}
+
+
+registry.register(KernelSpec(
+    name="taylor_softmax",
+    build=_build_taylor_softmax,
+    reference=_softmax_reference,
+    space={"row_block": (32, 64, 128, 256, 512)},
+    tuned=("row_block",),
+    base_config={"row_block": 256},
+    legalize=_softmax_legalize,
+    make_example=_softmax_example,
+    example_cases=(
+        {"shape": (8, 16), "atol": 1e-6},
+        {"shape": (33, 250), "atol": 1e-6},          # odd/ragged rows
+        {"shape": (4, 7, 64), "atol": 1e-6},
+        {"shape": (1, 1024), "atol": 1e-6},
+        {"shape": (16, 64), "dtype": "bfloat16", "scale": 3.0,
+         "atol": 1e-2},
+    ),
+    ref_accepts=(),
+    is_available=_pallas_available,
+))
+
+
+# -- flash_attention --------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_flash_attention():
+    import jax
+
+    from repro.kernels.attention.kernel import flash_attention_pallas
+
+    @functools.partial(jax.jit, static_argnames=(
+        "causal", "q_offset", "q_block", "kv_block", "softmax_mode",
+        "interpret"))
+    def flash_attention_entry(q, k, v, causal=True, q_offset=0,
+                              softmax_mode="exact", q_block=512,
+                              kv_block=512, interpret=True):
+        """(B, S, H, D) GQA API over the (BK, G, S, D) flash kernel."""
+        b, s, h, d = q.shape
+        t, nkv = k.shape[1], k.shape[2]
+        g = h // nkv
+        qr = (q.reshape(b, s, nkv, g, d).transpose(0, 2, 3, 1, 4)
+              .reshape(b * nkv, g, s, d))
+        kr = k.transpose(0, 2, 1, 3).reshape(b * nkv, t, d)
+        vr = v.transpose(0, 2, 1, 3).reshape(b * nkv, t, d)
+        o = flash_attention_pallas(
+            qr, kr, vr, causal=causal, q_offset=q_offset, q_block=q_block,
+            kv_block=kv_block, softmax_mode=softmax_mode,
+            interpret=interpret)
+        return (o.reshape(b, nkv, g, s, d).transpose(0, 3, 1, 2, 4)
+                .reshape(b, s, h, d))
+
+    return flash_attention_entry
+
+
+def _attention_reference():
+    from repro.kernels.attention.ref import attention_ref
+
+    return attention_ref
+
+
+def _attention_legalize(config, q, k=None, v=None, **kwargs):
+    s = q.shape[1]
+    t = k.shape[1] if k is not None else s
+    config["q_block"] = largest_divisor(s, config["q_block"])
+    config["kv_block"] = largest_divisor(t, config["kv_block"])
+    return config
+
+
+def _attention_example(case):
+    b, s, t, h, k, d = case.get("dims", (2, 128, 128, 4, 2, 32))
+    dtype = case.get("dtype", "float32")
+    q = _rand(case.get("seed", 0), (b, s, h, d), dtype)
+    kk = _rand(case.get("seed", 0) + 1, (b, t, k, d), dtype)
+    v = _rand(case.get("seed", 0) + 2, (b, t, k, d), dtype)
+    return (q, kk, v), {"causal": case.get("causal", True),
+                        "q_offset": case.get("q_offset", 0),
+                        "softmax_mode": case.get("softmax_mode", "exact")}
+
+
+registry.register(KernelSpec(
+    name="flash_attention",
+    build=_build_flash_attention,
+    reference=_attention_reference,
+    space={"q_block": (64, 128, 256, 512),
+           "kv_block": (64, 128, 256, 512),
+           "softmax_mode": ("exact", "taylor")},
+    tuned=("q_block", "kv_block"),
+    base_config={"q_block": 512, "kv_block": 512},
+    legalize=_attention_legalize,
+    make_example=_attention_example,
+    example_cases=(
+        {"dims": (2, 128, 128, 8, 4, 32), "causal": True, "atol": 2e-5},
+        {"dims": (2, 64, 256, 8, 2, 32), "causal": False, "atol": 2e-5},
+        {"dims": (1, 192, 192, 2, 1, 64), "causal": True,
+         "atol": 2e-5},                               # non-pow2 seq
+        {"dims": (1, 64, 256, 4, 2, 32), "causal": True, "q_offset": 192,
+         "atol": 2e-5},                               # decode window
+        {"dims": (1, 128, 128, 4, 2, 32), "softmax_mode": "taylor",
+         "atol": 5e-2},                # vs exact oracle: approx-exp bound
+    ),
+    ref_accepts=("causal", "q_offset"),
+    is_available=_pallas_available,
+))
+
+
+# ---------------------------------------------------------------------------
+# Public dispatch wrappers (ergonomic signatures over registry.call)
+# ---------------------------------------------------------------------------
+
+
+def fused_routing(u_hat, n_iters: int = 3, softmax_mode: str = "exact",
+                  batch_block: Optional[int] = None,
+                  interpret: Optional[bool] = None,
+                  tune: Optional[bool] = None):
+    """Fused dynamic routing: u_hat (B, I, J, D) -> (v, c)."""
+    return registry.call(
+        "fused_routing", u_hat, n_iters=n_iters, softmax_mode=softmax_mode,
+        config={"batch_block": batch_block}, interpret=interpret, tune=tune)
+
+
+def taylor_softmax(x, row_block: Optional[int] = None,
+                   interpret: Optional[bool] = None,
+                   tune: Optional[bool] = None):
+    """Eq. 2 Taylor softmax over the last axis (any leading shape)."""
+    return registry.call("taylor_softmax", x,
+                         config={"row_block": row_block},
+                         interpret=interpret, tune=tune)
+
+
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    softmax_mode: str = "exact",
+                    q_block: Optional[int] = None,
+                    kv_block: Optional[int] = None,
+                    interpret: Optional[bool] = None,
+                    tune: Optional[bool] = None):
+    """q (B, S, H, D); k, v (B, T, K, D); H = K * G -> (B, S, H, D)."""
+    return registry.call(
+        "flash_attention", q, k, v, causal=causal, q_offset=q_offset,
+        softmax_mode=softmax_mode,
+        config={"q_block": q_block, "kv_block": kv_block},
+        interpret=interpret, tune=tune)

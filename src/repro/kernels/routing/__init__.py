@@ -1,2 +1,4 @@
-from repro.kernels.routing import ops, ref  # noqa: F401
+# Dispatch lives in repro.kernels.registry ("fused_routing"); this
+# package keeps the Pallas body and the jnp oracle only.
+from repro.kernels.routing import ref  # noqa: F401
 from repro.kernels.routing.routing_kernel import fused_routing_pallas  # noqa: F401

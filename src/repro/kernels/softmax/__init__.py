@@ -1,0 +1,4 @@
+# Dispatch lives in repro.kernels.registry ("taylor_softmax"); this
+# package keeps the Pallas body and the jnp oracle only.
+from repro.kernels.softmax import ref  # noqa: F401
+from repro.kernels.softmax.kernel import taylor_softmax_pallas  # noqa: F401

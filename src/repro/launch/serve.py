@@ -60,7 +60,10 @@ def serve_lm(args) -> None:
     params = lm.init(cfg, jax.random.key(0))
     engine = ServeEngine(cfg, params, n_slots=args.slots,
                          max_len=args.max_len,
-                         scheduler=_make_scheduler(args))
+                         scheduler=_make_scheduler(args),
+                         kernel_tune=args.kernel_tune or None)
+    if args.kernel_tune:
+        engine.warmup()
     rng = np.random.RandomState(0)
     reqs = [Request(prompt=list(rng.randint(1, cfg.vocab // 2,
                                             size=rng.randint(3, 9))),
@@ -114,7 +117,8 @@ def serve_capsnet(args) -> None:
           f"{deployed.flops_per_image / 1e6:.1f} MFLOP/image")
 
     engine = deployed.serve(batch_size=args.batch,
-                            scheduler=_make_scheduler(args))
+                            scheduler=_make_scheduler(args),
+                            kernel_tune=args.kernel_tune or None)
     engine.warmup()
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -153,6 +157,9 @@ def main():
                     help="SLO scheduler p95 tick-latency target")
     # LM options
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--kernel-tune", action="store_true",
+                    help="autotune kernel block sizes at warm-up and bind "
+                         "the winners into the tick executables")
     ap.add_argument("--stream", action="store_true",
                     help="LM: print token-level StreamEvents as they are "
                          "generated (poll(stream=True))")

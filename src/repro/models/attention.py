@@ -5,7 +5,8 @@ Three interchangeable inner implementations (cfg.attn_impl):
   * ``chunked``   — flash-style online-softmax over KV blocks via lax.scan;
                     O(S * kv_block) transient memory.  Used by the dry-run
                     (Pallas does not lower to the CPU backend non-interpreted).
-  * ``pallas``    — kernels/flash_attention (TPU target; interpret-mode on CPU).
+  * ``pallas``    — the registry's ``flash_attention`` kernel
+                    (TPU target; interpret-mode on CPU).
 
 ``softmax_mode="taylor"`` swaps the exact exp for the FastCaps Eq.2 Taylor
 polynomial (with range reduction — see core/approx_math.py), reproducing the
@@ -201,12 +202,13 @@ def _inner_attention(q, k, v, cfg: LMConfig, causal: bool, q_offset: int = 0,
         assert kv_valid_len is None
         return _reference_attention(q, k, v, cfg, causal, q_offset)
     if cfg.attn_impl == "pallas":
-        from repro.kernels.flash_attention import ops as fa_ops
+        from repro import kernels
 
         if kv_valid_len is None and q.shape[1] > 1:
-            # interpret mode defaults to the wrapper's own backend probe
-            return fa_ops.flash_attention(q, k, v, causal=causal,
-                                          q_offset=q_offset)
+            # registry dispatch: backend probe + tuned/default block sizes
+            return kernels.flash_attention(q, k, v, causal=causal,
+                                           q_offset=q_offset,
+                                           softmax_mode=cfg.softmax_mode)
         # decode and masked-cache paths fall back to chunked
     return _chunked_attention(q, k, v, cfg, causal, q_offset, kv_valid_len)
 

@@ -70,14 +70,15 @@ class CapsuleEngine(EngineCore):
 
     def __init__(self, deployed: Any, batch_size: int = 32,
                  scheduler: Optional[Scheduler] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 kernel_tune: Optional[bool] = None):
         self.deployed = deployed
         self.batch_size = batch_size
         cfg = deployed.cfg
         self._frame_shape = (cfg.image_hw, cfg.image_hw, cfg.in_channels)
         self._n_classes = cfg.n_classes
         super().__init__(capacity=batch_size, scheduler=scheduler,
-                         clock=clock)
+                         clock=clock, kernel_tune=kernel_tune)
 
     # -- workload hooks ----------------------------------------------------
 
@@ -126,3 +127,29 @@ class CapsuleEngine(EngineCore):
             dummy = np.zeros((n,) + self._frame_shape, np.float32)
             jax.block_until_ready(
                 self.deployed.forward(self.scheduler.place(dummy)))
+
+    def _pretune(self) -> None:
+        # bind-time kernel tuning: measure fused_routing block sizes for
+        # every u_hat shape the scheduler's batch shapes imply, so the
+        # warm-up traces of deployed.forward resolve tuned configs
+        spec = getattr(self.deployed, "spec", None)
+        if spec is None or spec.mode != "pallas":
+            return
+        from repro.kernels import tuning as ktuning
+        from repro.kernels.registry import registry as kernel_registry
+
+        kspec = kernel_registry.get("fused_routing")
+        if not kspec.is_available():
+            return
+        cfg = self.deployed.cfg
+        cache = ktuning.default_cache()
+        for n in self.scheduler.shapes(self.capacity):
+            u_hat = (jax.random.normal(
+                jax.random.key(0),
+                (n, cfg.n_primary_caps, cfg.n_classes, cfg.digit_dim))
+                * 0.2)
+            if cache.get(ktuning.cache_key_for(kspec, (u_hat,))) is None:
+                ktuning.autotune(
+                    kspec, (u_hat,),
+                    {"n_iters": cfg.routing_iters,
+                     "softmax_mode": spec.softmax}, cache=cache)

@@ -38,12 +38,14 @@ delegated to a pluggable :class:`repro.serving.Scheduler`.
 from __future__ import annotations
 
 import bisect
+import contextlib
 import dataclasses
 import threading
 import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.kernels import tuning as kernel_tuning
 from repro.serving.schedulers import FIFOScheduler, Scheduler, TickRecord
 
 
@@ -213,17 +215,29 @@ class EngineCore:
       * ``_batch_for(n_active) -> int`` — compiled batch for this tick
         (defaults to ``scheduler.quantize``; fixed-cache workloads
         override to capacity);
-      * ``_warmup()`` — optional eager compile outside the measured path.
+      * ``_warmup()`` — optional eager compile outside the measured path;
+      * ``_pretune()`` — optional measured kernel autotuning with
+        concrete example inputs, run by ``warmup()`` before anything
+        compiles when ``kernel_tune=True``.
+
+    ``kernel_tune`` selects the engine's kernel-config policy: ``True``
+    binds tick executables against the autotuner cache (the
+    :mod:`repro.kernels` registry resolves tuned block sizes at trace
+    time, so the choice is frozen into the compiled executables),
+    ``False`` pins the deterministic defaults, and ``None`` (default)
+    inherits the ambient :func:`repro.kernels.tuning.tuning` policy.
 
     ``clock`` is injectable so schedulers can be tested against a
     deterministic time source.
     """
 
     def __init__(self, capacity: int, scheduler: Optional[Scheduler] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 kernel_tune: Optional[bool] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
+        self.kernel_tune = kernel_tune
         self.scheduler = scheduler or FIFOScheduler()
         self.scheduler.bind(self)
         self._clock = clock
@@ -233,6 +247,7 @@ class EngineCore:
         self._completions: Deque[Any] = deque()
         self._events: Deque[StreamEvent] = deque()
         self._stats = EngineStats()
+        self._tick_excluded = 0.0      # one-off hook time (autotuning)
         self._next_rid = 0
         self._lock = threading.Lock()          # queue / requests / stats
         self._tick_lock = threading.Lock()     # one ticker at a time
@@ -258,6 +273,27 @@ class EngineCore:
 
     def _warmup(self) -> None:
         pass
+
+    def _pretune(self) -> None:
+        """Measured kernel autotuning with concrete inputs (workloads
+        override); runs before the first trace so trace-time registry
+        dispatch finds the cache populated."""
+        pass
+
+    def _kernel_scope(self):
+        """Tuning-policy scope every hook runs under (fresh per use —
+        context managers are single-shot)."""
+        if self.kernel_tune is None:
+            return contextlib.nullcontext()
+        return kernel_tuning.tuning(self.kernel_tune)
+
+    def _exclude_tick_time(self, seconds: float) -> None:
+        """Hooks call this (ticker thread only) to mark one-off work —
+        e.g. a measured kernel autotune on a first-seen shape bucket —
+        so it is subtracted from the tick wall before throughput stats
+        and ``scheduler.observe`` see it; an SLO scheduler must react to
+        serving time, not to a one-time measurement."""
+        self._tick_excluded += max(float(seconds), 0.0)
 
     def _request_class(self, request: Any) -> str:
         """Coarse label keying the latency histogram (override per
@@ -404,22 +440,25 @@ class EngineCore:
                 return False
 
             t0 = self._clock()
+            self._tick_excluded = 0.0
             finished: List[int] = []
             items = 0
-            if new:
-                f, i = self._admit(new)
-                finished += f
-                items += i
-            done = set(finished)
-            still = [(s, t) for s, t in active if s not in done]
-            n_batch = 0
-            if still and not (phase == "prefill" and new):
-                n_batch = max(len(still),
-                              min(self._batch_for(len(still)), self.capacity))
-                f, i = self._step(still, n_batch)
-                finished += f
-                items += i
-            wall = max(self._clock() - t0, 0.0)
+            with self._kernel_scope():
+                if new:
+                    f, i = self._admit(new)
+                    finished += f
+                    items += i
+                done = set(finished)
+                still = [(s, t) for s, t in active if s not in done]
+                n_batch = 0
+                if still and not (phase == "prefill" and new):
+                    n_batch = max(len(still),
+                                  min(self._batch_for(len(still)),
+                                      self.capacity))
+                    f, i = self._step(still, n_batch)
+                    finished += f
+                    items += i
+            wall = max(self._clock() - t0 - self._tick_excluded, 0.0)
 
             with self._lock:
                 st = self._stats
@@ -460,8 +499,17 @@ class EngineCore:
         return self.run_until_idle()
 
     def warmup(self) -> None:
-        """Compile the tick executables outside the measured path."""
-        self._warmup()
+        """Compile the tick executables outside the measured path.
+
+        With ``kernel_tune=True`` this is also the bind point for tuned
+        kernel configs: ``_pretune`` measures candidates eagerly
+        (populating the on-disk autotuner cache), then the warm-up
+        traces pick the cached winners up and freeze them into the tick
+        executables."""
+        with self._kernel_scope():
+            if self.kernel_tune:
+                self._pretune()
+            self._warmup()
 
     def stats(self) -> EngineStats:
         """Snapshot of the cumulative :class:`EngineStats` (thread-safe).

@@ -14,8 +14,12 @@ path masks each slot's cache beyond its own length.  Dense/vlm families
 are exact — matching per-request generation token-for-token (regression-
 tested); moe is exact up to GShard expert-capacity effects (capacity is
 derived from the *padded* length, which depends on who shares the prefill
-bucket); recurrent families (ssm/hybrid) fold the pad suffix into their
-state (the documented approximation of the previous engine).
+bucket).  Recurrent families (ssm/hybrid) cannot mask a pad suffix out of
+their state after the fact, so their admission is *length-bucketed*: each
+tick's new prompts are grouped by exact length and prefilled with no pad
+suffix at all (exact, regression-tested; one compiled prefill shape per
+distinct prompt length).  ``generate()`` raises on ragged recurrent
+batches instead of silently approximating.
 
 The engine shares ``submit() / poll() / run_until_idle() / stats()`` with
 :class:`repro.serving.CapsuleEngine` via :class:`repro.serving.EngineCore`
@@ -110,19 +114,24 @@ class ServeEngine(EngineCore):
     def __init__(self, cfg: LMConfig, params: Any, n_slots: int = 4,
                  max_len: int = 512, seed: int = 0,
                  scheduler: Optional[Scheduler] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 kernel_tune: Optional[bool] = None):
         assert cfg.family != "audio", "encoder models have no decode path"
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        # recurrent state (ssm/hybrid) cannot mask a pad suffix the way
+        # attention masks cache rows: admission is length-bucketed instead
+        self._recurrent = cfg.family in ("ssm", "hybrid")
         self._rng = np.random.RandomState(seed)
         self._decode = jax.jit(
             lambda p, t, pos, c: lm.decode_step(
                 p, cfg, {"tokens": t, "pos": pos}, c))
         self._prefill = jax.jit(
             lambda p, t, ln, idx, c: self._prefill_scatter(p, t, ln, idx, c))
-        super().__init__(capacity=n_slots, scheduler=scheduler, clock=clock)
+        super().__init__(capacity=n_slots, scheduler=scheduler, clock=clock,
+                         kernel_tune=kernel_tune)
         self._caches = lm.make_caches(cfg, n_slots, max_len)
         self._tok = np.zeros((n_slots,), np.int32)   # pending token per slot
         self._pos = np.zeros((n_slots,), np.int32)   # its cache index
@@ -176,8 +185,19 @@ class ServeEngine(EngineCore):
             self._check_prompt(p)
         if max_new_tokens <= 0:
             return [list(p) for p in prompts]
+        plens = sorted({len(p) for p in prompts})
+        if self._recurrent and len(plens) > 1:
+            raise ValueError(
+                f"ragged prompts (lengths {plens}) in one generate() batch "
+                f"would fold pad tokens into the recurrent "
+                f"({self.cfg.family}) state; pass uniform-length prompts, "
+                f"or submit() them — the engine admits recurrent prompts "
+                f"in exact-length buckets")
         caches = lm.make_caches(self.cfg, b, self.max_len)
-        plen = pow2_bucket(max(len(p) for p in prompts), self.max_len)
+        # recurrent: no pad suffix at all (exact length); attention
+        # families mask the pad, so pow2 bucketing is free
+        plen = (plens[-1] if self._recurrent
+                else pow2_bucket(max(plens), self.max_len))
         tokens = np.zeros((b, plen), np.int32)
         lengths = np.ones((b,), np.int32)
         for i, p in enumerate(prompts):
@@ -231,10 +251,34 @@ class ServeEngine(EngineCore):
                ) -> Tuple[List[int], int]:
         """Ragged batched prefill for the newly admitted slots only: a
         pow2-bucketed sub-batch (cost scales with admissions, not engine
-        capacity) whose cache rows are scattered into the slot caches."""
-        nb = pow2_bucket(len(new), self.capacity)
+        capacity) whose cache rows are scattered into the slot caches.
+
+        Recurrent families (ssm/hybrid) get *length-bucketed admission*
+        instead: the new tasks are grouped by exact prompt length and each
+        group prefills with zero pad suffix, because a recurrent state —
+        unlike a KV cache — cannot mask pad tokens out after the fact.
+        This closes the documented ragged-prefill gap (recurrent serving
+        is exact, regression-tested) at the cost of one compiled prefill
+        shape per distinct prompt length seen.
+        """
+        if self._recurrent:
+            groups: Dict[int, List[Tuple[int, SlotTask]]] = {}
+            for s, task in new:
+                groups.setdefault(len(task.payload.prompt),
+                                  []).append((s, task))
+            finished: List[int] = []
+            for plen in sorted(groups):
+                finished += self._prefill_group(groups[plen], plen)
+            return finished, len(new)
         plen = pow2_bucket(
             max(len(t.payload.prompt) for _, t in new), self.max_len)
+        return self._prefill_group(new, plen), len(new)
+
+    def _prefill_group(self, new: List[Tuple[int, SlotTask]], plen: int
+                       ) -> List[int]:
+        """Prefill one sub-batch whose prompts all fit in ``plen``."""
+        nb = pow2_bucket(len(new), self.capacity)
+        self._maybe_tune_prefill(nb, plen)
         tokens = np.zeros((nb, plen), np.int32)
         lengths = np.ones((nb,), np.int32)
         slot_idx = np.full((nb,), self.capacity, np.int32)  # pad rows: OOB
@@ -259,10 +303,54 @@ class ServeEngine(EngineCore):
             self._pos[s] = lengths[i]
             if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
                 finished.append(s)
-        return finished, len(new)
+        return finished
 
     def _batch_for(self, n_active: int) -> int:
         return self.capacity            # decode shape pinned by the caches
+
+    def _maybe_tune_prefill(self, nb: int, plen: int) -> None:
+        """Measured flash-attention tuning for one exact prefill bucket
+        (``kernel_tune=True`` engines only).
+
+        Prefill shapes depend on traffic (sub-batch and prompt-length
+        buckets), so guessing them at warm-up would tune buckets the
+        runtime never hits.  ``_admit`` runs eagerly, before the jitted
+        prefill traces — the first admission at a new ``(nb, plen)``
+        bucket measures with concrete arrays here, and the trace that
+        immediately follows freezes the cached winner in.  Later
+        admissions in the same bucket hit the cache and pay nothing.
+        """
+        if not self.kernel_tune or self.cfg.attn_impl != "pallas":
+            return
+        from repro.kernels import tuning as ktuning
+        from repro.kernels.registry import registry as kernel_registry
+
+        kspec = kernel_registry.get("flash_attention")
+        if not kspec.is_available():
+            return
+        cfg = self.cfg
+        # measure in the model's compute dtype: the cache key includes
+        # the dtype, and the traced prefill dispatches q/k/v in cdtype
+        cd = cfg.cdtype()
+        q = jax.random.normal(
+            jax.random.key(0), (nb, plen, cfg.n_heads, cfg.head_dim)
+        ).astype(cd)
+        k = jax.random.normal(
+            jax.random.key(1), (nb, plen, cfg.n_kv_heads, cfg.head_dim)
+        ).astype(cd)
+        v = jax.random.normal(
+            jax.random.key(2), (nb, plen, cfg.n_kv_heads, cfg.head_dim)
+        ).astype(cd)
+        cache = ktuning.default_cache()
+        if cache.get(ktuning.cache_key_for(kspec, (q, k, v))) is None:
+            t0 = time.perf_counter()
+            ktuning.autotune(
+                kspec, (q, k, v),
+                {"causal": True, "softmax_mode": cfg.softmax_mode},
+                cache=cache)
+            # one-off measurement, not serving time: keep it out of the
+            # tick wall the SLO scheduler and throughput stats observe
+            self._exclude_tick_time(time.perf_counter() - t0)
 
     def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
               ) -> Tuple[List[int], int]:

@@ -7,7 +7,8 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import routing
-from repro.kernels.routing import ops as rops, ref as rref
+from repro import kernels
+from repro.kernels.routing import ref as rref
 
 
 def u_hat(seed, b=2, i=24, j=10, d=16, scale=0.2):
@@ -85,7 +86,7 @@ class TestKernelSweep:
     @pytest.mark.parametrize("mode", ["exact", "taylor"])
     def test_kernel_vs_oracle(self, b, i, j, d, mode):
         uh = u_hat(b * 1000 + i, b=b, i=i, j=j, d=d)
-        v_k, c_k = rops.fused_routing(uh, softmax_mode=mode)
+        v_k, c_k = kernels.fused_routing(uh, softmax_mode=mode)
         v_r, c_r = rref.fused_routing_ref(uh, softmax_mode=mode)
         np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
                                    atol=2e-5)
@@ -95,7 +96,7 @@ class TestKernelSweep:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_kernel_dtypes(self, dtype):
         uh = u_hat(11, b=4).astype(dtype)
-        v_k, _ = rops.fused_routing(uh)
+        v_k, _ = kernels.fused_routing(uh)
         v_r, _ = rref.fused_routing_ref(uh)
         tol = 1e-5 if dtype == jnp.float32 else 5e-2
         np.testing.assert_allclose(

@@ -285,6 +285,56 @@ class TestRaggedLM:
             eng.submit(Request(prompt=list(range(1, 50))))
 
 
+class TestRecurrentRagged:
+    """Recurrent families (ssm/hybrid) cannot mask a pad suffix out of
+    their state: the engine admits them in exact-length buckets (ragged
+    serving is exact), and ``generate()`` refuses ragged batches."""
+
+    PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+
+    def _engines(self):
+        from repro.models.common import SSMConfig, XLSTMConfig
+
+        ssm = tiny_lm(arch_id="tiny-ssm", family="ssm", d_model=16,
+                      n_heads=2, d_ff=0, vocab=32,
+                      xlstm=XLSTMConfig(slstm_every=2, chunk_size=8))
+        hybrid = tiny_lm(arch_id="tiny-hyb", family="hybrid", d_model=16,
+                         n_heads=2, d_ff=32, vocab=32, hybrid_attn_every=2,
+                         ssm=SSMConfig(d_state=4, d_conv=4, expand=2,
+                                       head_dim=8, n_groups=1,
+                                       chunk_size=8))
+        for cfg in (ssm, hybrid):
+            yield cfg.family, ServeEngine(
+                cfg, lm.init(cfg, jax.random.key(0)), n_slots=2,
+                max_len=32)
+
+    def test_ragged_slot_serve_is_exact(self):
+        """The regression for the ROADMAP gap: length-bucketed admission
+        means no pad token ever enters the recurrent state, so serving
+        ragged prompts matches per-request generation token-for-token."""
+        for family, eng in self._engines():
+            reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                    for i, p in enumerate(self.PROMPTS)]
+            comps = {c.rid: c for c in eng.serve(reqs)}
+            for i, p in enumerate(self.PROMPTS):
+                want = eng.generate([p], max_new_tokens=4)[0]
+                assert comps[i].tokens == want, (family, i)
+
+    def test_generate_ragged_batch_raises(self):
+        """The error path: a ragged generate() batch cannot be served
+        exactly in one recurrent prefill, so it must fail loudly."""
+        for family, eng in self._engines():
+            with pytest.raises(ValueError, match="recurrent|ragged"):
+                eng.generate(self.PROMPTS, max_new_tokens=2)
+
+    def test_generate_uniform_batch_ok(self):
+        for family, eng in self._engines():
+            out = eng.generate([[1, 2, 3], [4, 5, 6]], max_new_tokens=3)
+            singles = [eng.generate([p], max_new_tokens=3)[0]
+                       for p in ([1, 2, 3], [4, 5, 6])]
+            assert out == singles, family
+
+
 class TestStreamingPoll:
     """Token-level poll(stream=True): ordered StreamEvents per request,
     terminated by a done event carrying the completion; the plain poll()

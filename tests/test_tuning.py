@@ -1,0 +1,143 @@
+"""Autotuner: deterministic defaults, measured tuning, on-disk cache."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import kernels
+from repro.kernels import tuning
+from repro.kernels.registry import registry
+
+
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    """Point the process-wide cache at a fresh temp dir."""
+    monkeypatch.setenv(tuning.CACHE_ENV, str(tmp_path))
+    cache = tuning.default_cache()
+    cache.clear_memory()
+    return cache
+
+
+class TestHelpers:
+    @pytest.mark.parametrize("n,cap,want", [
+        (32, 8, 8), (9, 8, 3), (12, 8, 6), (7, 8, 7), (1, 8, 1),
+        (250, 256, 250), (33, 256, 33), (13, 4, 1), (16, 16, 16),
+    ])
+    def test_largest_divisor(self, n, cap, want):
+        assert tuning.largest_divisor(n, cap) == want
+        assert n % tuning.largest_divisor(n, cap) == 0
+
+    def test_shape_bucket(self):
+        assert tuning.shape_bucket([(9, 252, 10, 16)]) == "16x256x16x16"
+        assert tuning.shape_bucket([(8, 16), (8, 16)]) == "8x16,8x16"
+
+
+class TestTuneCache:
+    def test_roundtrip_and_persistence(self, tune_cache):
+        key = tuning.TuneCache.key("k", "cpu", "8x16", "float32")
+        tune_cache.put(key, {"row_block": 8}, {"row_block=8": 0.001})
+        assert tune_cache.get(key) == {"row_block": 8}
+        # a fresh instance reads the same file back
+        fresh = tuning.TuneCache(tune_cache.path)
+        assert fresh.get(key) == {"row_block": 8}
+        blob = json.load(open(tune_cache.path))
+        assert blob["version"] == tuning.CACHE_VERSION
+
+    def test_corrupt_file_degrades_to_empty(self, tmp_path):
+        p = tmp_path / "autotune.json"
+        p.write_text("not json")
+        cache = tuning.TuneCache(str(p))
+        assert cache.get("anything") is None
+
+
+class TestAutotune:
+    def test_tunes_caches_and_dispatch_picks_winner(self, tune_cache):
+        spec = registry.get("fused_routing")
+        if not spec.is_available():
+            pytest.skip("pallas unavailable")
+        u = jax.random.normal(jax.random.key(0), (8, 16, 5, 4)) * 0.2
+        best, timings = tuning.autotune(spec, (u,),
+                                        {"softmax_mode": "exact"},
+                                        cache=tune_cache, iters=1)
+        # the base config is always a candidate, so the winner cannot be
+        # slower than the old hard-coded blocks on this machine
+        base = spec.legalize(dict(spec.base_config), u)
+        assert (timings[tuning.config_label(best)]
+                <= timings[tuning.config_label(base)])
+        assert os.path.exists(tune_cache.path)
+        # tuned dispatch resolves the cached winner; parity holds
+        cfg = registry.resolve_config("fused_routing", u, tune=True)
+        assert cfg == spec.legalize({**spec.base_config, **best}, u)
+        with tuning.tuning(True):
+            v_t, _ = kernels.fused_routing(u)
+        v_d, _ = kernels.fused_routing(u, tune=False)
+        np.testing.assert_allclose(np.asarray(v_t), np.asarray(v_d),
+                                   atol=1e-6)
+
+    def test_candidates_are_legal_and_include_base(self, tune_cache):
+        spec = registry.get("flash_attention")
+        q = jax.ShapeDtypeStruct((1, 96, 4, 32), "float32")
+        k = jax.ShapeDtypeStruct((1, 96, 2, 32), "float32")
+        cands = tuning.candidate_configs(spec, q, k, k)
+        assert spec.legalize(dict(spec.base_config), q, k, k) == cands[0]
+        for c in cands:
+            assert 96 % c["q_block"] == 0 and 96 % c["kv_block"] == 0
+        # legalization dedupes the product down to distinct configs
+        assert len(cands) == len({tuple(sorted(c.items())) for c in cands})
+
+    def test_trace_time_dispatch_reads_cache_only(self, tune_cache):
+        """Inside jit, tuned dispatch must not try to measure: it reads
+        the cache (miss -> deterministic defaults) and never errors."""
+        u = jax.random.normal(jax.random.key(0), (4, 8, 5, 4)) * 0.2
+
+        @jax.jit
+        def fn(u):
+            return kernels.fused_routing(u, tune=True)[0]
+
+        v = fn(u)
+        v_ref = kernels.fused_routing(u, tune=False)[0]
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                                   atol=1e-6)
+
+
+class TestPolicyScope:
+    def test_scope_overrides_env(self, monkeypatch):
+        monkeypatch.delenv(tuning.TUNE_ENV, raising=False)
+        assert not tuning.tune_enabled()
+        with tuning.tuning(True):
+            assert tuning.tune_enabled()
+            with tuning.tuning(False):
+                assert not tuning.tune_enabled()
+            assert tuning.tune_enabled()
+        assert not tuning.tune_enabled()
+        monkeypatch.setenv(tuning.TUNE_ENV, "1")
+        assert tuning.tune_enabled()
+        with tuning.tuning(False):
+            assert not tuning.tune_enabled()
+
+
+class TestServingBindTime:
+    def test_capsule_engine_pretunes_at_warmup(self, tune_cache):
+        """kernel_tune=True: warmup autotunes fused_routing for the
+        scheduler's batch shapes before the forward compiles."""
+        from repro.core import capsnet as cn
+        from repro.deploy import FastCapsPipeline, RoutingSpec
+
+        cfg = cn.CapsNetConfig(arch_id="capsnet-tune", conv1_channels=8,
+                               caps_types=4, decoder_hidden=(16, 32))
+        dep = FastCapsPipeline(cfg).build(seed=0).compile(
+            routing=RoutingSpec.pallas(softmax="taylor"))
+        engine = dep.serve(batch_size=2, kernel_tune=True)
+        engine.warmup()
+        entries = json.load(open(tune_cache.path))["entries"]
+        assert any(k.startswith("fused_routing|") for k in entries)
+        # and the engine still serves correctly with tuned executables
+        frames = np.random.RandomState(0).rand(
+            3, cfg.image_hw, cfg.image_hw, cfg.in_channels).astype("f")
+        from repro.serving import ImageRequest
+
+        done = engine.serve([ImageRequest(frames)])
+        assert done[0].classes.shape == (3,)
