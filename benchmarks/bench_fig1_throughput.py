@@ -28,16 +28,31 @@ from benchmarks import common as bc
 from repro.core import capsnet as cn
 from repro.deploy import (FastCapsPipeline, RoutingSpec,
                           capsnet_flops_per_image)
-from repro.serving import ImageRequest, SLOBatchScheduler
+from repro.serving import (CapsuleEngine, DisaggregatedEngine, ImageRequest,
+                           SLOBatchScheduler)
 
 
-def _serve_fps(deployed, n_frames: int, batch: int,
-               slo_ms: float, seed: int = 0) -> tuple:
-    """Served FPS of one deployment: SLO-scheduled CapsuleEngine over a
-    ragged request mix (frames per request drawn in [1, batch])."""
-    engine = deployed.serve(
+def _make_engine(deployed, batch: int, slo_ms: float, scheduler: str):
+    """``slo``: the single SLO-scheduled CapsuleEngine.  ``disagg``: a
+    DisaggregatedEngine front-end dispatching over a 2-engine pool (the
+    stateless form of disaggregated serving) — same results, and the
+    stats gain per-phase queue-depth + handoff transfer histograms."""
+    if scheduler == "disagg":
+        return DisaggregatedEngine(
+            None, [CapsuleEngine(deployed, batch_size=batch,
+                                 scheduler=SLOBatchScheduler(
+                                     target_p95_ms=slo_ms))
+                   for _ in range(2)])
+    return deployed.serve(
         batch_size=batch,
         scheduler=SLOBatchScheduler(target_p95_ms=slo_ms))
+
+
+def _serve_fps(deployed, n_frames: int, batch: int, slo_ms: float,
+               seed: int = 0, scheduler: str = "slo") -> tuple:
+    """Served FPS of one deployment: SLO-scheduled CapsuleEngine over a
+    ragged request mix (frames per request drawn in [1, batch])."""
+    engine = _make_engine(deployed, batch, slo_ms, scheduler)
     engine.warmup()
     cfg = deployed.cfg
     rng = np.random.RandomState(seed)
@@ -53,8 +68,8 @@ def _serve_fps(deployed, n_frames: int, batch: int,
     return stats.fps, stats
 
 
-def run(quick: bool = True, tiny: bool = False, slo_ms: float = 200.0
-        ) -> dict:
+def run(quick: bool = True, tiny: bool = False, slo_ms: float = 200.0,
+        scheduler: str = "slo") -> dict:
     if tiny:
         cfg = cn.CapsNetConfig(arch_id="capsnet-smoke", conv1_channels=8,
                                caps_types=4, decoder_hidden=(16, 32))
@@ -67,17 +82,20 @@ def run(quick: bool = True, tiny: bool = False, slo_ms: float = 200.0
 
     # 1) original (reference routing, exact math)
     dep_orig = pipe.compile(routing="reference")
-    fps_orig, st_orig = _serve_fps(dep_orig, n_frames, batch, slo_ms)
+    fps_orig, st_orig = _serve_fps(dep_orig, n_frames, batch, slo_ms,
+                                   scheduler=scheduler)
 
     # 2) pruned (LAKP + compaction), reference routing
     pipe.prune(0.6, 0.9,
                type_keep=max(cfg.caps_types // 4, 1)).compact()
     dep_pruned = pipe.compile(routing="reference")
-    fps_pruned, st_pruned = _serve_fps(dep_pruned, n_frames, batch, slo_ms)
+    fps_pruned, st_pruned = _serve_fps(dep_pruned, n_frames, batch, slo_ms,
+                                       scheduler=scheduler)
 
     # 3) pruned + optimized routing (fused pallas kernel + Eq.2 softmax)
     dep_opt = pipe.compile(routing=RoutingSpec.pallas(softmax="taylor"))
-    fps_opt, st_opt = _serve_fps(dep_opt, n_frames, batch, slo_ms)
+    fps_opt, st_opt = _serve_fps(dep_opt, n_frames, batch, slo_ms,
+                                 scheduler=scheduler)
 
     fps = [fps_orig, fps_pruned, fps_opt]
     rows = []
@@ -88,8 +106,24 @@ def run(quick: bool = True, tiny: bool = False, slo_ms: float = 200.0
                      f"{f:.1f}", f"{f / fps_orig:.1f}x"])
     bc.print_table(
         f"Fig.1: served CapsNet throughput (CPU wall-clock, "
-        f"SLO p95<={slo_ms:.0f}ms)",
+        f"scheduler={scheduler}, SLO p95<={slo_ms:.0f}ms)",
         ["system", "ms/tick", "frames", "FPS", "speedup"], rows)
+
+    if scheduler == "disagg":
+        # per-phase queue depth + handoff transfer latency (EngineStats)
+        ph_rows = []
+        for name, st in (("original", st_orig),
+                         ("pruned (LAKP)", st_pruned),
+                         ("pruned+optimized", st_opt)):
+            for ph, (n, p50, p95, peak) in st.depth_summary().items():
+                ph_rows.append([name, ph, f"{n}", f"{p50:.0f}",
+                                f"{p95:.0f}", f"{peak}"])
+            for stage, (n, p50, p95) in st.transfer_summary().items():
+                ph_rows.append([name, f"xfer:{stage}", f"{n}",
+                                f"{p50:.2f}ms", f"{p95:.2f}ms", "-"])
+        bc.print_table(
+            "Fig.1 (disagg): per-phase queue depth / handoff transfer",
+            ["system", "phase", "ticks", "p50", "p95", "peak"], ph_rows)
 
     # request-latency histograms (EngineStats): p50/p95 per request class
     # (frames-per-request bucket) for each served system
@@ -124,10 +158,16 @@ if __name__ == "__main__":
                     help="paper-scale settings (slow on CPU)")
     ap.add_argument("--slo-ms", type=float, default=200.0,
                     help="SLO scheduler p95 tick-latency target")
+    ap.add_argument("--scheduler", default="slo", choices=["slo", "disagg"],
+                    help="serving topology: one SLO-scheduled engine, or a "
+                         "disaggregated front-end over an engine pool "
+                         "(adds per-phase depth/transfer histograms)")
     ap.add_argument("--json", default=None,
                     help="write a BENCH_fig1.json perf-trajectory record")
     args = ap.parse_args()
-    results = run(quick=not args.full, tiny=args.tiny, slo_ms=args.slo_ms)
+    results = run(quick=not args.full, tiny=args.tiny, slo_ms=args.slo_ms,
+                  scheduler=args.scheduler)
     if args.json:
         mode = "tiny" if args.tiny else ("full" if args.full else "quick")
+        results["scheduler"] = args.scheduler
         bc.write_bench_json(args.json, "fig1", results, mode=mode)

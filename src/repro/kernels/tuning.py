@@ -134,9 +134,12 @@ def tuning(enabled: bool = True):
 class TuneCache:
     """JSON-backed winner cache keyed ``kernel|backend|bucket|dtype``.
 
-    The file is read lazily once and written atomically (tmp + rename);
-    an unwritable cache dir degrades to memory-only.  Entries store the
-    winning config plus the measured timing table for reporting::
+    The file is read lazily once and written atomically (per-writer tmp
+    + rename, with a merge of the on-disk entries first), so multiple
+    processes sharing one cache dir can write concurrently without ever
+    publishing corrupt JSON or erasing each other's keys; an unwritable
+    cache dir degrades to memory-only.  Entries store the winning config
+    plus the measured timing table for reporting::
 
         {"version": 1,
          "entries": {"fused_routing|cpu|32x256x16x16|float32":
@@ -151,6 +154,7 @@ class TuneCache:
             path = os.path.join(root, "autotune.json")
         self.path = path
         self._entries: Optional[Dict[str, Dict[str, Any]]] = None
+        self._written: set = set()    # keys THIS instance put (merge set)
         self._lock = threading.Lock()
 
     @staticmethod
@@ -186,15 +190,65 @@ class TuneCache:
             entries = self._load()
             entries[key] = {"config": dict(config),
                             "timings": dict(timings or {})}
+            self._written.add(key)
             try:
                 os.makedirs(os.path.dirname(self.path), exist_ok=True)
-                tmp = self.path + ".tmp"
-                with open(tmp, "w") as f:
-                    json.dump({"version": CACHE_VERSION, "entries": entries},
-                              f, indent=1, sort_keys=True)
-                os.replace(tmp, self.path)
+                # Concurrent writers (two serving processes sharing one
+                # REPRO_KERNEL_CACHE_DIR) must never corrupt the file or
+                # erase each other's keys:
+                #   * an exclusive flock on a sidecar lock file brackets
+                #     the whole read-merge-replace, so no other writer's
+                #     publish can land inside our window (platforms
+                #     without fcntl skip the lock: writes stay corruption
+                #     -free via the rename, a racing key may be lost);
+                #   * merge-on-write — re-read the file under the lock
+                #     and overlay ONLY the keys this instance itself
+                #     wrote, so entries another process published since
+                #     our lazy load survive (overlaying the whole stale
+                #     in-memory snapshot would silently revert them);
+                #   * a per-writer tmp name — a shared `.tmp` would let
+                #     two processes interleave writes into one file and
+                #     os.replace() would then publish the garbage;
+                #   * atomic rename — readers only ever see a complete
+                #     JSON document.
+                with self._file_lock():
+                    merged: Dict[str, Dict[str, Any]] = {}
+                    try:
+                        with open(self.path) as f:
+                            blob = json.load(f)
+                        if blob.get("version") == CACHE_VERSION:
+                            merged.update(blob.get("entries", {}))
+                    except (OSError, ValueError):
+                        pass
+                    merged.update({k: entries[k] for k in self._written
+                                   if k in entries})
+                    self._entries = merged
+                    tmp = (f"{self.path}.{os.getpid()}."
+                           f"{threading.get_ident()}.tmp")
+                    with open(tmp, "w") as f:
+                        json.dump({"version": CACHE_VERSION,
+                                   "entries": merged},
+                                  f, indent=1, sort_keys=True)
+                    os.replace(tmp, self.path)
             except OSError:
                 pass                      # memory-only fallback
+
+    @contextlib.contextmanager
+    def _file_lock(self):
+        """Exclusive cross-process lock around read-merge-replace (a
+        sidecar ``.lock`` file, never the data file itself — locking the
+        file we os.replace would lock a dead inode)."""
+        try:
+            import fcntl
+        except ImportError:               # non-POSIX: best-effort, no lock
+            yield
+            return
+        with open(self.path + ".lock", "w") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
 
     def clear_memory(self) -> None:
         """Drop the in-memory view (tests: re-read after env changes)."""

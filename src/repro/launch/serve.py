@@ -14,6 +14,10 @@ through the unified ``repro.serving`` engine API
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --scheduler sharded --slots 4
 
+    # LM, disaggregated: prefill engine + 2 decode engines, cache handoffs
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --scheduler disagg --decode-engines 2
+
     # CapsNet: FastCapsPipeline -> DeployedCapsNet.serve(), FPS report
     PYTHONPATH=src python -m repro.launch.serve --arch capsnet-mnist \
         --requests 8 --batch 16 --routing pallas --scheduler slo --slo-ms 50
@@ -28,9 +32,10 @@ import numpy as np
 
 from repro import configs as cfg_lib
 from repro.models import lm
-from repro.serving import (FIFOScheduler, ImageRequest,
+from repro.serving import (DisaggregatedEngine, FIFOScheduler, ImageRequest,
                            InterleavingScheduler, Request, ServeEngine,
-                           ShardedScheduler, SLOBatchScheduler)
+                           ShardedScheduler, SLOBatchScheduler,
+                           disaggregated_lm_engine)
 
 
 def _make_scheduler(args):
@@ -49,6 +54,12 @@ def _make_scheduler(args):
 def _print_latency(stats) -> None:
     for cls, (n, p50, p95) in stats.latency_summary().items():
         print(f"  latency[{cls}]: n={n} p50={p50:.1f} ms p95={p95:.1f} ms")
+    for phase, (n, p50, p95, peak) in stats.depth_summary().items():
+        print(f"  depth[{phase}]: ticks={n} p50={p50:.0f} p95={p95:.0f} "
+              f"peak={peak}")
+    for stage, (n, p50, p95) in stats.transfer_summary().items():
+        print(f"  transfer[{stage}]: n={n} p50={p50:.2f} ms "
+              f"p95={p95:.2f} ms")
 
 
 def serve_lm(args) -> None:
@@ -58,10 +69,18 @@ def serve_lm(args) -> None:
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch has no decode path")
     params = lm.init(cfg, jax.random.key(0))
-    engine = ServeEngine(cfg, params, n_slots=args.slots,
-                         max_len=args.max_len,
-                         scheduler=_make_scheduler(args),
-                         kernel_tune=args.kernel_tune or None)
+    if args.scheduler == "disagg":
+        # disaggregated prefill: admission/prefill on a dedicated engine,
+        # decode on --decode-engines engines joined by cache handoffs
+        engine = disaggregated_lm_engine(
+            cfg, params, n_slots=args.slots, max_len=args.max_len,
+            n_decode=args.decode_engines,
+            kernel_tune=args.kernel_tune or None)
+    else:
+        engine = ServeEngine(cfg, params, n_slots=args.slots,
+                             max_len=args.max_len,
+                             scheduler=_make_scheduler(args),
+                             kernel_tune=args.kernel_tune or None)
     if args.kernel_tune:
         engine.warmup()
     rng = np.random.RandomState(0)
@@ -116,9 +135,16 @@ def serve_capsnet(args) -> None:
           f"{deployed.n_params:,} params, "
           f"{deployed.flops_per_image / 1e6:.1f} MFLOP/image")
 
-    engine = deployed.serve(batch_size=args.batch,
-                            scheduler=_make_scheduler(args),
-                            kernel_tune=args.kernel_tune or None)
+    if args.scheduler == "disagg":
+        # stateless disaggregation: dispatch frames over an engine pool
+        engine = DisaggregatedEngine(
+            None, [deployed.serve(batch_size=args.batch,
+                                  kernel_tune=args.kernel_tune or None)
+                   for _ in range(args.decode_engines)])
+    else:
+        engine = deployed.serve(batch_size=args.batch,
+                                scheduler=_make_scheduler(args),
+                                kernel_tune=args.kernel_tune or None)
     engine.warmup()
     rng = np.random.RandomState(0)
     for i in range(args.requests):
@@ -149,12 +175,18 @@ def main():
                          "published size)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--scheduler", default="fifo",
-                    choices=["fifo", "slo", "interleave", "sharded"],
+                    choices=["fifo", "slo", "interleave", "sharded",
+                             "disagg"],
                     help="tick scheduler (slo adapts batch to --slo-ms; "
                          "interleave separates prefill/decode ticks; "
-                         "sharded places slots across all local devices)")
+                         "sharded places slots across all local devices; "
+                         "disagg splits prefill and decode onto separate "
+                         "engines joined by cache handoffs)")
     ap.add_argument("--slo-ms", type=float, default=100.0,
                     help="SLO scheduler p95 tick-latency target")
+    ap.add_argument("--decode-engines", type=int, default=2,
+                    help="disagg: number of decode engines behind the "
+                         "prefill engine")
     # LM options
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--kernel-tune", action="store_true",

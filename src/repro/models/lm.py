@@ -594,6 +594,77 @@ def cache_shardings(cfg: LMConfig, caches: Any, mesh: Any,
     return sharding_lib.shardings_for(caches, cache_specs(cfg), rules, mesh)
 
 
+def gather_cache_rows(cfg: LMConfig, slot_idx: jax.Array, caches: Any
+                      ) -> Any:
+    """Gather per-slot cache rows along each leaf's ``batch`` (slot) axis.
+
+    ``slot_idx`` is ``(k,)`` int32; the result is a ``make_caches``-shaped
+    pytree whose batch dim is ``k`` — the per-request decode state of the
+    selected slots (KV rows for attention families, recurrent state for
+    ssm/hybrid).  The batch axis position is recovered per leaf from
+    :func:`cache_specs`, never hardcoded per family; leaves without a
+    ``batch`` axis (none today) pass through unchanged.  This is the
+    extraction half of a serving cache handoff; the inverse is
+    :func:`scatter_cache_rows`.
+    """
+    specs = cache_specs(cfg)
+
+    def one(axes, c):
+        if "batch" not in axes:
+            return c
+        ax = axes.index("batch")
+        rows = jnp.take(jnp.moveaxis(c, ax, 0), slot_idx, axis=0)
+        return jnp.moveaxis(rows, 0, ax)
+
+    return jax.tree.map(one, specs, caches,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def concat_cache_rows(cfg: LMConfig, rows_list: list) -> Any:
+    """Concatenate per-slot row pytrees along each leaf's ``batch`` axis.
+
+    Batches k single-slot :func:`gather_cache_rows` results into one
+    k-row tree so a serving handoff group can be scattered with ONE
+    :func:`scatter_cache_rows` call instead of k full-cache rewrites.
+    """
+    if len(rows_list) == 1:
+        return rows_list[0]
+    specs = cache_specs(cfg)
+
+    def one(axes, *leaves):
+        if "batch" not in axes:
+            return leaves[0]
+        return jnp.concatenate(leaves, axis=axes.index("batch"))
+
+    return jax.tree.map(one, specs, *rows_list,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def scatter_cache_rows(cfg: LMConfig, slot_idx: jax.Array, rows: Any,
+                       caches: Any) -> Any:
+    """Write sub-batch cache rows ``rows`` into ``caches`` at ``slot_idx``.
+
+    The batch dim sits at a different axis per cache family; its index is
+    recovered from the logical-axis tree (:func:`cache_specs`) rather than
+    hardcoded per family.  Out-of-range indices (a sub-batch's pad rows)
+    are dropped by the scatter.  Injection half of a serving cache
+    handoff and of ragged batched prefill (the sub-batch prefills on
+    fresh caches, then its rows scatter into the engine's slots).
+    """
+    specs = cache_specs(cfg)
+
+    def one(axes, n, o):
+        if "batch" not in axes:
+            return o
+        ax = axes.index("batch")
+        om = jnp.moveaxis(o, ax, 0)
+        nm = jnp.moveaxis(n, ax, 0).astype(o.dtype)
+        return jnp.moveaxis(om.at[slot_idx].set(nm, mode="drop"), 0, ax)
+
+    return jax.tree.map(one, specs, rows, caches,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
 def model_flops_per_token(cfg: LMConfig, params_total: int,
                           params_active: Optional[int] = None) -> float:
     """MODEL_FLOPS ~ 6 * N (active) per token (roofline §)."""

@@ -318,6 +318,18 @@ def _mark_none(tree: Any) -> Any:
     return walk(tree)
 
 
+def replicated_shardings(tree: Any, mesh: Mesh) -> Any:
+    """Fully-replicated ``NamedSharding`` for every leaf of ``tree``.
+
+    The placement for state that *crosses* engines instead of living on
+    one — e.g. the per-request cache rows of a serving handoff: the rows
+    are replicated onto the target mesh so the subsequent scatter into
+    the (possibly slot-sharded) resident state reads device-locally on
+    every shard, whatever slot the scheduler picked."""
+    sharding = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: sharding, tree)
+
+
 def divisible_or_none(dim: int, axes: MeshAxes, mesh: Mesh) -> bool:
     """Check shardability of ``dim`` over ``axes`` of ``mesh``."""
     if axes is None:

@@ -2,22 +2,30 @@
 
 One :class:`EngineCore` owns slot state, fixed-shape jitted ticks,
 streaming results and cumulative stats (with per-request-class latency
-histograms); pluggable :class:`Scheduler`s decide admission, batch shape,
-device placement and prefill/decode tick interleaving;
-:class:`CapsuleEngine` (CapsNet image frames, the paper's Fig. 1
-workload) and :class:`ServeEngine` (LM decode, optionally sharded across
-a mesh) are thin workload adapters sharing the ``submit() / poll() /
-run_until_idle() / stats()`` surface with true async admission.
+and per-phase queue-depth histograms); pluggable :class:`Scheduler`s
+decide admission, batch shape, device placement and prefill/decode tick
+interleaving; :class:`CapsuleEngine` (CapsNet image frames, the paper's
+Fig. 1 workload) and :class:`ServeEngine` (LM decode, optionally sharded
+across a mesh) are thin workload adapters sharing the ``submit() /
+poll() / run_until_idle() / stats()`` surface with true async admission.
+:class:`DisaggregatedEngine` (``repro.serving.disagg``) keeps that same
+surface while splitting prefill and decode onto dedicated engines joined
+by typed :class:`CacheHandoff`\\ s.
 
 See ``docs/serving.md`` for the engine lifecycle and design notes.
 """
 
 from repro.serving.capsule_engine import (CapsuleEngine,  # noqa: F401
                                           ImageCompletion, ImageRequest)
-from repro.serving.core import (EngineCore, EngineStats,  # noqa: F401
-                                LatencyHistogram, SlotTask, StreamEvent)
+from repro.serving.core import (DepthHistogram, EngineCore,  # noqa: F401
+                                EngineStats, LatencyHistogram, SlotTask,
+                                StreamEvent)
+from repro.serving.disagg import (CacheHandoff, DecodeEngine,  # noqa: F401
+                                  DisaggregatedEngine, HandoffRequest,
+                                  PrefillEngine, disaggregated_lm_engine)
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401
-from repro.serving.schedulers import (FIFOScheduler,  # noqa: F401
-                                      InterleavingScheduler, Scheduler,
-                                      ShardedScheduler, SLOBatchScheduler,
-                                      TickRecord, pow2_bucket)
+from repro.serving.schedulers import (DisaggScheduler,  # noqa: F401
+                                      FIFOScheduler, InterleavingScheduler,
+                                      Scheduler, ShardedScheduler,
+                                      SLOBatchScheduler, TickRecord,
+                                      pow2_bucket)

@@ -18,7 +18,13 @@ requests through one fixed-shape jitted forward:
   wall-clock, plus per-request latency from submit to completion.
 
 ``engine = deployed.serve(scheduler=...)`` (on a
-:class:`repro.deploy.DeployedCapsNet`) is the canonical way in.
+:class:`repro.deploy.DeployedCapsNet`) is the canonical way in.  To
+serve one deployment from a *pool* of engines behind a single
+``submit()/poll()`` surface, wrap CapsuleEngines in a
+:class:`repro.serving.DisaggregatedEngine` with ``prefill=None`` (the
+stateless form of disaggregated serving — image tasks carry no cache,
+so the handoff is pure dispatch); ``bench_fig1_throughput.py
+--scheduler disagg`` measures exactly that topology.
 """
 
 from __future__ import annotations

@@ -49,33 +49,31 @@ from repro.kernels import tuning as kernel_tuning
 from repro.serving.schedulers import FIFOScheduler, Scheduler, TickRecord
 
 
-class LatencyHistogram:
-    """Fixed-bucket log2 latency histogram (counts only, O(1) memory).
+class _Log2Histogram:
+    """Shared fixed-bucket histogram core (counts only, O(1) memory).
 
-    Buckets span 50 us to ~45 min with power-of-two upper bounds, plus an
-    overflow bucket, so ``record`` never rebins and two snapshots of the
-    same histogram are comparable bucket by bucket.  ``percentile_ms``
-    reports the upper bound of the bucket the requested quantile falls in
-    (Prometheus-style: pessimistic by at most one bucket width).
+    Subclasses define ``BOUNDS`` — ascending bucket upper bounds, plus an
+    implicit overflow bucket — so ``record`` never rebins and two
+    snapshots of the same histogram are comparable bucket by bucket.
+    ``_percentile`` reports the upper bound of the bucket the requested
+    quantile falls in (Prometheus-style: pessimistic by at most one
+    bucket width).  There is exactly one quantile implementation; the
+    latency and depth views only differ in bounds, units and extras.
     """
 
-    BOUNDS_MS = tuple(0.05 * 2 ** i for i in range(26))   # 0.05ms..~45min
+    BOUNDS: tuple = ()
 
     def __init__(self):
-        self.counts = [0] * (len(self.BOUNDS_MS) + 1)
+        self.counts = [0] * (len(self.BOUNDS) + 1)
         self.count = 0
-        self.total_s = 0.0
 
-    def record(self, seconds: float) -> None:
-        ms = max(float(seconds), 0.0) * 1e3
-        i = bisect.bisect_left(self.BOUNDS_MS, ms)
-        self.counts[i] += 1
+    def _record(self, value) -> None:
+        self.counts[bisect.bisect_left(self.BOUNDS, value)] += 1
         self.count += 1
-        self.total_s += max(float(seconds), 0.0)
 
-    def percentile_ms(self, q: float) -> float:
-        """Latency (ms) below which ``q`` percent of requests completed;
-        0.0 for an empty histogram."""
+    def _percentile(self, q: float) -> float:
+        """Bucket upper bound below which ``q`` percent of observations
+        fell; 0.0 for an empty histogram."""
         if not self.count:
             return 0.0
         rank = q / 100.0 * self.count
@@ -83,9 +81,37 @@ class LatencyHistogram:
         for i, c in enumerate(self.counts):
             seen += c
             if seen >= rank and c:
-                return (self.BOUNDS_MS[i] if i < len(self.BOUNDS_MS)
+                return (float(self.BOUNDS[i]) if i < len(self.BOUNDS)
                         else float("inf"))
         return float("inf")
+
+    def copy(self):
+        out = type(self)()
+        for k, v in self.__dict__.items():
+            setattr(out, k, list(v) if isinstance(v, list) else v)
+        return out
+
+
+class LatencyHistogram(_Log2Histogram):
+    """Latency histogram: buckets span 50 us to ~45 min (pow2 upper
+    bounds in ms).  ``record`` takes seconds; percentiles report ms."""
+
+    BOUNDS_MS = tuple(0.05 * 2 ** i for i in range(26))   # 0.05ms..~45min
+    BOUNDS = BOUNDS_MS
+
+    def __init__(self):
+        super().__init__()
+        self.total_s = 0.0
+
+    def record(self, seconds: float) -> None:
+        s = max(float(seconds), 0.0)
+        self._record(s * 1e3)
+        self.total_s += s
+
+    def percentile_ms(self, q: float) -> float:
+        """Latency (ms) below which ``q`` percent of requests completed;
+        0.0 for an empty histogram."""
+        return self._percentile(q)
 
     @property
     def p50_ms(self) -> float:
@@ -99,16 +125,49 @@ class LatencyHistogram:
     def mean_ms(self) -> float:
         return 1e3 * self.total_s / self.count if self.count else 0.0
 
-    def copy(self) -> "LatencyHistogram":
-        out = LatencyHistogram()
-        out.counts = list(self.counts)
-        out.count = self.count
-        out.total_s = self.total_s
-        return out
-
     def __repr__(self) -> str:
         return (f"LatencyHistogram(n={self.count}, p50={self.p50_ms:.3g}ms, "
                 f"p95={self.p95_ms:.3g}ms)")
+
+
+class DepthHistogram(_Log2Histogram):
+    """Histogram of non-negative integer levels (queue depths observed
+    at each tick): buckets 0, 1, 2, 4, ... 2**19 plus overflow, and
+    ``peak`` keeps the exact high-water mark."""
+
+    BOUNDS = (0,) + tuple(2 ** i for i in range(20))
+
+    def __init__(self):
+        super().__init__()
+        self.total = 0
+        self.peak = 0
+
+    def record(self, depth: int) -> None:
+        d = max(int(depth), 0)
+        self._record(d)
+        self.total += d
+        self.peak = max(self.peak, d)
+
+    def percentile(self, q: float) -> float:
+        """Depth below which ``q`` percent of observations fell; 0.0 for
+        an empty histogram."""
+        return self._percentile(q)
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95.0)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def __repr__(self) -> str:
+        return (f"DepthHistogram(n={self.count}, p50={self.p50:.3g}, "
+                f"p95={self.p95:.3g}, peak={self.peak})")
 
 
 @dataclasses.dataclass
@@ -125,6 +184,13 @@ class EngineStats:
     submit-to-completion wall-clock, so p50/p95 can be read per class
     without retaining per-request records.  Snapshots from ``stats()``
     deep-copy the histograms: they never mutate under the caller.
+
+    ``depth`` maps a tick *phase* (``"mixed"`` / ``"prefill"`` /
+    ``"decode"``, plus ``"handoff"`` on a disaggregated front-end) to a
+    :class:`DepthHistogram` of the queue depth observed at each tick of
+    that phase, and ``transfer`` maps a handoff stage to a
+    :class:`LatencyHistogram` of its transfer wall-clock — both only
+    populated by engines that run the corresponding phase.
     """
 
     items: int = 0                    # real work units served
@@ -134,6 +200,10 @@ class EngineStats:
     completed: int = 0                # requests fully served
     latency: Dict[str, LatencyHistogram] = dataclasses.field(
         default_factory=dict)         # request class -> latency histogram
+    depth: Dict[str, DepthHistogram] = dataclasses.field(
+        default_factory=dict)         # tick phase -> queue-depth histogram
+    transfer: Dict[str, LatencyHistogram] = dataclasses.field(
+        default_factory=dict)         # handoff stage -> transfer latency
 
     @property
     def throughput(self) -> float:
@@ -148,6 +218,16 @@ class EngineStats:
         """``{request class: (count, p50 ms, p95 ms)}`` for reporting."""
         return {k: (h.count, h.p50_ms, h.p95_ms)
                 for k, h in sorted(self.latency.items())}
+
+    def depth_summary(self) -> Dict[str, Tuple[int, float, float, int]]:
+        """``{phase: (ticks, p50 depth, p95 depth, peak)}`` for reporting."""
+        return {k: (h.count, h.p50, h.p95, h.peak)
+                for k, h in sorted(self.depth.items())}
+
+    def transfer_summary(self) -> Dict[str, Tuple[int, float, float]]:
+        """``{handoff stage: (count, p50 ms, p95 ms)}`` for reporting."""
+        return {k: (h.count, h.p50_ms, h.p95_ms)
+                for k, h in sorted(self.transfer.items())}
 
     # image-serving aliases (Fig. 1 vocabulary)
     fps = throughput
@@ -185,6 +265,26 @@ class StreamEvent:
     item: Any = None                  # token id / frame class, None on done
     done: bool = False
     completion: Any = None            # set on the done event only
+
+
+def allocate_rid(request: Any, inflight: Dict[int, Any], next_rid: int
+                 ) -> Tuple[int, int]:
+    """Resolve a request's rid under THE engine rid rules (one place —
+    :class:`EngineCore` and the disaggregated front-end must not drift):
+    ``None`` takes the next auto id; an explicit id bumps the auto
+    counter past itself so later auto ids never collide; an id already
+    in ``inflight`` raises.  Sets ``request.rid``; returns
+    ``(rid, next_rid)``.  Caller must hold its state lock."""
+    rid = getattr(request, "rid", None)
+    if rid is None:
+        rid = next_rid
+        next_rid += 1
+    elif rid >= next_rid:
+        next_rid = rid + 1
+    if rid in inflight:
+        raise ValueError(f"duplicate rid {rid}")
+    request.rid = rid
+    return rid, next_rid
 
 
 @dataclasses.dataclass
@@ -352,15 +452,8 @@ class EngineCore:
         """
         tasks, state = self._expand(request)
         with self._lock:
-            rid = getattr(request, "rid", None)
-            if rid is None:
-                rid = self._next_rid
-                self._next_rid += 1
-            elif rid >= self._next_rid:
-                self._next_rid = rid + 1   # keep auto ids collision-free
-            if rid in self._requests:
-                raise ValueError(f"duplicate rid {rid}")
-            request.rid = rid
+            rid, self._next_rid = allocate_rid(request, self._requests,
+                                               self._next_rid)
             for t in tasks:
                 t.rid = rid
             entry = _RequestEntry(request=request, tasks=tasks, state=state,
@@ -411,17 +504,25 @@ class EngineCore:
         idle one tick), ``"decode"`` dedicates it to stepping (the queue
         waits).  Impossible answers are coerced back to ``"mixed"`` —
         ``"decode"`` with nothing resident, ``"prefill"`` with nothing
-        queued — so no scheduler can stall the engine.
+        queued, and any phase this engine has no machinery for (e.g. the
+        ``"handoff"`` phase of a disaggregated front-end) — so no
+        scheduler can stall the engine.  Each tick records the queue
+        depth it observed under its phase in ``EngineStats.depth``.
         """
         with self._tick_lock:
             with self._lock:
                 n_active = sum(s is not None for s in self._slots)
                 n_queued = len(self._queue)
                 phase = self.scheduler.phase(n_queued, n_active)
-                if phase == "decode" and n_active == 0:
+                if phase not in ("prefill", "decode"):
+                    phase = "mixed"   # incl. "handoff": no such stage here
+                elif phase == "decode" and n_active == 0:
                     phase = "mixed"
                 elif phase == "prefill" and n_queued == 0:
                     phase = "mixed"
+                if n_queued or n_active:
+                    self._stats.depth.setdefault(
+                        phase, DepthHistogram()).record(n_queued)
                 new: List[Tuple[int, SlotTask]] = []
                 if phase != "decode":
                     plan = self.scheduler.plan(n_queued, n_active)
@@ -520,7 +621,11 @@ class EngineCore:
             return dataclasses.replace(
                 self._stats,
                 latency={k: h.copy()
-                         for k, h in self._stats.latency.items()})
+                         for k, h in self._stats.latency.items()},
+                depth={k: h.copy()
+                       for k, h in self._stats.depth.items()},
+                transfer={k: h.copy()
+                          for k, h in self._stats.transfer.items()})
 
     @property
     def n_pending(self) -> int:
@@ -528,3 +633,10 @@ class EngineCore:
         with self._lock:
             return len(self._queue) + sum(
                 s is not None for s in self._slots)
+
+    @property
+    def n_queued(self) -> int:
+        """Tasks waiting for a slot (backlog only — excludes residents;
+        the quantity ``EngineStats.depth`` histograms record)."""
+        with self._lock:
+            return len(self._queue)

@@ -1,0 +1,637 @@
+"""Disaggregated prefill: admission/prefill and decode on separate engines.
+
+The :class:`repro.serving.InterleavingScheduler` separates prefill from
+decode *in time* — dedicated ticks on one engine.  This module separates
+them *across hardware*: a :class:`PrefillEngine` owns admission and the
+compute-bound ragged prefill, one or more :class:`DecodeEngine`\\ s own
+the memory-bound token loop, and finished prefill state moves between
+them as a typed :class:`CacheHandoff` (slot-axis gather on the prefill
+side -> transfer -> scatter into the decode engine's slot).  This is the
+FastCaps shape of the argument one level up: the paper's throughput came
+from co-designing the *stages around* the routing kernel, not the kernel
+alone, and here the two serving stages with opposite roofline positions
+stop sharing an engine entirely — a prefill burst can no longer steal
+even one tick from resident decodes.
+
+The moving parts:
+
+  * :class:`CacheHandoff` — the typed contract between the two sides:
+    per-request cache rows (KV for attention families, recurrent state
+    for ssm/hybrid — both gathered with ``lm.gather_cache_rows``), the
+    pending token/position, the partial output, and the model signature
+    the decode side validates against (family/arch/cache geometry/
+    dtypes) so a mis-routed handoff fails loudly instead of decoding
+    garbage.
+  * :class:`PrefillEngine` — a :class:`repro.serving.ServeEngine` whose
+    slots live exactly one admission: every request finishes *at
+    prefill* and completes with a ``CacheHandoff`` instead of tokens.
+  * :class:`DecodeEngine` — a :class:`repro.serving.ServeEngine` that
+    admits ``CacheHandoff``\\ s: injection scatters the rows into its own
+    slot caches (``lm.scatter_cache_rows``), re-placed through its
+    scheduler's ``place()`` so a :class:`repro.serving.ShardedScheduler`
+    composes — the rows replicate onto the decode mesh and the scatter
+    stays device-local per slot shard.
+  * :class:`DisaggregatedEngine` — the front-end that keeps the standard
+    ``submit() / poll() / run_until_idle() / stats()`` surface
+    (including ``poll(stream=True)`` ordering across the handoff
+    boundary), drives the three stages under a scheduler whose
+    ``phase()`` may answer ``"handoff"``, fails a handoff over to
+    another decode engine when one dies mid-transfer (requeued, never
+    dropped), and reports per-phase queue-depth and transfer-latency
+    histograms through :class:`repro.serving.EngineStats`.
+
+Disaggregated serving is **exact**: prefill uses the same ragged (or,
+for recurrent families, length-bucketed) admission as the unified
+engine, and the gathered rows are bit-identical state, so the decoded
+tokens match per-request ``generate()`` (regression-tested for
+dense/vlm/ssm/hybrid on 1- and 2-device hosts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import (Any, Callable, Deque, Dict, List, Optional, Set, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving.core import (DepthHistogram, EngineCore, EngineStats,
+                                LatencyHistogram, SlotTask, StreamEvent,
+                                allocate_rid)
+from repro.serving.engine import ServeEngine
+from repro.serving.schedulers import (DisaggScheduler, Scheduler,
+                                      ShardedScheduler)
+
+
+@dataclasses.dataclass
+class CacheHandoff:
+    """Per-request decode state handed from a prefill to a decode engine.
+
+    ``rows`` is a ``lm.make_caches(cfg, 1, max_len)``-shaped pytree — one
+    slot's gathered cache rows (``None`` when ``done``: the request
+    finished at prefill and only needs its completion emitted, or when
+    ``stateless``: a dispatch-only handoff for workloads with no
+    carried state, e.g. image frames).  ``family`` / ``arch_id`` /
+    ``max_len`` plus the rows' tree/shape/dtypes are the signature
+    :meth:`DecodeEngine.validate_handoff` checks before admitting.
+    """
+
+    rid: int
+    request: Any                      # the original workload request
+    family: Optional[str]             # LM family (None: stateless workload)
+    arch_id: Optional[str]
+    max_len: int
+    rows: Any                         # cache pytree with batch dim 1, or None
+    tok: int                          # pending token to feed the next decode
+    pos: int                          # its cache index
+    out: List[int]                    # prompt + tokens generated so far
+    left: int                         # tokens still to generate
+    done: bool = False                # finished at prefill; no decode needed
+    stateless: bool = False           # dispatch-only (no carried state)
+    stream: bool = False              # original request opted into streaming
+    cls: str = "default"              # request class (latency histograms)
+    t_handoff: float = 0.0            # when the handoff entered the queue
+
+
+@dataclasses.dataclass
+class HandoffRequest:
+    """What a :class:`DisaggregatedEngine` submits to a decode engine:
+    one :class:`CacheHandoff` wrapped in the standard request shape
+    (``rid`` / ``stream``), so it flows through the ordinary
+    ``EngineCore.submit`` path and slot admission."""
+
+    handoff: CacheHandoff
+    rid: Optional[int] = None
+    stream: bool = False
+
+    @property
+    def temperature(self) -> float:
+        """Sampling temperature travels with the original request."""
+        return float(getattr(self.handoff.request, "temperature", 0.0))
+
+
+class PrefillEngine(ServeEngine):
+    """Admission/prefill half of a disaggregated pair.
+
+    A :class:`repro.serving.ServeEngine` whose slots live exactly one
+    admission tick: after the (ragged / length-bucketed) batched prefill
+    of ``ServeEngine._admit``, every admitted slot's cache rows are
+    gathered out (``lm.gather_cache_rows`` on the slot axis) and the
+    request *completes* — its completion object is a
+    :class:`CacheHandoff`, not tokens.  ``max_new_tokens <= 0`` requests
+    still complete with an identity :class:`repro.serving.Completion`.
+
+    The engine itself never streams (``_wants_stream`` is pinned False);
+    the handoff carries the request's ``stream`` flag so token events
+    start on the decode side with ``seq=0`` at the prefill-sampled first
+    token — the same numbering a unified engine emits.  Any scheduler
+    fits: admission size/shape delegate as usual, and a
+    :class:`repro.serving.ShardedScheduler` shards the prefill itself.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._gather = jax.jit(
+            lambda idx, c: lm.gather_cache_rows(self.cfg, idx, c))
+
+    def _wants_stream(self, request: Any) -> bool:
+        return False                  # streaming starts on the decode side
+
+    def _admit(self, new: List[Tuple[int, SlotTask]]
+               ) -> Tuple[List[int], int]:
+        finished, items = super()._admit(new)
+        done = set(finished)
+        for s, task in new:
+            req = task.payload
+            task.state["handoff"] = CacheHandoff(
+                rid=task.rid, request=req,
+                family=self.cfg.family, arch_id=self.cfg.arch_id,
+                max_len=self.max_len, rows=None,
+                tok=int(self._tok[s]), pos=int(self._pos[s]),
+                out=list(task.state["out"]), left=int(task.state["left"]),
+                done=(s in done),
+                stream=bool(getattr(req, "stream", False)),
+                cls=self._request_class(req))
+        # one batched slot-axis gather + one device sync for the whole
+        # admission (not one per request), then an eager per-request
+        # split of the already-gathered rows
+        pending = [(s, task) for s, task in new
+                   if not task.state["handoff"].done]
+        if pending:
+            rows_all = jax.block_until_ready(self._gather(
+                jnp.asarray([s for s, _ in pending], jnp.int32),
+                self._caches))
+            for i, (_, task) in enumerate(pending):
+                task.state["handoff"].rows = lm.gather_cache_rows(
+                    self.cfg, jnp.asarray([i], jnp.int32), rows_all)
+        # every admitted slot retires this tick: the slot's state left in
+        # the handoff, the slot itself is free for the next admission
+        return [s for s, _ in new], items
+
+    def _finalize(self, entry, latency_s: float):
+        if not entry.tasks:           # max_new_tokens <= 0: identity
+            return super()._finalize(entry, latency_s)
+        return entry.tasks[0].state["handoff"]
+
+
+class DecodeEngine(ServeEngine):
+    """Decode half of a disaggregated pair.
+
+    A :class:`repro.serving.ServeEngine` that admits
+    :class:`HandoffRequest`\\ s: ``submit`` validates the handoff
+    signature (family/arch/cache geometry/dtypes — a mismatch raises
+    ``ValueError`` before any engine state changes, never decodes
+    garbage), and admission *injects* instead of prefilling — the rows
+    scatter into this engine's slot caches at the assigned slot, with
+    the slot index routed through ``scheduler.place()`` and the rows
+    replicated onto the scheduler's mesh when sharded.  Plain
+    :class:`repro.serving.Request`\\ s are still accepted (it remains a
+    full ServeEngine), so a decode engine can drain mixed traffic.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._inject = jax.jit(
+            lambda rows, idx, c: lm.scatter_cache_rows(self.cfg, idx,
+                                                       rows, c))
+        self._expected_rows = lm.make_caches(self.cfg, 1, self.max_len,
+                                             as_structs=True)
+
+    def validate_handoff(self, h: CacheHandoff) -> None:
+        """Raise ``ValueError`` unless ``h`` can be decoded *exactly*
+        by this engine: same model family and arch, same cache length,
+        and cache rows whose tree/shape/dtypes match this engine's own
+        ``lm.make_caches`` geometry."""
+        if h.family != self.cfg.family or h.arch_id != self.cfg.arch_id:
+            raise ValueError(
+                f"cache handoff rid={h.rid} was prefilled by model "
+                f"family={h.family!r} arch={h.arch_id!r}; this decode "
+                f"engine runs family={self.cfg.family!r} "
+                f"arch={self.cfg.arch_id!r} — decoding it would produce "
+                f"garbage, refusing")
+        if h.max_len != self.max_len:
+            raise ValueError(
+                f"cache handoff rid={h.rid} carries max_len={h.max_len} "
+                f"cache rows; this decode engine's slots are "
+                f"max_len={self.max_len} — shapes cannot line up")
+        if h.done:
+            return                    # no rows travel with a done handoff
+        want_leaves, want_def = jax.tree.flatten(self._expected_rows)
+        got_leaves, got_def = jax.tree.flatten(h.rows)
+        if want_def != got_def:
+            raise ValueError(
+                f"cache handoff rid={h.rid}: cache tree structure does "
+                f"not match this engine's {self.cfg.family} cache "
+                f"({got_def} != {want_def})")
+        for w, g in zip(want_leaves, got_leaves):
+            shape = tuple(getattr(g, "shape", ()))
+            if shape != tuple(w.shape):
+                raise ValueError(
+                    f"cache handoff rid={h.rid}: cache leaf shape "
+                    f"{shape} != expected {tuple(w.shape)}")
+            if jnp.dtype(getattr(g, "dtype", None)) != jnp.dtype(w.dtype):
+                raise ValueError(
+                    f"cache handoff rid={h.rid}: cache leaf dtype "
+                    f"{jnp.dtype(getattr(g, 'dtype', None))} != expected "
+                    f"{jnp.dtype(w.dtype)}")
+
+    # -- workload hooks ----------------------------------------------------
+
+    def _expand(self, request: Any) -> Tuple[List[SlotTask], Dict[str, Any]]:
+        if not isinstance(request, HandoffRequest):
+            return super()._expand(request)
+        self.validate_handoff(request.handoff)
+        return [SlotTask(payload=request)], {}
+
+    def _admit(self, new: List[Tuple[int, SlotTask]]
+               ) -> Tuple[List[int], int]:
+        plain = [(s, t) for s, t in new
+                 if not isinstance(t.payload, HandoffRequest)]
+        hand = [(s, t) for s, t in new
+                if isinstance(t.payload, HandoffRequest)]
+        finished, items = (super()._admit(plain) if plain else ([], 0))
+        finished = list(finished)
+        place = self.scheduler.place
+        # one batched scatter for the whole handoff group (each jitted
+        # scatter rewrites every cache leaf functionally, so k separate
+        # injections would cost k whole-cache copies)
+        live = [(s, t.payload.handoff) for s, t in hand
+                if not t.payload.handoff.done]
+        if live:
+            rows = lm.concat_cache_rows(self.cfg, [h.rows for _, h in live])
+            self._caches = self._inject(
+                self._place_rows(rows),
+                place(np.asarray([s for s, _ in live], np.int32)),
+                self._caches)
+        for s, task in hand:
+            h = task.payload.handoff
+            task.state = {"out": list(h.out), "left": int(h.left)}
+            self._tok[s] = h.tok
+            self._pos[s] = h.pos
+            # first token event: prefill sampled it, decode emits it, so
+            # the stream starts at seq=0 exactly like a unified engine
+            self._emit(task.rid, h.out[-1] if h.out else None)
+            if h.left <= 0 or h.pos >= self.max_len:
+                finished.append(s)
+        return finished, items        # injected tokens were counted by
+        #                               the prefill engine's stats
+
+    def _place_rows(self, rows: Any) -> Any:
+        if isinstance(self.scheduler, ShardedScheduler):
+            from repro.parallel.sharding import replicated_shardings
+
+            return jax.device_put(
+                rows, replicated_shardings(rows, self.scheduler.mesh))
+        return rows
+
+    def _request_class(self, request: Any) -> str:
+        if isinstance(request, HandoffRequest):
+            return request.handoff.cls
+        return super()._request_class(request)
+
+
+@dataclasses.dataclass
+class _Tracked:
+    """Front-end bookkeeping for one in-flight request."""
+
+    t0: float                         # front-end submit wall-clock
+    cls: str                          # request class (latency histogram)
+    stream: bool
+
+
+class DisaggregatedEngine:
+    """Front-end over one prefill engine and N decode engines.
+
+    Keeps the standard engine surface — ``submit() / poll() /
+    run_until_idle() / stats() / warmup() / tick() / serve()`` — while
+    requests flow prefill -> handoff queue -> decode.  Each ``tick()``
+    asks ``scheduler.phase()`` (default :class:`DisaggScheduler`) which
+    stage to run: ``"prefill"`` ticks the prefill engine, ``"handoff"``
+    drains the handoff queue into decode engines, ``"decode"`` ticks the
+    decode engines, ``"mixed"`` does all three.  Impossible answers are
+    coerced exactly as :class:`repro.serving.EngineCore` does, so no
+    scheduler can stall the front-end.
+
+    **Streaming** — ``poll(stream=True)`` relays the decode engines'
+    :class:`repro.serving.StreamEvent`\\ s: a request's whole stream comes
+    from the one decode engine that owns it, so per-rid ``seq`` ordering
+    holds across the handoff boundary, and the ``done`` event carries the
+    same completion object plain ``poll()`` returns (with end-to-end
+    latency: front-end submit to final token, both engine legs and the
+    queue wait included).
+
+    **Fault handling** — a decode engine whose ``submit`` raises during a
+    handoff is marked dead and the handoff *requeues* onto the next
+    engine (never dropped); a ``ValueError`` (typed handoff rejection)
+    propagates instead, since it means a mis-built pair.  When every
+    decode engine is dead the front-end raises rather than spin.
+
+    **Stats** — aggregated :class:`repro.serving.EngineStats`: items /
+    ticks / wall-clock summed over the member engines, completion counts
+    and end-to-end latency histograms owned by the front-end, plus
+    per-phase queue-depth histograms (``depth``) and handoff
+    transfer-latency histograms (``transfer``).
+
+    ``prefill=None`` is the stateless degenerate form (no carried state,
+    e.g. :class:`repro.serving.CapsuleEngine` pools): submissions become
+    dispatch-only handoffs and the front-end is a validating
+    load-balancer with the same phase/stats machinery.
+    """
+
+    def __init__(self, prefill: Optional[EngineCore],
+                 decodes: List[EngineCore],
+                 scheduler: Optional[Scheduler] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if not decodes:
+            raise ValueError("need at least one decode engine")
+        self.prefill = prefill
+        self.decodes = list(decodes)
+        self.capacity = sum(e.capacity for e in self.decodes)
+        self.scheduler = scheduler or DisaggScheduler()
+        self.scheduler.bind(self)
+        self._clock = clock
+        self._handoffs: Deque[CacheHandoff] = deque()
+        self._inflight: Dict[int, _Tracked] = {}
+        self._completions: Deque[Any] = deque()
+        self._events: Deque[StreamEvent] = deque()
+        self._stats = EngineStats()
+        self._next_rid = 0
+        self._dead: Set[int] = set()  # decode engines whose submit raised
+        self._rr = 0                  # round-robin transfer cursor
+        self._lock = threading.Lock()
+        self._tick_lock = threading.Lock()
+
+    # -- shared surface ----------------------------------------------------
+
+    def submit(self, request: Any) -> int:
+        """Enqueue one request (thread-safe, non-blocking); returns its
+        rid.  Validation errors (malformed payloads) raise before any
+        front-end or member-engine state changes."""
+        front = self.prefill if self.prefill is not None else self.decodes[0]
+        cls = front._request_class(request)
+        stream = bool(getattr(request, "stream", False))
+        with self._lock:
+            rid, self._next_rid = allocate_rid(request, self._inflight,
+                                               self._next_rid)
+            # registered before the member submit: the ticker may finish
+            # the request between that submit and any later bookkeeping
+            self._inflight[rid] = _Tracked(t0=self._clock(), cls=cls,
+                                           stream=stream)
+        try:
+            if self.prefill is not None:
+                self.prefill.submit(request)
+            else:
+                self.decodes[0]._expand(request)   # validate eagerly
+                with self._lock:
+                    self._handoffs.append(CacheHandoff(
+                        rid=rid, request=request, family=None, arch_id=None,
+                        max_len=0, rows=None, tok=0, pos=0, out=[], left=0,
+                        stateless=True, stream=stream, cls=cls,
+                        t_handoff=self._clock()))
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(rid, None)
+            raise
+        return rid
+
+    def poll(self, stream: bool = False) -> List[Any]:
+        """Drain completions (or, with ``stream=True``, the relayed
+        :class:`repro.serving.StreamEvent`\\ s) ready so far — the same
+        two-channel contract as :class:`repro.serving.EngineCore`."""
+        out: List[Any] = []
+        with self._lock:
+            src = self._events if stream else self._completions
+            while src:
+                out.append(src.popleft())
+        return out
+
+    def tick(self) -> bool:
+        """One front-end step; returns False when every stage was idle."""
+        with self._tick_lock:
+            with self._lock:
+                n_handoff = len(self._handoffs)
+            n_prefill = self.prefill.n_pending if self.prefill else 0
+            n_decode = sum(e.n_pending for e in self.decodes)
+            sched = self.scheduler
+            if hasattr(sched, "handoff_depth"):
+                sched.handoff_depth = n_handoff
+            phase = sched.phase(n_prefill + n_handoff, n_decode)
+            if phase not in ("prefill", "handoff", "decode"):
+                phase = "mixed"
+            elif phase == "prefill" and (self.prefill is None
+                                         or n_prefill == 0):
+                phase = "mixed"
+            elif phase == "handoff" and n_handoff == 0:
+                phase = "mixed"
+            elif phase == "decode" and n_decode == 0:
+                phase = "mixed"
+            if n_prefill or n_handoff or n_decode:
+                # depth records *backlog awaiting service* (queue-only,
+                # the same quantity EngineCore.tick records) — n_pending
+                # above additionally counts residents, which phase
+                # decisions need but depth histograms must not
+                q_pre = self.prefill.n_queued if self.prefill else 0
+                q_dec = sum(e.n_queued for e in self.decodes)
+                with self._lock:
+                    st = self._stats
+                    if self.prefill is not None:  # stateless pools have
+                        st.depth.setdefault(      # no prefill stage
+                            "prefill", DepthHistogram()).record(q_pre)
+                    st.depth.setdefault(
+                        "handoff", DepthHistogram()).record(n_handoff)
+                    st.depth.setdefault(
+                        "decode", DepthHistogram()).record(q_dec)
+            busy = False
+            if phase in ("mixed", "prefill") and self.prefill is not None:
+                busy |= self.prefill.tick()
+            # always collect: handoffs/completions parked inside a member
+            # engine are invisible to n_pending until moved up here
+            self._collect_prefill()
+            if phase in ("mixed", "handoff"):
+                busy |= self._transfer_all() > 0
+            if phase in ("mixed", "decode"):
+                # dead engines (submit raised) still tick: they receive no
+                # new handoffs, but any resident work must drain — and a
+                # genuinely dead engine's tick() raising is an explicit
+                # failure, never a silent hang
+                for eng in self.decodes:
+                    busy |= eng.tick()
+            self._collect_decode()
+            return busy
+
+    def run_until_idle(self) -> List[Any]:
+        """Tick until every stage drains; returns the completions ready
+        at exit (streaming events stay queued for ``poll(stream=True)``)."""
+        while True:
+            if self.tick():
+                continue
+            if self.n_pending == 0:
+                return self.poll()
+
+    def serve(self, requests: List[Any]) -> List[Any]:
+        """Submit all requests and run them to completion."""
+        for r in requests:
+            self.submit(r)
+        return self.run_until_idle()
+
+    def warmup(self) -> None:
+        for eng in self._members():
+            eng.warmup()
+
+    def stats(self) -> EngineStats:
+        """Aggregated snapshot: member-engine work counters summed,
+        front-end completion/latency/depth/transfer histograms copied."""
+        agg = EngineStats()
+        for eng in self._members():
+            s = eng.stats()
+            agg.items += s.items
+            agg.padded += s.padded
+            agg.ticks += s.ticks
+            agg.wall_s += s.wall_s
+        with self._lock:
+            agg.completed = self._stats.completed
+            agg.latency = {k: h.copy()
+                           for k, h in self._stats.latency.items()}
+            agg.depth = {k: h.copy() for k, h in self._stats.depth.items()}
+            agg.transfer = {k: h.copy()
+                            for k, h in self._stats.transfer.items()}
+        return agg
+
+    @property
+    def n_pending(self) -> int:
+        """Queued handoffs + pending work in every member engine."""
+        n = sum(e.n_pending for e in self.decodes)
+        if self.prefill is not None:
+            n += self.prefill.n_pending
+        with self._lock:
+            return n + len(self._handoffs)
+
+    # -- internals ---------------------------------------------------------
+
+    def _members(self) -> List[EngineCore]:
+        return (([self.prefill] if self.prefill is not None else [])
+                + self.decodes)
+
+    def _collect_prefill(self) -> None:
+        if self.prefill is None:
+            return
+        for c in self.prefill.poll():
+            if isinstance(c, CacheHandoff):
+                c.t_handoff = self._clock()
+                with self._lock:
+                    self._handoffs.append(c)
+            else:                     # identity completion (no decode leg)
+                self._finish(c)
+
+    def _collect_decode(self) -> None:
+        for eng in self.decodes:
+            for c in eng.poll():
+                self._finish(c)
+            evs = eng.poll(stream=True)
+            if evs:
+                with self._lock:
+                    self._events.extend(evs)
+
+    def _finish(self, completion: Any) -> None:
+        now = self._clock()
+        with self._lock:
+            tr = self._inflight.pop(getattr(completion, "rid", None), None)
+            if tr is not None:
+                # end-to-end latency (both engine legs + the queue wait);
+                # the decode engine stamped only its own leg.  The done
+                # StreamEvent shares this object, so the stream sees the
+                # same number.
+                completion.latency_s = max(now - tr.t0, 0.0)
+                self._stats.completed += 1
+                self._stats.latency.setdefault(
+                    tr.cls, LatencyHistogram()).record(completion.latency_s)
+            self._completions.append(completion)
+
+    def _transfer_all(self) -> int:
+        moved = 0
+        while True:
+            with self._lock:
+                if not self._handoffs:
+                    return moved
+                h = self._handoffs.popleft()
+            if self._transfer_one(h):
+                moved += 1
+            else:
+                with self._lock:       # requeued, never dropped
+                    self._handoffs.appendleft(h)
+                if len(self._dead) >= len(self.decodes):
+                    raise RuntimeError(
+                        f"all {len(self.decodes)} decode engines failed; "
+                        f"{len(self._handoffs)} handoff(s) requeued and "
+                        f"stranded")
+                return moved
+
+    def _transfer_one(self, h: CacheHandoff) -> bool:
+        n = len(self.decodes)
+        for k in range(n):
+            i = (self._rr + k) % n
+            if i in self._dead:
+                continue
+            eng = self.decodes[i]
+            try:
+                if h.stateless:
+                    eng.submit(h.request)
+                else:
+                    eng.submit(HandoffRequest(handoff=h, rid=h.rid,
+                                              stream=h.stream))
+            except ValueError:
+                # typed handoff rejection: a mis-built pair is a real bug
+                # and must surface — but the never-dropped invariant still
+                # holds, so the handoff goes back on the queue first
+                with self._lock:
+                    self._handoffs.appendleft(h)
+                raise
+            except Exception:         # engine died mid-handoff: fail over
+                self._dead.add(i)
+                continue
+            self._rr = (i + 1) % n
+            with self._lock:
+                self._stats.transfer.setdefault(
+                    "handoff", LatencyHistogram()).record(
+                        max(self._clock() - h.t_handoff, 0.0))
+            return True
+        return False                  # caller requeues
+
+
+def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
+                            max_len: int = 512, seed: int = 0,
+                            n_decode: int = 1,
+                            prefill_slots: Optional[int] = None,
+                            prefill_scheduler: Optional[Scheduler] = None,
+                            decode_schedulers: Optional[
+                                List[Optional[Scheduler]]] = None,
+                            scheduler: Optional[Scheduler] = None,
+                            clock: Callable[[], float] = time.perf_counter,
+                            kernel_tune: Optional[bool] = None
+                            ) -> DisaggregatedEngine:
+    """The standard LM disaggregation: one :class:`PrefillEngine` feeding
+    ``n_decode`` :class:`DecodeEngine`\\ s of ``n_slots`` slots each,
+    sharing ``params``.  ``decode_schedulers`` (one per decode engine —
+    scheduler instances are stateful and must never be shared) lets e.g.
+    a :class:`repro.serving.ShardedScheduler` place each decode engine on
+    its own mesh; ``scheduler`` is the front-end phase policy
+    (:class:`repro.serving.DisaggScheduler` by default)."""
+    if decode_schedulers is None:
+        decode_schedulers = [None] * n_decode
+    if len(decode_schedulers) != n_decode:
+        raise ValueError(f"need one decode scheduler per engine "
+                         f"({len(decode_schedulers)} != {n_decode})")
+    pre = PrefillEngine(cfg, params, n_slots=prefill_slots or n_slots,
+                        max_len=max_len, seed=seed,
+                        scheduler=prefill_scheduler, clock=clock,
+                        kernel_tune=kernel_tune)
+    dec = [DecodeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                        seed=seed, scheduler=decode_schedulers[i],
+                        clock=clock, kernel_tune=kernel_tune)
+           for i in range(n_decode)]
+    return DisaggregatedEngine(pre, dec, scheduler=scheduler, clock=clock)

@@ -74,29 +74,6 @@ class Completion:
     latency_s: float = 0.0        # submit -> completion wall-clock
 
 
-def _scatter_caches(cfg: LMConfig, slot_idx: jax.Array, new: Any, old: Any
-                    ) -> Any:
-    """Write sub-batch cache rows ``new`` into ``old`` at ``slot_idx``.
-
-    The batch dim sits at a different axis per cache family; its index is
-    recovered from the logical-axis tree (``lm.cache_specs``) rather than
-    hardcoded per family.  Out-of-range indices (the sub-batch's pad rows)
-    are dropped by the scatter.
-    """
-    specs = lm.cache_specs(cfg)
-
-    def one(axes, n, o):
-        if "batch" not in axes:
-            return o
-        ax = axes.index("batch")
-        om = jnp.moveaxis(o, ax, 0)
-        nm = jnp.moveaxis(n, ax, 0).astype(o.dtype)
-        return jnp.moveaxis(om.at[slot_idx].set(nm, mode="drop"), 0, ax)
-
-    return jax.tree.map(one, specs, new, old,
-                        is_leaf=lambda x: isinstance(x, tuple))
-
-
 class ServeEngine(EngineCore):
     """Slot-based continuous-batching LM engine (one request per slot).
 
@@ -161,7 +138,7 @@ class ServeEngine(EngineCore):
         sub = lm.make_caches(self.cfg, tokens.shape[0], self.max_len)
         logits, sub = lm.ragged_prefill_step(
             params, self.cfg, {"tokens": tokens, "lengths": lengths}, sub)
-        return logits, _scatter_caches(self.cfg, slot_idx, sub, caches)
+        return logits, lm.scatter_cache_rows(self.cfg, slot_idx, sub, caches)
 
     # -- sampling ----------------------------------------------------------
 

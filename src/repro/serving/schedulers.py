@@ -33,6 +33,11 @@ Variants:
   * :class:`InterleavingScheduler` — dedicate whole ticks to prefill
     (admission) or decode (stepping) so a burst of long prompts cannot
     stretch the inter-token latency of the already-resident slots.
+  * :class:`DisaggScheduler` — the phase policy of a
+    :class:`repro.serving.DisaggregatedEngine` front-end, which adds a
+    fourth tick kind: ``"handoff"`` (move finished prefills to a decode
+    engine).  Plain engines have no handoff stage and coerce the answer
+    to ``"mixed"``, so the scheduler is safe to bind anywhere.
 """
 
 from __future__ import annotations
@@ -85,9 +90,12 @@ class Scheduler:
         """Tick interleaving policy: ``"mixed"`` (admit *and* step — the
         legacy behaviour where prefill rides the admission tick),
         ``"prefill"`` (admission/prefill only; resident slots idle one
-        tick) or ``"decode"`` (step only; the queue waits).  The engine
-        coerces impossible answers (e.g. ``"decode"`` with no resident
-        work) back to ``"mixed"`` so a scheduler can never stall it."""
+        tick), ``"decode"`` (step only; the queue waits), or
+        ``"handoff"`` (disaggregated front-ends only: move finished
+        prefill state to a decode engine).  The engine coerces
+        impossible answers (e.g. ``"decode"`` with no resident work, or
+        ``"handoff"`` on an engine with no handoff stage) back to
+        ``"mixed"`` so a scheduler can never stall it."""
         return "mixed"
 
     def quantize(self, n_active: int, capacity: int) -> int:
@@ -244,6 +252,44 @@ class InterleavingScheduler(Scheduler):
 
     def observe(self, record: TickRecord) -> None:
         self.inner.observe(record)
+
+
+class DisaggScheduler(Scheduler):
+    """Phase policy for a :class:`repro.serving.DisaggregatedEngine`.
+
+    Priorities: drain the **handoff** queue first (a stranded handoff is
+    finished prefill work resident on *neither* engine — it holds cache
+    state hostage while both sides idle).  Otherwise, prefill and decode
+    live on *separate engines*, so when both sides have work the answer
+    is ``"mixed"`` — both advance every front-end tick, which is what
+    makes the disaggregation guarantee real: a sustained arrival stream
+    keeps the prefill engine busy forever without ever costing the
+    resident decodes a tick (a strict prefill-first policy would starve
+    them).  Only when one side is idle does the tick dedicate to the
+    other.
+
+    ``handoff_depth`` is poked by the front-end before each ``phase()``
+    call — the two-int ``phase(n_queued, n_active)`` signature is shared
+    with every other scheduler, and ``n_queued`` there is the *total*
+    front-end backlog (prefill queue + handoff queue).  On a plain
+    :class:`repro.serving.EngineCore` nothing sets ``handoff_depth``, a
+    ``"handoff"`` answer is coerced to ``"mixed"``, and the scheduler
+    degrades to interleaving-style prefill/decode separation.
+    """
+
+    def __init__(self):
+        self.handoff_depth = 0
+
+    def phase(self, n_queued: int, n_active: int) -> str:
+        if self.handoff_depth > 0:
+            return "handoff"
+        if n_queued > 0 and n_active > 0:
+            return "mixed"            # separate engines: advance both
+        if n_queued > 0:
+            return "prefill"
+        if n_active > 0:
+            return "decode"
+        return "mixed"
 
 
 class ShardedScheduler(Scheduler):

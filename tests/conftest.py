@@ -5,7 +5,10 @@ import os
 
 # Make sure accidental imports of repro.launch.dryrun in a dev loop don't
 # leak 512 virtual devices into the test process: tests must see 1 device.
-os.environ.pop("XLA_FLAGS", None)
+# The serving-conformance CI lane opts out explicitly (it *wants* a forced
+# 2-device CPU host for the sharded/disaggregated placement paths).
+if os.environ.get("REPRO_TESTS_KEEP_XLA_FLAGS", "") != "1":
+    os.environ.pop("XLA_FLAGS", None)
 
 import jax  # noqa: E402
 

@@ -1,0 +1,88 @@
+"""Workload-free EngineCore doubles shared by the scheduler-conformance
+and property-based serving suites.
+
+``ToyEngine`` is a pure-python :class:`repro.serving.EngineCore`: each
+task counts down ``steps`` ticks and emits one stream item per step.  No
+model compiles, so engine/scheduler contracts can be exercised
+exhaustively (hundreds of randomized op sequences) in milliseconds; the
+instrumentation records exactly the quantities the contracts bound
+(slot high-water marks, admission order, compiled batch sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serving.core import EngineCore, SlotTask
+
+
+@dataclasses.dataclass
+class ToyRequest:
+    """``n_tasks`` parallel slot tasks, each needing ``steps`` ticks."""
+
+    n_tasks: int = 1
+    steps: int = 1
+    rid: Optional[int] = None
+    stream: bool = False
+
+
+@dataclasses.dataclass
+class ToyCompletion:
+    rid: int
+    items: int                        # tasks served
+    latency_s: float
+
+
+class ToyEngine(EngineCore):
+    """Counting engine: `_step` decrements each active task's countdown.
+
+    Instrumentation (never resets):
+
+      * ``max_occupied`` — high-water mark of slots simultaneously active;
+      * ``max_batch`` — largest compiled batch any tick requested;
+      * ``admitted_order`` — rids in slot-admission order (one entry per
+        task), for FIFO/starvation assertions.
+    """
+
+    def __init__(self, capacity: int = 4, scheduler=None, clock=None):
+        super().__init__(capacity=capacity, scheduler=scheduler,
+                         clock=clock or time.perf_counter)
+        self.max_occupied = 0
+        self.max_batch = 0
+        self.admitted_order: List[int] = []
+
+    # -- workload hooks ----------------------------------------------------
+
+    def _expand(self, request: ToyRequest
+                ) -> Tuple[List[SlotTask], Dict[str, Any]]:
+        if request.n_tasks < 0 or request.steps < 1:
+            raise ValueError("bad toy request")
+        return [SlotTask(payload=request.steps)
+                for _ in range(request.n_tasks)], {}
+
+    def _admit(self, new: List[Tuple[int, SlotTask]]) -> Tuple[List[int], int]:
+        for _, task in new:
+            task.state["left"] = task.payload
+            self.admitted_order.append(task.rid)
+        return [], 0
+
+    def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
+              ) -> Tuple[List[int], int]:
+        self.max_occupied = max(self.max_occupied, len(active))
+        self.max_batch = max(self.max_batch, n_batch)
+        finished = []
+        for s, task in active:
+            task.state["left"] -= 1
+            self._emit(task.rid, ("step", task.state["left"]))
+            if task.state["left"] <= 0:
+                finished.append(s)
+        return finished, len(active)
+
+    def _request_class(self, request: ToyRequest) -> str:
+        return f"toy/t{request.n_tasks}"
+
+    def _finalize(self, entry, latency_s: float) -> ToyCompletion:
+        return ToyCompletion(rid=entry.request.rid, items=len(entry.tasks),
+                             latency_s=latency_s)

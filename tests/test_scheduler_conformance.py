@@ -1,0 +1,159 @@
+"""One contract suite for EVERY Scheduler implementation.
+
+The scheduler surface grew to five variants (FIFO, SLO-batch, sharded,
+interleaving, and the disaggregated front-end policy); this file is the
+single parametrized source of their shared invariants, so a new variant
+cannot drift from the protocol without failing here:
+
+  * batch selection — occupied slots and compiled batches never exceed
+    engine capacity, and the oldest queued request is never starved;
+  * admission order — the engine's queue is FIFO under every scheduler;
+  * ``phase()`` legality — answers come from the four-phase vocabulary
+    for any (queued, active) state;
+  * ``place()`` idempotence — re-placing an already-placed array is
+    value-identical (and never errors);
+  * ``quantize()`` / ``shapes()`` coherence — every quantized batch is
+    within [1, capacity], covers the active count, and is pre-declared
+    by ``shapes()`` so warmup can compile it.
+
+Runs on any host; CI additionally runs it with a forced 2-device CPU so
+the sharded scheduler's placement paths are real (the local mesh spans
+``jax.device_count()`` devices).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from engine_testlib import ToyEngine, ToyRequest
+from repro.launch.mesh import make_mesh
+from repro.serving import (DisaggScheduler, FIFOScheduler,
+                           InterleavingScheduler, Scheduler,
+                           ShardedScheduler, SLOBatchScheduler)
+
+CAPACITY = 4          # divisible by any plausible forced CPU device count
+
+PHASES = {"mixed", "prefill", "decode", "handoff"}
+
+
+def _sharded():
+    n = jax.device_count()
+    return ShardedScheduler(make_mesh((n,), ("data",)))
+
+
+SCHEDULERS = {
+    "base": Scheduler,
+    "fifo": FIFOScheduler,
+    "slo": lambda: SLOBatchScheduler(target_p95_ms=5.0, window=4,
+                                     min_samples=2),
+    "sharded": _sharded,
+    "interleave": lambda: InterleavingScheduler(decode_ratio=1),
+    "disagg": DisaggScheduler,
+}
+
+
+@pytest.fixture(params=sorted(SCHEDULERS))
+def sched_name(request):
+    return request.param
+
+
+def make_engine(sched_name, capacity=CAPACITY):
+    # schedulers are stateful and must not be shared between engines:
+    # every engine gets a fresh instance from its factory
+    return ToyEngine(capacity=capacity, scheduler=SCHEDULERS[sched_name]())
+
+
+def make_bound(sched_name, capacity=CAPACITY):
+    return make_engine(sched_name, capacity).scheduler
+
+
+class TestBatchSelection:
+    def test_capacity_never_exceeded(self, sched_name):
+        eng = make_engine(sched_name)
+        for i in range(6):
+            eng.submit(ToyRequest(n_tasks=3, steps=2, rid=i))
+        comps = eng.run_until_idle()
+        assert eng.max_occupied <= eng.capacity
+        assert eng.max_batch <= eng.capacity
+        assert sorted(c.rid for c in comps) == list(range(6))
+
+    def test_oldest_request_never_starved(self, sched_name):
+        """Under a continuous trickle of newer work, the first-submitted
+        request still completes within a bounded number of ticks."""
+        eng = make_engine(sched_name, capacity=2)
+        first = eng.submit(ToyRequest(steps=3))
+        done = []
+        for _ in range(40):
+            eng.submit(ToyRequest(steps=1))
+            eng.tick()
+            done += [c.rid for c in eng.poll()]
+            if first in done:
+                break
+        assert first in done, f"{sched_name}: oldest request starved"
+
+    def test_admission_is_fifo(self, sched_name):
+        eng = make_engine(sched_name)
+        rids = [eng.submit(ToyRequest(steps=2)) for _ in range(8)]
+        eng.run_until_idle()
+        assert eng.admitted_order == rids
+
+    def test_results_identical_across_schedulers(self, sched_name):
+        """Scheduling policy changes *when* work runs, never the result."""
+        def outcome(name):
+            eng = make_engine(name)
+            comps = eng.serve([ToyRequest(n_tasks=n, steps=s, rid=i)
+                               for i, (n, s) in enumerate(
+                                   [(2, 1), (1, 3), (3, 2), (0, 1)])])
+            return sorted((c.rid, c.items) for c in comps)
+
+        assert outcome(sched_name) == outcome("fifo")
+
+
+class TestPhaseLegality:
+    def test_phase_vocabulary(self, sched_name):
+        sched = make_bound(sched_name)
+        for q in range(5):
+            for a in range(5):
+                assert sched.phase(q, a) in PHASES
+
+    def test_unknown_phases_coerced_by_engine(self):
+        """A plain engine given the disaggregated policy must coerce
+        "handoff" (it has no handoff stage) and keep serving."""
+        eng = make_engine("disagg")
+        comps = eng.serve([ToyRequest(steps=2) for _ in range(5)])
+        assert len(comps) == 5
+
+
+class TestPlacement:
+    def test_place_preserves_values(self, sched_name):
+        sched = make_bound(sched_name)
+        x = np.arange(float(CAPACITY * 3), dtype=np.float32
+                      ).reshape(CAPACITY, 3)
+        np.testing.assert_array_equal(np.asarray(sched.place(x)), x)
+
+    def test_place_idempotent_on_placed_arrays(self, sched_name):
+        sched = make_bound(sched_name)
+        x = np.arange(float(CAPACITY * 2), dtype=np.float32
+                      ).reshape(CAPACITY, 2)
+        p1 = sched.place(x)
+        p2 = sched.place(p1)          # already placed: no error, same value
+        np.testing.assert_array_equal(np.asarray(p2), np.asarray(p1))
+        if hasattr(p1, "sharding"):   # and the same placement
+            assert p2.sharding.is_equivalent_to(p1.sharding, p1.ndim)
+
+
+class TestShapeCoherence:
+    def test_quantize_bounds_and_shapes_cover(self, sched_name):
+        sched = make_bound(sched_name, capacity=8)
+        shapes = sched.shapes(8)
+        assert all(1 <= b <= 8 for b in shapes)
+        for n in range(1, 9):
+            q = sched.quantize(n, 8)
+            assert min(n, 8) <= q <= 8, (sched_name, n, q)
+            assert q in shapes, (sched_name, n, q, shapes)
+
+    def test_plan_positive(self, sched_name):
+        sched = make_bound(sched_name)
+        for q in range(5):
+            for a in range(5):
+                assert int(sched.plan(q, a)) >= 1

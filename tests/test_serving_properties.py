@@ -1,0 +1,128 @@
+"""Property-based serving-surface tests (hypothesis, skip-guarded).
+
+Random interleavings of ``submit() / tick() / poll()`` — shrinkable op
+sequences instead of the hand-picked scenarios of ``test_serving_api.py``
+— must preserve the engine contracts:
+
+  * per-request ``StreamEvent`` ordering (``seq`` = 0..k, done last and
+    exactly once, only for requests that opted in);
+  * ``EngineStats`` monotonicity after *every* op (counters, latency
+    histogram buckets, per-phase depth histograms);
+  * completion exactness: every submitted request completes exactly
+    once after a full drain, with the right task count.
+
+The invariant harness (``run_ops``) is plain code shared with
+deterministic regression cases, so the contract stays exercised even
+where hypothesis is absent (tier-1 CI intentionally omits it and these
+cases must *skip*, via ``hypothesis_compat``); the dedicated
+serving-conformance CI job installs hypothesis and runs the randomized
+sequences on a forced 2-device host.
+"""
+
+from engine_testlib import ToyEngine, ToyRequest
+from hypothesis_compat import given, settings, st
+
+
+def assert_monotone(prev, cur):
+    """Every EngineStats quantity may only grow between snapshots."""
+    assert cur.items >= prev.items
+    assert cur.padded >= prev.padded
+    assert cur.ticks >= prev.ticks
+    assert cur.wall_s >= prev.wall_s
+    assert cur.completed >= prev.completed
+    for cls, h1 in prev.latency.items():
+        h2 = cur.latency[cls]
+        assert h2.count >= h1.count
+        assert all(b >= a for a, b in zip(h1.counts, h2.counts))
+    for phase, h1 in prev.depth.items():
+        h2 = cur.depth[phase]
+        assert h2.count >= h1.count
+        assert h2.peak >= h1.peak
+        assert all(b >= a for a, b in zip(h1.counts, h2.counts))
+
+
+def run_ops(ops):
+    """Drive a ToyEngine through one op sequence, checking stats
+    monotonicity at every step and the stream/completion contracts after
+    a full drain.  Returns the engine for extra assertions."""
+    eng = ToyEngine(capacity=3)
+    completions = []
+    events = []
+    expected = {}                     # rid -> (n_tasks, streamed?)
+    prev = eng.stats()
+    for op in ops:
+        if op[0] == "submit":
+            _, n_tasks, steps, stream = op
+            rid = eng.submit(ToyRequest(n_tasks=n_tasks, steps=steps,
+                                        stream=stream))
+            expected[rid] = (n_tasks, stream)
+        elif op[0] == "tick":
+            eng.tick()
+        elif op[0] == "poll":
+            completions += eng.poll()
+        elif op[0] == "stream":
+            events += eng.poll(stream=True)
+        cur = eng.stats()
+        assert_monotone(prev, cur)
+        prev = cur
+
+    completions += eng.run_until_idle()
+    events += eng.poll(stream=True)
+    completions += eng.poll()
+    assert eng.n_pending == 0
+
+    # completion contract: everyone completes exactly once, task-exact
+    assert sorted(c.rid for c in completions) == sorted(expected)
+    for c in completions:
+        assert c.items == expected[c.rid][0]
+    assert eng.stats().completed == len(expected)
+
+    # stream contract: ordered per rid, one done event last, opt-in only
+    per_rid = {}
+    for ev in events:
+        per_rid.setdefault(ev.rid, []).append(ev)
+    for rid, evs in per_rid.items():
+        assert expected[rid][1], f"rid {rid} streamed without opting in"
+        assert [e.seq for e in evs] == list(range(len(evs)))
+        assert [e.done for e in evs] == [False] * (len(evs) - 1) + [True]
+        assert evs[-1].completion.rid == rid
+    for rid, (n_tasks, stream) in expected.items():
+        if stream:
+            assert rid in per_rid, f"streaming rid {rid} emitted nothing"
+    return eng
+
+
+OPS = st.one_of(
+    st.tuples(st.just("submit"), st.integers(min_value=0, max_value=4),
+              st.integers(min_value=1, max_value=3), st.booleans()),
+    st.tuples(st.just("tick")),
+    st.tuples(st.just("poll")),
+    st.tuples(st.just("stream")),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(OPS, max_size=40))
+def test_random_op_sequences_hold_invariants(ops):
+    run_ops(list(ops))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=3),
+                          st.integers(min_value=1, max_value=4),
+                          st.booleans()),
+                min_size=1, max_size=12))
+def test_burst_submit_then_drain(reqs):
+    """All-at-once admission pressure: a pure submit burst then drain."""
+    ops = [("submit", n, s, stream) for n, s, stream in reqs]
+    run_ops(ops)
+
+
+def test_deterministic_sequences_smoke():
+    """The same invariant harness on fixed sequences, so the contract is
+    exercised even where hypothesis is absent."""
+    run_ops([("submit", 2, 2, True), ("tick",), ("submit", 0, 1, False),
+             ("stream",), ("tick",), ("poll",), ("submit", 4, 1, True),
+             ("tick",), ("tick",), ("stream",)])
+    run_ops([("tick",), ("poll",), ("stream",)])
+    run_ops([("submit", 1, 3, True), ("submit", 3, 1, False), ("tick",)])

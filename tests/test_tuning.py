@@ -119,6 +119,118 @@ class TestPolicyScope:
             assert not tuning.tune_enabled()
 
 
+class TestCacheConcurrency:
+    """Two processes sharing REPRO_KERNEL_CACHE_DIR must never corrupt
+    the JSON cache (merge-on-write + per-writer tmp + atomic rename)."""
+
+    WRITER = r"""
+import sys
+from repro.kernels import tuning
+
+tag = sys.argv[1]
+cache = tuning.default_cache()
+for i in range(40):
+    key = tuning.TuneCache.key(f"k_{tag}_{i}", "cpu", "8x16", "float32")
+    cache.put(key, {"block": i}, {f"block={i}": 0.001})
+print("WRITER_DONE", tag)
+"""
+
+    def test_concurrent_processes_do_not_corrupt(self, tmp_path):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        env[tuning.CACHE_ENV] = str(tmp_path)
+        import subprocess
+        import sys
+        procs = [subprocess.Popen([sys.executable, "-c", self.WRITER, tag],
+                                  env=env, stdout=subprocess.PIPE,
+                                  stderr=subprocess.PIPE, text=True)
+                 for tag in ("a", "b")]
+        for p in procs:
+            out, err = p.communicate(timeout=120)
+            assert p.returncode == 0, err
+            assert "WRITER_DONE" in out
+        # whatever the interleaving, the published file is valid JSON of
+        # the right version, the flock'd read-merge-replace loses neither
+        # writer's keys, and no stale tmp files leak
+        blob = json.load(open(tmp_path / "autotune.json"))
+        assert blob["version"] == tuning.CACHE_VERSION
+        entries = blob["entries"]
+        n_a = sum(1 for k in entries if k.startswith("k_a_"))
+        n_b = sum(1 for k in entries if k.startswith("k_b_"))
+        assert (n_a, n_b) == (40, 40), (n_a, n_b)
+        assert not list(tmp_path.glob("*.tmp"))
+
+    def test_merge_on_write_keeps_foreign_entries(self, tmp_path):
+        """A second cache instance (standing in for another process)
+        writing to the same file must not erase entries the first one
+        already published."""
+        a = tuning.TuneCache(str(tmp_path / "autotune.json"))
+        b = tuning.TuneCache(str(tmp_path / "autotune.json"))
+        ka = tuning.TuneCache.key("ka", "cpu", "8", "float32")
+        kb = tuning.TuneCache.key("kb", "cpu", "8", "float32")
+        a.put(ka, {"block": 1})
+        b.put(kb, {"block": 2})       # b never saw a's write at load time
+        fresh = tuning.TuneCache(str(tmp_path / "autotune.json"))
+        assert fresh.get(ka) == {"block": 1}
+        assert fresh.get(kb) == {"block": 2}
+
+    def test_stale_snapshot_does_not_revert_newer_foreign_write(self,
+                                                                tmp_path):
+        """Merge-on-write overlays only the keys THIS instance wrote: a
+        process holding an old in-memory copy of key K must not revert
+        another process's newer K when it writes an unrelated key."""
+        path = str(tmp_path / "autotune.json")
+        k = tuning.TuneCache.key("k", "cpu", "8", "float32")
+        other = tuning.TuneCache.key("other", "cpu", "8", "float32")
+        a = tuning.TuneCache(path)
+        a.put(k, {"block": 1})
+        b = tuning.TuneCache(path)
+        assert b.get(k) == {"block": 1}   # b's snapshot now holds old K
+        a.put(k, {"block": 99})           # a publishes a newer K
+        b.put(other, {"block": 2})        # b writes an unrelated key
+        fresh = tuning.TuneCache(path)
+        assert fresh.get(k) == {"block": 99}, "stale snapshot reverted K"
+        assert fresh.get(other) == {"block": 2}
+
+
+class TestTuneFalseDeterminism:
+    """tune=False config resolution must be identical across runs — the
+    deterministic CI path cannot depend on cache state or process."""
+
+    RESOLVER = r"""
+import json
+from repro.kernels.registry import registry
+
+out = {}
+for name in registry.names():
+    spec = registry.get(name)
+    if not spec.is_available():
+        continue
+    for i, case in enumerate(spec.example_cases):
+        args, kwargs = spec.make_example(case)
+        out[f"{name}#{i}"] = registry.default_config(name, *args, **kwargs)
+print(json.dumps(out, sort_keys=True))
+"""
+
+    def test_identical_across_fresh_processes(self, tmp_path):
+        import subprocess
+        import sys
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        runs = []
+        for k in range(2):
+            env[tuning.CACHE_ENV] = str(tmp_path / f"cache{k}")  # both cold
+            r = subprocess.run([sys.executable, "-c", self.RESOLVER],
+                               env=env, capture_output=True, text=True,
+                               timeout=300)
+            assert r.returncode == 0, r.stderr
+            runs.append(r.stdout.strip().splitlines()[-1])
+        assert runs[0] == runs[1]
+        assert json.loads(runs[0])    # non-empty, well-formed
+
+
 class TestServingBindTime:
     def test_capsule_engine_pretunes_at_warmup(self, tune_cache):
         """kernel_tune=True: warmup autotunes fused_routing for the
