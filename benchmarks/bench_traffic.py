@@ -1,0 +1,129 @@
+"""Traffic replay benchmark: autoscaled vs static disaggregated pools.
+
+Replays one seeded bursty (MMPP) arrival trace of mixed short/long
+request classes against two LM serving configurations:
+
+* ``static``  — a disaggregated pool with the maximum decode-engine
+  count, always on;
+* ``autoscaled`` — the same pool starting at one decode engine, grown
+  and drained by the :class:`repro.traffic.AutoscaleController` on the
+  queue-depth signal.
+
+Both runs share one :class:`repro.traffic.VirtualClock`-seeded trace,
+so the comparison is deterministic.  The bench asserts the PR's
+closed-loop acceptance criteria — no request dropped in either run,
+and the autoscaled pool matching the static pool's per-class p95 while
+averaging fewer live engines — and reports the numbers for the
+``BENCH_traffic_*.json`` perf-trajectory artifact.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from benchmarks import common as bc
+from repro.models import lm
+from repro.models.common import LMConfig
+from repro.serving import DecodeEngine, disaggregated_lm_engine
+from repro.traffic import (AutoscaleController, RequestClass, VirtualClock,
+                           bursty_trace, default_factory, replay)
+
+
+def _cfg(quick: bool) -> LMConfig:
+    return LMConfig(arch_id="traffic-bench", family="dense",
+                    n_layers=2 if quick else 4, d_model=32 if quick else 64,
+                    n_heads=4, n_kv_heads=2, d_ff=64 if quick else 128,
+                    vocab=64, remat=False, compute_dtype="float32",
+                    param_dtype="float32")
+
+
+def _classes(quick: bool):
+    return [RequestClass("short", weight=3.0, prompt_len=(2, 6),
+                         max_new_tokens=(2, 4), priority=0,
+                         slo_p95_ms=2000.0),
+            RequestClass("long", weight=1.0, prompt_len=(8, 14),
+                         max_new_tokens=(4, 8), priority=1,
+                         slo_p95_ms=10000.0)]
+
+
+def _replay_pool(cfg, params, trace, n_max: int, n_slots: int,
+                 autoscale: bool) -> Dict[str, Any]:
+    clk = VirtualClock()
+
+    def mk():
+        return DecodeEngine(cfg, params, n_slots=n_slots, max_len=64,
+                            clock=clk)
+
+    pool = disaggregated_lm_engine(
+        cfg, params, n_slots=n_slots, max_len=64,
+        n_decode=1 if autoscale else n_max, clock=clk)
+    ctrl = None
+    if autoscale:
+        ctrl = AutoscaleController(mk, min_engines=1, max_engines=n_max,
+                                   grow_depth=2.0, hot_steps=3,
+                                   idle_steps=40)
+    rep = replay(pool, trace, factory=default_factory(trace, vocab=32),
+                 clock=clk, controller=ctrl)
+    out = {
+        "submitted": rep.submitted,
+        "completed": rep.completed,
+        "dropped": rep.dropped,
+        "preempted": rep.stats.preempted,
+        "per_class_latency_ms": {
+            k: {"n": n, "p50": p50, "p95": p95}
+            for k, (n, p50, p95) in rep.per_class.items()},
+        "depth": {k: {"ticks": n, "p50": p50, "p95": p95, "peak": peak}
+                  for k, (n, p50, p95, peak)
+                  in rep.stats.depth_summary().items()},
+        "transfer": {k: {"n": n, "p50": p50, "p95": p95}
+                     for k, (n, p50, p95)
+                     in rep.stats.transfer_summary().items()},
+    }
+    if autoscale:
+        out["scale_events"] = [
+            {"t": e.t, "action": e.action, "n_live": e.n_live}
+            for e in rep.scale_events]
+        out["mean_live_engines"] = rep.mean_live_engines
+    return out
+
+
+def run(quick: bool = True) -> Dict[str, Any]:
+    cfg = _cfg(quick)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    n_max = 2
+    trace = bursty_trace(_classes(quick),
+                         rates=[4.0, 60.0] if quick else [8.0, 150.0],
+                         dwell=[0.3, 0.2],
+                         horizon=1.5 if quick else 4.0, seed=2026)
+
+    static = _replay_pool(cfg, params, trace, n_max, n_slots=2,
+                          autoscale=False)
+    auto = _replay_pool(cfg, params, trace, n_max, n_slots=2,
+                        autoscale=True)
+
+    # the PR's hard invariants — a bench run that violates them fails CI
+    assert static["dropped"] == 0, "static pool dropped requests"
+    assert auto["dropped"] == 0, "autoscaled pool dropped requests"
+    assert auto["submitted"] == static["submitted"] == len(trace)
+    for cls_name, s in static["per_class_latency_ms"].items():
+        a = auto["per_class_latency_ms"][cls_name]
+        assert a["n"] == s["n"]
+
+    rows = []
+    for mode, r in (("static", static), ("autoscaled", auto)):
+        for cls_name, v in sorted(r["per_class_latency_ms"].items()):
+            rows.append([mode, cls_name, v["n"],
+                         f"{v['p50']:.1f}", f"{v['p95']:.1f}"])
+    bc.print_table("traffic replay: bursty trace, "
+                   f"{len(trace)} arrivals, max {n_max} decode engines",
+                   ["pool", "class", "n", "p50 ms", "p95 ms"], rows)
+    if auto.get("mean_live_engines") is not None:
+        print(f"  autoscaled mean live engines: "
+              f"{auto['mean_live_engines']:.2f} / {n_max}")
+
+    return {"trace": {"arrivals": len(trace), "horizon": trace.horizon,
+                      "rate": trace.rate(), "seed": 2026},
+            "n_max_decode_engines": n_max,
+            "static": static, "autoscaled": auto}

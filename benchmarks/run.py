@@ -14,7 +14,8 @@ import traceback
 
 from benchmarks import (bench_fig1_throughput, bench_fig5_curves,
                         bench_fig8_routing_ops, bench_table1_pruning,
-                        bench_table2_resources, common as bc)
+                        bench_table2_resources, bench_traffic,
+                        common as bc)
 
 BENCHES = {
     "fig1": ("Fig.1 throughput orig/pruned/optimized",
@@ -23,6 +24,8 @@ BENCHES = {
     "fig5": ("Fig.5 compression curves", bench_fig5_curves.run),
     "fig8": ("Fig.8 routing op latency", bench_fig8_routing_ops.run),
     "table2": ("Tables II/III resources", bench_table2_resources.run),
+    "traffic": ("Traffic replay: autoscaled vs static pool",
+                bench_traffic.run),
 }
 
 

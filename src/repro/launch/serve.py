@@ -21,6 +21,12 @@ through the unified ``repro.serving`` engine API
     # CapsNet: FastCapsPipeline -> DeployedCapsNet.serve(), FPS report
     PYTHONPATH=src python -m repro.launch.serve --arch capsnet-mnist \
         --requests 8 --batch 16 --routing pallas --scheduler slo --slo-ms 50
+
+    # Traffic replay: seeded bursty arrivals against an autoscaled
+    # disaggregated pool, with priority preemption + SLO admission
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --trace bursty --autoscale --priority \
+        --trace-rate 30 --trace-horizon 2 --decode-engines 3
 """
 
 from __future__ import annotations
@@ -32,8 +38,9 @@ import numpy as np
 
 from repro import configs as cfg_lib
 from repro.models import lm
-from repro.serving import (DisaggregatedEngine, FIFOScheduler, ImageRequest,
-                           InterleavingScheduler, Request, ServeEngine,
+from repro.serving import (DecodeEngine, DisaggregatedEngine, FIFOScheduler,
+                           ImageRequest, InterleavingScheduler,
+                           PriorityScheduler, Request, ServeEngine,
                            ShardedScheduler, SLOBatchScheduler,
                            disaggregated_lm_engine)
 
@@ -48,6 +55,8 @@ def _make_scheduler(args):
 
         n = jax.device_count()
         return ShardedScheduler(make_mesh((n,), ("data",)))
+    if args.priority:
+        return PriorityScheduler()
     return FIFOScheduler()
 
 
@@ -60,6 +69,91 @@ def _print_latency(stats) -> None:
     for stage, (n, p50, p95) in stats.transfer_summary().items():
         print(f"  transfer[{stage}]: n={n} p50={p50:.2f} ms "
               f"p95={p95:.2f} ms")
+
+
+def _print_scale_events(events) -> None:
+    if not events:
+        print("  autoscale: no scale events")
+        return
+    for e in events:
+        print(f"  autoscale[{e.action}]: t={e.t:.3f}s -> "
+              f"{e.n_live} live engine(s)")
+
+
+def serve_traffic(args) -> None:
+    """Replay a seeded arrival trace (``--trace poisson|bursty``) against
+    an LM engine — optionally a disaggregated pool with closed-loop
+    autoscaling (``--autoscale``), priority preemption (``--priority``)
+    and SLO admission control (``--admission``)."""
+    from repro.traffic import (AutoscaleController, SLOAdmission,
+                               bursty_trace, default_classes,
+                               default_factory, poisson_trace, replay)
+
+    cfg = cfg_lib.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg_lib.reduced(cfg)
+    if cfg.family == "audio":
+        raise SystemExit("encoder-only arch has no decode path")
+    params = lm.init(cfg, jax.random.key(0))
+
+    classes = default_classes()
+    if args.trace == "bursty":
+        trace = bursty_trace(classes, rates=[args.trace_rate / 6,
+                                             args.trace_rate],
+                             dwell=[0.4, 0.2], horizon=args.trace_horizon,
+                             seed=args.trace_seed)
+    else:
+        trace = poisson_trace(classes, rate=args.trace_rate,
+                              horizon=args.trace_horizon,
+                              seed=args.trace_seed)
+
+    controller = None
+    if args.autoscale:
+        def mk():
+            return DecodeEngine(cfg, params, n_slots=args.slots,
+                                max_len=args.max_len)
+        engine = disaggregated_lm_engine(
+            cfg, params, n_slots=args.slots, max_len=args.max_len,
+            n_decode=1,
+            decode_schedulers=[PriorityScheduler()] if args.priority
+            else None)
+        controller = AutoscaleController(mk, min_engines=1,
+                                         max_engines=args.decode_engines)
+    elif args.scheduler == "disagg":
+        engine = disaggregated_lm_engine(
+            cfg, params, n_slots=args.slots, max_len=args.max_len,
+            n_decode=args.decode_engines,
+            decode_schedulers=[PriorityScheduler()
+                               for _ in range(args.decode_engines)]
+            if args.priority else None)
+    else:
+        engine = ServeEngine(cfg, params, n_slots=args.slots,
+                             max_len=args.max_len,
+                             scheduler=_make_scheduler(args))
+    admission = SLOAdmission() if args.admission else None
+
+    rep = replay(engine, trace,
+                 factory=default_factory(trace, vocab=cfg.vocab // 2),
+                 controller=controller, admission=admission)
+
+    stats = rep.stats
+    print(f"[{cfg.arch_id}] trace={args.trace} seed={args.trace_seed}: "
+          f"{len(trace)} arrivals over {trace.horizon:.1f}s "
+          f"({trace.rate():.1f} req/s)")
+    print(f"  submitted={rep.submitted} completed={rep.completed} "
+          f"rejected={rep.rejected} dropped={rep.dropped} "
+          f"preempted={stats.preempted}")
+    assert rep.dropped == 0, "never-dropped invariant violated"
+    print(f"  served {stats.items} new tokens in {stats.wall_s:.2f}s "
+          f"({stats.throughput:.1f} tok/s, {stats.ms_per_tick:.1f} "
+          f"ms/tick)")
+    _print_latency(stats)
+    if controller is not None:
+        _print_scale_events(rep.scale_events)
+        if rep.mean_live_engines is not None:
+            print(f"  autoscale: mean live engines = "
+                  f"{rep.mean_live_engines:.2f} "
+                  f"(max {args.decode_engines})")
 
 
 def serve_lm(args) -> None:
@@ -197,6 +291,29 @@ def main():
                          "generated (poll(stream=True))")
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
+    # Traffic-replay options
+    ap.add_argument("--trace", default="none",
+                    choices=["none", "poisson", "bursty"],
+                    help="replay a seeded arrival trace instead of a "
+                         "fixed request batch (LM only)")
+    ap.add_argument("--trace-rate", type=float, default=20.0,
+                    help="mean arrival rate (req/s); bursty uses it as "
+                         "the burst-state rate")
+    ap.add_argument("--trace-horizon", type=float, default=2.0,
+                    help="trace length in seconds")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="trace RNG seed (same seed -> same arrivals "
+                         "and payloads)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="traffic: start one decode engine and let the "
+                         "depth-signal controller grow/drain the pool "
+                         "up to --decode-engines")
+    ap.add_argument("--priority", action="store_true",
+                    help="PriorityScheduler: urgent classes admit first "
+                         "and may preempt (lossless) resident work")
+    ap.add_argument("--admission", action="store_true",
+                    help="traffic: SLO admission control (shed arrivals "
+                         "whose class SLO is already unattainable)")
     # CapsNet options
     ap.add_argument("--batch", type=int, default=16,
                     help="CapsuleEngine capacity (max frames per tick)")
@@ -207,6 +324,8 @@ def main():
     args = ap.parse_args()
     if args.arch.startswith("capsnet"):
         serve_capsnet(args)
+    elif args.trace != "none":
+        serve_traffic(args)
     else:
         serve_lm(args)
 

@@ -149,14 +149,14 @@ def param_structs(cfg: LMConfig) -> Any:
 
 
 def _apply_self_block(p, cfg: LMConfig, x, positions, kv_cache, cache_index,
-                      rules):
+                      rules, token_mask=None):
     h = common.apply_norm(p["ln1"], x, cfg)
     a, new_kv = attn_lib.self_attention(p["attn"], cfg, h, positions,
                                         kv_cache, cache_index)
     x = x + a
     h = common.apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None and "router" in p["ffn"]:
-        y, aux = moe_lib.moe_apply(p["ffn"], cfg, h)
+        y, aux = moe_lib.moe_apply(p["ffn"], cfg, h, token_mask=token_mask)
     else:
         y, aux = mlp_lib.mlp_apply(p["ffn"], cfg, h), 0.0
     x = x + y
@@ -256,10 +256,13 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
                                      (x.shape[0], s))
 
     if fam in ("dense", "moe", "audio"):
+        token_mask = batch.get("token_mask")   # ragged moe exactness
+
         def body(x, p, c):
             kv = None if caches is None else c
             return _apply_self_block(p["block"], cfg, x, positions, kv,
-                                     cache_index, rules)
+                                     cache_index, rules,
+                                     token_mask=token_mask)
         kv = caches["kv"] if caches is not None else None
         x, new_kv, aux = _scan_units(cfg, x, params["units"], kv, body)
         new_caches = {"kv": new_kv} if caches is not None else None
@@ -310,7 +313,9 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
                 kv = None if caches is None else jax.tree.map(
                     lambda t: t[i], c["kv"])
                 x, kv_n, a = _apply_self_block(pi, cfg, x, positions, kv,
-                                               cache_index, rules)
+                                               cache_index, rules,
+                                               token_mask=batch.get(
+                                                   "token_mask"))
                 aux += a
                 new_kv.append(kv_n)
             cross_c = None if caches is None else c["cross"]
@@ -460,11 +465,14 @@ def ragged_prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
     ``batch``: ``tokens`` (B, S) left-aligned with a zero pad *suffix*,
     ``lengths`` (B,) real prompt lengths.  Positions are 0..S-1 per slot
     and the causal mask keeps every real token from attending the pad
-    suffix, so dense/vlm families are exact; moe is exact up to GShard
-    expert-capacity effects (capacity derives from the padded length S).
-    Recurrent families (ssm/hybrid) fold the pad suffix into their state —
-    the same approximation the uniform-length engine made; keep their
-    prompts uniform when exactness matters.
+    suffix, so dense/vlm families are exact; moe is exact too — a
+    ``token_mask`` built from ``lengths`` keeps pad tokens out of expert
+    routing and recomputes each row's effective GShard capacity from its
+    *real* token count (see ``repro.models.moe``), so ragged moe serving
+    matches per-request ``generate()`` bit for bit.  Recurrent families
+    (ssm/hybrid) fold the pad suffix into their state — the same
+    approximation the uniform-length engine made; keep their prompts
+    uniform when exactness matters.
 
     Returns per-slot logits at each prompt's final *real* token and the
     updated caches.  Cache rows at indices >= length hold pad garbage; the
@@ -476,6 +484,9 @@ def ragged_prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
                                  (b, s))
     fwd_batch = dict(batch, positions=positions)
     fwd_batch.pop("lengths")
+    if cfg.moe is not None:           # ragged moe exactness (capacity
+        fwd_batch["token_mask"] = (   # from real, not padded, lengths)
+            positions < lengths.astype(jnp.int32)[:, None])
     x, new_caches, _ = forward(params, cfg, fwd_batch, caches)
     idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, s - 1)
     last = x[jnp.arange(b), idx]                    # (B, d)

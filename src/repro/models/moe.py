@@ -17,12 +17,21 @@ Capacity is per-row (GShard-style per-group capacity): C = ceil(S·k/E · cf),
 rounded up to a multiple of 8 for TPU lane alignment.  Overflow tokens are
 dropped (standard capacity-factor semantics; the aux load-balance loss keeps
 drops rare).
+
+Ragged batches: ``moe_apply`` takes an optional ``token_mask`` (B, S) marking
+real tokens.  The capacity *buffer* stays sized by the padded S (shape
+stability under jit), but masked tokens neither route nor consume capacity,
+and each row's *effective* capacity is recomputed from its real token count
+with exactly the static formula — so a prompt prefilled inside a right-padded
+ragged batch sees the same expert-capacity drops it would see prefilled
+alone, making ragged moe serving exact w.r.t. per-request ``generate()``.
+The capacity factor is quantized to a /1024 rational so the static (python
+``math``) and dynamic (jnp integer) capacity computations cannot drift.
 """
 
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +40,25 @@ from repro.models.common import LMConfig, ParamDef, fanin_init, activation
 from repro.models import mlp as mlp_lib
 
 
+def _cf_q(moe) -> int:
+    """``capacity_factor`` as a /1024 rational numerator (>= 1)."""
+    return max(1, int(round(moe.capacity_factor * 1024)))
+
+
 def _capacity(seq: int, moe) -> int:
-    c = math.ceil(seq * moe.top_k * moe.capacity_factor / moe.n_experts)
+    den = 1024 * moe.n_experts
+    c = (seq * moe.top_k * _cf_q(moe) + den - 1) // den
     return max(8, ((c + 7) // 8) * 8)
+
+
+def _capacity_dyn(n_real: jax.Array, moe) -> jax.Array:
+    """Per-row effective capacity from *real* token counts — the same
+    integer formula as :func:`_capacity`, in traced arithmetic, so a
+    row padded to S gets exactly the capacity its real length would
+    have earned in its own batch."""
+    den = 1024 * moe.n_experts
+    c = (n_real.astype(jnp.int32) * moe.top_k * _cf_q(moe) + den - 1) // den
+    return jnp.maximum(8, ((c + 7) // 8) * 8)
 
 
 def moe_defs(cfg: LMConfig) -> Dict[str, Any]:
@@ -63,15 +88,24 @@ def _route_row(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
 
 
 def _dispatch_row(x: jax.Array, ids: jax.Array, w: jax.Array,
-                  n_experts: int, capacity: int
+                  n_experts: int, capacity: int,
+                  mask: Optional[jax.Array] = None,
+                  cap_row: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One batch row: gather tokens into (E, C, d) capacity buffers.
 
-    x: (S, d); ids/w: (S, k).  Returns (dispatched (E*C, d), combine scatter
-    indices, sorted token ids, sorted weights·keep).
+    x: (S, d); ids/w: (S, k).  ``mask`` (S,) marks real tokens — masked
+    tokens take the sentinel expert id E (stable argsort puts them last,
+    bincount and the scatter drop them) so they neither route nor steal
+    capacity ranks.  ``cap_row`` is this row's effective capacity
+    (<= the ``capacity`` buffer size); ``None`` means the full buffer.
+    Returns (dispatched (E*C, d), combine scatter indices, sorted token
+    ids, sorted weights·keep).
     """
     s, k = ids.shape
     flat_e = ids.reshape(-1)                      # (S*k,)
+    if mask is not None:
+        flat_e = jnp.where(jnp.repeat(mask, k), flat_e, n_experts)
     flat_t = jnp.repeat(jnp.arange(s), k)         # token index per slot
     flat_w = w.reshape(-1)
 
@@ -80,16 +114,19 @@ def _dispatch_row(x: jax.Array, ids: jax.Array, w: jax.Array,
     t_sorted = flat_t[order]
     w_sorted = flat_w[order]
 
-    counts = jnp.bincount(flat_e, length=n_experts)          # (E,)
+    counts = jnp.bincount(flat_e, length=n_experts)  # sentinel E drops
     starts = jnp.cumsum(counts) - counts                     # exclusive
-    rank = jnp.arange(s * k) - starts[e_sorted]              # pos within expert
-    keep = rank < capacity
-    dest = e_sorted * capacity + jnp.where(keep, rank, 0)    # (S*k,)
+    rank = jnp.arange(s * k) - starts[jnp.minimum(e_sorted, n_experts - 1)]
+    eff = capacity if cap_row is None else cap_row
+    keep = (rank < eff) & (e_sorted < n_experts)
+    # out-of-bounds scatter destinations drop; !keep slots also carry a
+    # zeroed src, so the buffer stays exact either way
+    dest = jnp.where(keep, e_sorted * capacity + rank,
+                     n_experts * capacity)                   # (S*k,)
 
     zeros = jnp.zeros((n_experts * capacity, x.shape[-1]), x.dtype)
     src = x[t_sorted] * keep[:, None].astype(x.dtype)
-    dispatched = zeros.at[dest].add(src)  # add: dropped slots collide at rank0,
-    # but their contribution is zeroed by `keep` so the buffer stays exact.
+    dispatched = zeros.at[dest].add(src, mode="drop")
     return dispatched, dest, t_sorted, jnp.where(keep, w_sorted, 0.0)
 
 
@@ -112,7 +149,9 @@ def _rank_within_expert(ids: jax.Array, n_experts: int) -> jax.Array:
     return rank.reshape(s, k)
 
 
-def _moe_onehot(params, cfg: LMConfig, x, logits, cap: int):
+def _moe_onehot(params, cfg: LMConfig, x, logits, cap: int,
+                token_mask: Optional[jax.Array] = None,
+                cap_rows: Optional[jax.Array] = None):
     """GShard-style dispatch/combine as two-one-hot einsums with explicit
     sharding constraints: the dispatch tensor and expert buffers are
     sharded (batch->data, expert->model) so the expert matmuls are local
@@ -127,8 +166,15 @@ def _moe_onehot(params, cfg: LMConfig, x, logits, cap: int):
 
     vals, ids = jax.lax.top_k(logits, m.top_k)               # (B,S,k)
     w = jax.nn.softmax(vals, axis=-1).astype(cd)
+    if token_mask is not None:
+        # sentinel expert id E: one_hot gives an all-zero row, so masked
+        # tokens neither dispatch nor advance any expert's rank counter
+        ids = jnp.where(token_mask[:, :, None], ids, m.n_experts)
     rank = jax.vmap(lambda i: _rank_within_expert(i, m.n_experts))(ids)
-    keep = (rank < cap)
+    eff = cap if cap_rows is None else cap_rows[:, None, None]
+    keep = (rank < eff)
+    if token_mask is not None:
+        keep = keep & token_mask[:, :, None]
     oh_e = jax.nn.one_hot(ids, m.n_experts, dtype=cd)        # (B,S,k,E)
     oh_c = jax.nn.one_hot(jnp.where(keep, rank, cap), cap,
                           dtype=cd)                          # (B,S,k,C)
@@ -155,16 +201,19 @@ def _moe_onehot(params, cfg: LMConfig, x, logits, cap: int):
     return y
 
 
-def _moe_scatter(params, cfg: LMConfig, x, logits, cap: int):
+def _moe_scatter(params, cfg: LMConfig, x, logits, cap: int,
+                 token_mask: Optional[jax.Array] = None,
+                 cap_rows: Optional[jax.Array] = None):
     """Baseline per-row sort/scatter dispatch (vmap over batch rows)."""
     m = cfg.moe
     cd = cfg.cdtype()
     b, s, d = x.shape
 
-    def one_row(x_row, logit_row):
+    def one_row(x_row, logit_row, mask_row=None, cap_row=None):
         w, ids = _route_row(logit_row, m.top_k)
         dispatched, dest, t_sorted, w_keep = _dispatch_row(
-            x_row.astype(cd), ids, w.astype(cd), m.n_experts, cap)
+            x_row.astype(cd), ids, w.astype(cd), m.n_experts, cap,
+            mask=mask_row, cap_row=cap_row)
         disp = dispatched.reshape(m.n_experts, cap, d)          # (E, C, d)
         act = activation(cfg.act)
         h_g = jnp.einsum("ecd,edf->ecf", disp, params["wg"].astype(cd))
@@ -175,12 +224,21 @@ def _moe_scatter(params, cfg: LMConfig, x, logits, cap: int):
                              t_sorted, w_keep, s)
         return y_row
 
-    return jax.vmap(one_row)(x, logits)
+    if token_mask is None:
+        return jax.vmap(one_row)(x, logits)
+    return jax.vmap(one_row)(x, logits, token_mask, cap_rows)
 
 
-def moe_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array
+def moe_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array,
+              token_mask: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (y, aux_loss)."""
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``token_mask`` (B, S) marks real tokens in a right-padded ragged
+    batch: masked tokens neither route, consume expert capacity, nor
+    enter the aux loss, and each row's effective capacity derives from
+    its *real* token count (see module docstring).  ``None`` (the
+    uniform-batch path) keeps the padded-length behaviour."""
     m = cfg.moe
     b, s, d = x.shape
 
@@ -190,23 +248,39 @@ def moe_apply(params: Dict[str, Any], cfg: LMConfig, x: jax.Array
     if flattened:
         x = x.reshape(1, b, d)
         b, s = 1, b
+        if token_mask is not None:
+            token_mask = token_mask.reshape(1, s)
 
     cap = _capacity(s, m)
+    cap_rows = None
+    if token_mask is not None:
+        token_mask = token_mask.astype(bool)
+        # monotone formula: real count <= S means row cap <= buffer cap,
+        # so the minimum is a safety net, not a behaviour change
+        cap_rows = jnp.minimum(
+            _capacity_dyn(jnp.sum(token_mask, axis=1), m), cap)
     logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
     if "router_b" in params:
         logits = logits + params["router_b"].astype(jnp.float32)
 
     if m.dispatch == "onehot":
-        y = _moe_onehot(params, cfg, x, logits, cap)
+        y = _moe_onehot(params, cfg, x, logits, cap, token_mask, cap_rows)
     else:
-        y = _moe_scatter(params, cfg, x, logits, cap)
+        y = _moe_scatter(params, cfg, x, logits, cap, token_mask, cap_rows)
 
     # Switch-style load-balance auxiliary loss: E * sum(f_e * p_e)
     probs = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
     _, top_ids = jax.lax.top_k(logits, m.top_k)
-    frac = jnp.mean(
-        jax.nn.one_hot(top_ids, m.n_experts, dtype=jnp.float32), axis=(0, 1, 2))
-    pmean = jnp.mean(probs, axis=(0, 1))
+    oh_top = jax.nn.one_hot(top_ids, m.n_experts, dtype=jnp.float32)
+    if token_mask is None:
+        frac = jnp.mean(oh_top, axis=(0, 1, 2))
+        pmean = jnp.mean(probs, axis=(0, 1))
+    else:                             # means over real tokens only
+        mw = token_mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mw), 1.0)
+        frac = jnp.sum(oh_top * mw[:, :, None, None],
+                       axis=(0, 1, 2)) / (denom * m.top_k)
+        pmean = jnp.sum(probs * mw[:, :, None], axis=(0, 1)) / denom
     aux = m.n_experts * jnp.sum(frac * pmean)
 
     if m.n_shared:

@@ -26,6 +26,6 @@ from repro.serving.disagg import (CacheHandoff, DecodeEngine,  # noqa: F401
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401
 from repro.serving.schedulers import (DisaggScheduler,  # noqa: F401
                                       FIFOScheduler, InterleavingScheduler,
-                                      Scheduler, ShardedScheduler,
-                                      SLOBatchScheduler, TickRecord,
-                                      pow2_bucket)
+                                      PriorityScheduler, Scheduler,
+                                      ShardedScheduler, SLOBatchScheduler,
+                                      TickRecord, pow2_bucket)

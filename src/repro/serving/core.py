@@ -198,6 +198,7 @@ class EngineStats:
     ticks: int = 0                    # engine ticks that did work
     wall_s: float = 0.0               # time spent in admit+step
     completed: int = 0                # requests fully served
+    preempted: int = 0                # resident tasks evicted + requeued
     latency: Dict[str, LatencyHistogram] = dataclasses.field(
         default_factory=dict)         # request class -> latency histogram
     depth: Dict[str, DepthHistogram] = dataclasses.field(
@@ -243,6 +244,7 @@ class SlotTask:
 
     payload: Any                      # workload-specific immutable input
     rid: int = -1                     # owning request id (set at submit)
+    priority: int = 0                 # request priority (0 = most urgent)
     state: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
@@ -374,6 +376,17 @@ class EngineCore:
     def _warmup(self) -> None:
         pass
 
+    def _evict(self, slot: int, task: SlotTask) -> None:
+        """Save ``task``'s resumable state before it is requeued (called
+        with the slot already freed, tick lock held, state lock
+        released).  Preemption must be *lossless*: ``_admit`` of a
+        requeued task must continue exactly where it stopped, so
+        workloads with carried state override this to capture it (LM:
+        cache rows / pending token / position — see
+        ``ServeEngine._evict``).  The default saves nothing, which is
+        correct only for workloads whose ``_admit`` is already
+        resume-aware (e.g. a countdown kept in ``task.state``)."""
+
     def _pretune(self) -> None:
         """Measured kernel autotuning with concrete inputs (workloads
         override); runs before the first trace so trace-time registry
@@ -451,11 +464,13 @@ class EngineCore:
         any engine state changes.
         """
         tasks, state = self._expand(request)
+        prio = int(getattr(request, "priority", 0))
         with self._lock:
             rid, self._next_rid = allocate_rid(request, self._requests,
                                                self._next_rid)
             for t in tasks:
                 t.rid = rid
+                t.priority = prio
             entry = _RequestEntry(request=request, tasks=tasks, state=state,
                                   left=len(tasks), t0=self._clock(),
                                   cls=self._request_class(request),
@@ -508,8 +523,35 @@ class EngineCore:
         ``"handoff"`` phase of a disaggregated front-end) — so no
         scheduler can stall the engine.  Each tick records the queue
         depth it observed under its phase in ``EngineStats.depth``.
+
+        Before admission, ``scheduler.preempt()`` may evict residents in
+        favour of higher-priority queued work: the slot frees, the
+        workload's ``_evict`` hook saves the task's resumable state, and
+        the task requeues at the front of the queue — never dropped, and
+        its request entry (latency clock, stream ``seq``) is untouched.
+        Admission then pops the queue at ``scheduler.select()`` instead
+        of strictly left (default 0 keeps FIFO).
         """
         with self._tick_lock:
+            with self._lock:
+                queued = list(self._queue)
+                residents = [(s, t) for s, t in enumerate(self._slots)
+                             if t is not None]
+                evicted: List[Tuple[int, SlotTask]] = []
+                if queued and residents:
+                    for s in self.scheduler.preempt(queued, residents):
+                        s = int(s)
+                        if 0 <= s < self.capacity \
+                                and self._slots[s] is not None:
+                            evicted.append((s, self._slots[s]))
+                            self._slots[s] = None
+            if evicted:
+                for s, task in evicted:
+                    self._evict(s, task)   # hooks run with lock released
+                with self._lock:
+                    for _, task in reversed(evicted):
+                        self._queue.appendleft(task)
+                    self._stats.preempted += len(evicted)
             with self._lock:
                 n_active = sum(s is not None for s in self._slots)
                 n_queued = len(self._queue)
@@ -531,7 +573,11 @@ class EngineCore:
                         if n_active >= plan or not self._queue:
                             break
                         if self._slots[s] is None:
-                            task = self._queue.popleft()
+                            i = int(self.scheduler.select(self._queue))
+                            if not 0 <= i < len(self._queue):
+                                i = 0
+                            task = self._queue[i]
+                            del self._queue[i]
                             self._slots[s] = task
                             new.append((s, task))
                             n_active += 1

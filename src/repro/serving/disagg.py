@@ -64,8 +64,7 @@ from repro.serving.core import (DepthHistogram, EngineCore, EngineStats,
                                 LatencyHistogram, SlotTask, StreamEvent,
                                 allocate_rid)
 from repro.serving.engine import ServeEngine
-from repro.serving.schedulers import (DisaggScheduler, Scheduler,
-                                      ShardedScheduler)
+from repro.serving.schedulers import DisaggScheduler, Scheduler
 
 
 @dataclasses.dataclass
@@ -114,6 +113,13 @@ class HandoffRequest:
         """Sampling temperature travels with the original request."""
         return float(getattr(self.handoff.request, "temperature", 0.0))
 
+    @property
+    def priority(self) -> int:
+        """Priority class travels with the original request, so a
+        :class:`repro.serving.PriorityScheduler` on a decode engine can
+        preempt across the handoff boundary."""
+        return int(getattr(self.handoff.request, "priority", 0))
+
 
 class PrefillEngine(ServeEngine):
     """Admission/prefill half of a disaggregated pair.
@@ -133,11 +139,6 @@ class PrefillEngine(ServeEngine):
     fits: admission size/shape delegate as usual, and a
     :class:`repro.serving.ShardedScheduler` shards the prefill itself.
     """
-
-    def __init__(self, *args, **kwargs):
-        super().__init__(*args, **kwargs)
-        self._gather = jax.jit(
-            lambda idx, c: lm.gather_cache_rows(self.cfg, idx, c))
 
     def _wants_stream(self, request: Any) -> bool:
         return False                  # streaming starts on the decode side
@@ -196,9 +197,6 @@ class DecodeEngine(ServeEngine):
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
-        self._inject = jax.jit(
-            lambda rows, idx, c: lm.scatter_cache_rows(self.cfg, idx,
-                                                       rows, c))
         self._expected_rows = lm.make_caches(self.cfg, 1, self.max_len,
                                              as_structs=True)
 
@@ -281,14 +279,6 @@ class DecodeEngine(ServeEngine):
         return finished, items        # injected tokens were counted by
         #                               the prefill engine's stats
 
-    def _place_rows(self, rows: Any) -> Any:
-        if isinstance(self.scheduler, ShardedScheduler):
-            from repro.parallel.sharding import replicated_shardings
-
-            return jax.device_put(
-                rows, replicated_shardings(rows, self.scheduler.mesh))
-        return rows
-
     def _request_class(self, request: Any) -> str:
         if isinstance(request, HandoffRequest):
             return request.handoff.cls
@@ -331,6 +321,18 @@ class DisaggregatedEngine:
     propagates instead, since it means a mis-built pair.  When every
     decode engine is dead the front-end raises rather than spin.
 
+    **Elastic pool** — the decode side may grow and shrink while
+    serving: ``add_decode()`` joins a fresh engine (it starts receiving
+    handoffs on the next transfer), ``retire_decode()`` begins *draining*
+    one (no new handoffs route to it; resident requests finish
+    normally — the same property that makes failover safe makes retiring
+    safe), and ``reap_retired()`` removes engines that finished
+    draining.  Retired engines' work counters stay in the aggregated
+    stats, and no request is ever dropped by a scale-down:
+    ``retire_decode`` refuses to drain the last live engine.  The
+    :class:`repro.traffic.AutoscaleController` closes the loop by
+    driving these on the ``depth_summary()`` signal.
+
     **Stats** — aggregated :class:`repro.serving.EngineStats`: items /
     ticks / wall-clock summed over the member engines, completion counts
     and end-to-end latency histograms owned by the front-end, plus
@@ -361,7 +363,11 @@ class DisaggregatedEngine:
         self._events: Deque[StreamEvent] = deque()
         self._stats = EngineStats()
         self._next_rid = 0
-        self._dead: Set[int] = set()  # decode engines whose submit raised
+        # engine-identity sets/lists (indices would go stale as the
+        # elastic pool grows and shrinks)
+        self._dead: Set[EngineCore] = set()      # submit raised mid-handoff
+        self._draining: Set[EngineCore] = set()  # retiring: drain, no new work
+        self._retired: List[EngineCore] = []     # removed; stats retained
         self._rr = 0                  # round-robin transfer cursor
         self._lock = threading.Lock()
         self._tick_lock = threading.Lock()
@@ -511,11 +517,76 @@ class DisaggregatedEngine:
         with self._lock:
             return n + len(self._handoffs)
 
+    @property
+    def n_live_decodes(self) -> int:
+        """Decode engines currently accepting new handoffs (excludes
+        dead and draining engines) — the autoscaler's pool-size view."""
+        return len([e for e in self.decodes
+                    if e not in self._dead and e not in self._draining])
+
+    @property
+    def handoff_backlog(self) -> int:
+        """Handoffs parked between prefill and decode right now."""
+        with self._lock:
+            return len(self._handoffs)
+
+    # -- elastic decode pool -----------------------------------------------
+
+    def add_decode(self, engine: EngineCore) -> None:
+        """Join one decode engine to the pool (thread-safe; takes effect
+        on the next handoff transfer).  The caller warms it up."""
+        with self._tick_lock:
+            self.decodes.append(engine)
+            self.capacity += engine.capacity
+
+    def retire_decode(self, engine: Optional[EngineCore] = None
+                      ) -> Optional[EngineCore]:
+        """Begin draining one decode engine: it receives no new handoffs,
+        resident requests finish normally, and once idle
+        ``reap_retired()`` removes it.  ``engine=None`` picks the
+        newest live engine.  Returns the draining engine, or ``None``
+        when there is no candidate — the last live engine is never
+        drained, so a scale-down can never strand traffic."""
+        with self._tick_lock:
+            live = [e for e in self.decodes
+                    if e not in self._dead and e not in self._draining]
+            if engine is None:
+                if len(live) <= 1:
+                    return None
+                engine = live[-1]
+            elif engine not in live or len(live) <= 1:
+                return None
+            self._draining.add(engine)
+            return engine
+
+    def reap_retired(self) -> List[EngineCore]:
+        """Remove draining engines that finished their resident work.
+        Their cumulative work counters stay in ``stats()`` (the
+        aggregate includes retired engines), so scale-downs never make
+        the monotone stats run backwards."""
+        with self._tick_lock:
+            done = [e for e in self.decodes
+                    if e in self._draining and e.n_pending == 0]
+            for e in done:
+                # drain parked results first: a completion left inside a
+                # removed engine would be a silently dropped request
+                for c in e.poll():
+                    self._finish(c)
+                evs = e.poll(stream=True)
+                if evs:
+                    with self._lock:
+                        self._events.extend(evs)
+                self._draining.discard(e)
+                self.decodes.remove(e)
+                self.capacity -= e.capacity
+                self._retired.append(e)
+            return done
+
     # -- internals ---------------------------------------------------------
 
     def _members(self) -> List[EngineCore]:
         return (([self.prefill] if self.prefill is not None else [])
-                + self.decodes)
+                + self.decodes + self._retired)
 
     def _collect_prefill(self) -> None:
         if self.prefill is None:
@@ -564,7 +635,7 @@ class DisaggregatedEngine:
             else:
                 with self._lock:       # requeued, never dropped
                     self._handoffs.appendleft(h)
-                if len(self._dead) >= len(self.decodes):
+                if not [e for e in self.decodes if e not in self._dead]:
                     raise RuntimeError(
                         f"all {len(self.decodes)} decode engines failed; "
                         f"{len(self._handoffs)} handoff(s) requeued and "
@@ -572,12 +643,16 @@ class DisaggregatedEngine:
                 return moved
 
     def _transfer_one(self, h: CacheHandoff) -> bool:
-        n = len(self.decodes)
+        # draining engines take no new work — unless every live engine is
+        # draining (a mis-driven controller), in which case serving beats
+        # stranding the handoff
+        cands = [e for e in self.decodes
+                 if e not in self._dead and e not in self._draining]
+        if not cands:
+            cands = [e for e in self.decodes if e not in self._dead]
+        n = len(cands)
         for k in range(n):
-            i = (self._rr + k) % n
-            if i in self._dead:
-                continue
-            eng = self.decodes[i]
+            eng = cands[(self._rr + k) % n]
             try:
                 if h.stateless:
                     eng.submit(h.request)
@@ -592,9 +667,9 @@ class DisaggregatedEngine:
                     self._handoffs.appendleft(h)
                 raise
             except Exception:         # engine died mid-handoff: fail over
-                self._dead.add(i)
+                self._dead.add(eng)
                 continue
-            self._rr = (i + 1) % n
+            self._rr = (self._rr + k + 1) % max(n, 1)
             with self._lock:
                 self._stats.transfer.setdefault(
                     "handoff", LatencyHistogram()).record(

@@ -65,6 +65,7 @@ class Request:
     temperature: float = 0.0      # 0 -> greedy
     rid: Optional[int] = None     # None -> engine-assigned
     stream: bool = False          # emit per-token StreamEvents
+    priority: int = 0             # 0 = most urgent (PriorityScheduler)
 
 
 @dataclasses.dataclass
@@ -107,6 +108,12 @@ class ServeEngine(EngineCore):
                 p, cfg, {"tokens": t, "pos": pos}, c))
         self._prefill = jax.jit(
             lambda p, t, ln, idx, c: self._prefill_scatter(p, t, ln, idx, c))
+        # slot-axis cache row movement (shared by preemption/resume here
+        # and by the disaggregated engines, which subclass this one)
+        self._gather = jax.jit(
+            lambda idx, c: lm.gather_cache_rows(cfg, idx, c))
+        self._inject = jax.jit(
+            lambda rows, idx, c: lm.scatter_cache_rows(cfg, idx, rows, c))
         super().__init__(capacity=n_slots, scheduler=scheduler, clock=clock,
                          kernel_tune=kernel_tune)
         self._caches = lm.make_caches(cfg, n_slots, max_len)
@@ -237,19 +244,43 @@ class ServeEngine(EngineCore):
         This closes the documented ragged-prefill gap (recurrent serving
         is exact, regression-tested) at the cost of one compiled prefill
         shape per distinct prompt length seen.
+
+        Tasks previously preempted (``_evict`` saved their cache rows)
+        take the *resume* path instead of prefilling again: one batched
+        scatter re-injects their rows at the new slots and decode
+        continues from the saved token/position — the finished sequence
+        is exactly what an un-preempted run produces.
         """
+        resume = [(s, t) for s, t in new if "resume_rows" in t.state]
+        new = [(s, t) for s, t in new if "resume_rows" not in t.state]
+        pre_finished: List[int] = []
+        if resume:
+            rows = lm.concat_cache_rows(
+                self.cfg, [t.state.pop("resume_rows") for _, t in resume])
+            self._caches = self._inject(
+                self._place_rows(rows),
+                self.scheduler.place(
+                    np.asarray([s for s, _ in resume], np.int32)),
+                self._caches)
+            for s, task in resume:
+                self._tok[s] = task.state.pop("resume_tok")
+                self._pos[s] = task.state.pop("resume_pos")
+                if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
+                    pre_finished.append(s)
+        if not new:
+            return pre_finished, 0
         if self._recurrent:
             groups: Dict[int, List[Tuple[int, SlotTask]]] = {}
             for s, task in new:
                 groups.setdefault(len(task.payload.prompt),
                                   []).append((s, task))
-            finished: List[int] = []
+            finished: List[int] = list(pre_finished)
             for plen in sorted(groups):
                 finished += self._prefill_group(groups[plen], plen)
             return finished, len(new)
         plen = pow2_bucket(
             max(len(t.payload.prompt) for _, t in new), self.max_len)
-        return self._prefill_group(new, plen), len(new)
+        return pre_finished + self._prefill_group(new, plen), len(new)
 
     def _prefill_group(self, new: List[Tuple[int, SlotTask]], plen: int
                        ) -> List[int]:
@@ -284,6 +315,29 @@ class ServeEngine(EngineCore):
 
     def _batch_for(self, n_active: int) -> int:
         return self.capacity            # decode shape pinned by the caches
+
+    def _place_rows(self, rows: Any) -> Any:
+        """Cache rows about to scatter into (possibly sharded) slot
+        caches: replicate onto the scheduler's mesh so the jitted
+        scatter stays device-local per slot shard."""
+        if isinstance(self.scheduler, ShardedScheduler):
+            from repro.parallel.sharding import replicated_shardings
+
+            return jax.device_put(
+                rows, replicated_shardings(rows, self.scheduler.mesh))
+        return rows
+
+    def _evict(self, slot: int, task: SlotTask) -> None:
+        """Lossless preemption: gather the slot's cache rows (the same
+        slot-axis gather a :class:`repro.serving.CacheHandoff` uses) plus
+        the pending token/position into ``task.state``; the generated
+        tokens already live there (``state["out"]``).  ``_admit`` later
+        re-injects the rows at whatever slot the task lands in and the
+        decode continues exactly where it stopped."""
+        task.state["resume_rows"] = jax.block_until_ready(
+            self._gather(jnp.asarray([slot], jnp.int32), self._caches))
+        task.state["resume_tok"] = int(self._tok[slot])
+        task.state["resume_pos"] = int(self._pos[slot])
 
     def _maybe_tune_prefill(self, nb: int, plen: int) -> None:
         """Measured flash-attention tuning for one exact prefill bucket

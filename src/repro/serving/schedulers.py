@@ -38,6 +38,12 @@ Variants:
     fourth tick kind: ``"handoff"`` (move finished prefills to a decode
     engine).  Plain engines have no handoff stage and coerce the answer
     to ``"mixed"``, so the scheduler is safe to bind anywhere.
+  * :class:`PriorityScheduler` — priority classes with preemption: queued
+    tasks admit in (priority, arrival) order, and when a higher-priority
+    task is queued with no free slot the scheduler evicts the
+    lowest-priority resident (the engine saves its resumable state and
+    requeues it — lossless, see ``EngineCore._evict``).  Admission
+    size/shape/placement delegate to an inner scheduler.
 """
 
 from __future__ import annotations
@@ -111,6 +117,24 @@ class Scheduler:
         """Device placement of a tick's batch array (default: leave it to
         jit's host->default-device transfer)."""
         return batch
+
+    def select(self, queue: Any) -> int:
+        """Index into the engine's task queue of the next task to admit.
+        The default 0 keeps admission strictly FIFO; a priority policy
+        may reorder *across* classes but must stay FIFO within a class
+        (the conformance suite pins starvation-freedom)."""
+        return 0
+
+    def preempt(self, queued: Any, residents: Any) -> tuple:
+        """Slot ids to evict before this tick's admission.
+
+        ``queued`` is the engine's task backlog (:class:`SlotTask`-like
+        objects carrying ``priority``), ``residents`` the occupied
+        ``(slot, task)`` pairs.  Evicted tasks are handed to the
+        workload's ``_evict`` hook (which saves resumable state) and
+        requeued at the *front* of the queue — never dropped.  Default:
+        no preemption."""
+        return ()
 
     def observe(self, record: TickRecord) -> None:
         pass
@@ -290,6 +314,96 @@ class DisaggScheduler(Scheduler):
         if n_active > 0:
             return "decode"
         return "mixed"
+
+
+class PriorityScheduler(Scheduler):
+    """Priority classes with lossless preemption.
+
+    Requests carry an integer ``priority`` (0 = most urgent — the engine
+    stamps it onto every :class:`~repro.serving.core.SlotTask` at
+    submit).  Two policies compose here:
+
+      * **admission order** — ``select()`` picks the queued task with the
+        smallest ``(priority, arrival)`` key, so higher classes jump the
+        queue but admission stays FIFO *within* a class (starvation-free
+        per class; a sustained stream of higher-priority work may starve
+        a lower class by design — that is what the priority contract
+        means, and what SLO admission control upstream is for).
+      * **preemption** — when a queued task outranks a resident and no
+        slot is free, ``preempt()`` evicts the *lowest*-priority resident
+        (at most ``max_evictions_per_tick`` per tick).  Eviction is
+        lossless: the engine's ``_evict`` hook saves the resident's
+        resumable state (LM: cache rows + generated tokens, via the same
+        ``gather_cache_rows`` machinery cache handoffs use) and the task
+        requeues, resuming later exactly where it stopped.
+
+    Ties never preempt: a resident is only evicted for a *strictly*
+    more urgent queued task, so equal-priority traffic cannot ping-pong.
+    Admission size / shape / placement / phase delegate to ``inner``
+    (FIFO unless given), so SLO batching or interleaving compose below.
+    """
+
+    def __init__(self, inner: Optional[Scheduler] = None,
+                 max_evictions_per_tick: int = 1):
+        if max_evictions_per_tick < 0:
+            raise ValueError("max_evictions_per_tick must be >= 0")
+        self.inner = inner or FIFOScheduler()
+        self.max_evictions_per_tick = int(max_evictions_per_tick)
+
+    def bind(self, core: Any) -> None:
+        super().bind(core)
+        self.inner.bind(core)
+
+    def plan(self, n_queued: int, n_active: int) -> int:
+        return self.inner.plan(n_queued, n_active)
+
+    def phase(self, n_queued: int, n_active: int) -> str:
+        return self.inner.phase(n_queued, n_active)
+
+    def quantize(self, n_active: int, capacity: int) -> int:
+        return self.inner.quantize(n_active, capacity)
+
+    def shapes(self, capacity: int) -> tuple:
+        return self.inner.shapes(capacity)
+
+    def place(self, batch: Any) -> Any:
+        return self.inner.place(batch)
+
+    def observe(self, record: TickRecord) -> None:
+        self.inner.observe(record)
+
+    @staticmethod
+    def _prio(task: Any) -> int:
+        return int(getattr(task, "priority", 0))
+
+    def select(self, queue: Any) -> int:
+        best, best_p = 0, None
+        for i, task in enumerate(queue):
+            p = self._prio(task)
+            if best_p is None or p < best_p:   # strict: FIFO within class
+                best, best_p = i, p
+        return best
+
+    def preempt(self, queued: Any, residents: Any) -> tuple:
+        if not queued or not residents or not self.max_evictions_per_tick:
+            return ()
+        free = self.capacity - len(residents)
+        # most-urgent queued first; worst resident is the only candidate
+        want = sorted(self._prio(t) for t in queued)
+        victims = sorted(residents, key=lambda st: self._prio(st[1]),
+                         reverse=True)
+        out = []
+        for p in want:
+            if free > 0:               # a free slot serves this admission
+                free -= 1
+                continue
+            if len(out) >= self.max_evictions_per_tick or not victims:
+                break
+            if self._prio(victims[0][1]) > p:    # strictly less urgent
+                out.append(victims.pop(0)[0])
+            else:
+                break
+        return tuple(out)
 
 
 class ShardedScheduler(Scheduler):

@@ -1,0 +1,33 @@
+"""``repro.traffic`` — deterministic traffic generation, replay and
+closed-loop control for the serving engines.
+
+Three layers, each usable alone:
+
+* **Traces** (:mod:`repro.traffic.traces`) — :func:`poisson_trace` and
+  :func:`bursty_trace` (Markov-modulated Poisson) generate
+  :class:`Trace` arrival schedules over a mix of
+  :class:`RequestClass`\\ es (short/long prompts, LM vs image frames,
+  per-class priority and SLO), fully deterministic from one explicit
+  seed.
+* **Replay** (:mod:`repro.traffic.replay`) — :func:`replay` drives any
+  engine with the standard ``submit()/poll()/tick()`` surface through a
+  trace on a :class:`VirtualClock`, producing a :class:`ReplayReport`
+  (counts, per-class latency, the exact schedule).
+* **Control** (:mod:`repro.traffic.controller` /
+  :mod:`repro.traffic.admission`) — :class:`AutoscaleController` grows
+  and drains a :class:`repro.serving.DisaggregatedEngine` decode pool on
+  the handoff queue-depth signal; :class:`SLOAdmission` sheds arrivals
+  whose class SLO is already unattainable.
+
+See ``docs/traffic.md`` for the subsystem design notes.
+"""
+
+from repro.traffic.admission import SLOAdmission  # noqa: F401
+from repro.traffic.controller import (AutoscaleController,  # noqa: F401
+                                      ScaleEvent)
+from repro.traffic.replay import (ReplayReport, VirtualClock,  # noqa: F401
+                                  default_factory, replay)
+from repro.traffic.traces import (RequestClass, Trace,  # noqa: F401
+                                  TraceEvent, build_image_request,
+                                  build_lm_request, bursty_trace,
+                                  default_classes, poisson_trace)

@@ -26,6 +26,7 @@ class ToyRequest:
     steps: int = 1
     rid: Optional[int] = None
     stream: bool = False
+    priority: int = 0                 # 0 = most urgent
 
 
 @dataclasses.dataclass
@@ -64,7 +65,10 @@ class ToyEngine(EngineCore):
 
     def _admit(self, new: List[Tuple[int, SlotTask]]) -> Tuple[List[int], int]:
         for _, task in new:
-            task.state["left"] = task.payload
+            # setdefault keeps a preempted task's remaining countdown:
+            # the toy's whole resumable state lives in task.state, so
+            # the default (no-op) _evict hook is already lossless here
+            task.state.setdefault("left", task.payload)
             self.admitted_order.append(task.rid)
         return [], 0
 

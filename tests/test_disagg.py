@@ -233,7 +233,7 @@ class TestFailover:
         rid = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
         comps = eng.run_until_idle()
         assert [c.rid for c in comps] == [rid]      # requeued, not dropped
-        assert eng._dead == {0}
+        assert eng._dead == {eng.decodes[0]}
         ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
         assert comps[0].tokens == ref.generate([[1, 2, 3]],
                                                max_new_tokens=4)[0]

@@ -1,9 +1,10 @@
 """One contract suite for EVERY Scheduler implementation.
 
-The scheduler surface grew to five variants (FIFO, SLO-batch, sharded,
-interleaving, and the disaggregated front-end policy); this file is the
-single parametrized source of their shared invariants, so a new variant
-cannot drift from the protocol without failing here:
+The scheduler surface grew to six variants (FIFO, SLO-batch, sharded,
+interleaving, priority-preempting, and the disaggregated front-end
+policy); this file is the single parametrized source of their shared
+invariants, so a new variant cannot drift from the protocol without
+failing here:
 
   * batch selection — occupied slots and compiled batches never exceed
     engine capacity, and the oldest queued request is never starved;
@@ -28,8 +29,8 @@ import pytest
 from engine_testlib import ToyEngine, ToyRequest
 from repro.launch.mesh import make_mesh
 from repro.serving import (DisaggScheduler, FIFOScheduler,
-                           InterleavingScheduler, Scheduler,
-                           ShardedScheduler, SLOBatchScheduler)
+                           InterleavingScheduler, PriorityScheduler,
+                           Scheduler, ShardedScheduler, SLOBatchScheduler)
 
 CAPACITY = 4          # divisible by any plausible forced CPU device count
 
@@ -49,6 +50,10 @@ SCHEDULERS = {
     "sharded": _sharded,
     "interleave": lambda: InterleavingScheduler(decode_ratio=1),
     "disagg": DisaggScheduler,
+    # uniform-priority traffic must degrade to plain FIFO (select ties
+    # break first-come, preempt never fires), so every shared invariant
+    # — including admission order — holds unchanged
+    "priority": PriorityScheduler,
 }
 
 
