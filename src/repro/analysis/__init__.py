@@ -1,0 +1,50 @@
+"""capslint: the repo's own static-analysis gate (``python -m
+repro.analysis``).
+
+The serving and kernel layers rely on conventions no general-purpose
+linter knows about: shared engine state mutates under its annotated lock
+(``# guarded-by:``), code reachable from ``jax.jit`` / ``pl.pallas_call``
+stays trace-pure, every tuner candidate a kernel's ``legalize`` can emit
+is actually dispatchable, and broad ``except`` handlers never swallow
+errors silently.  This package turns those conventions into machine-
+checked rules:
+
+* :mod:`repro.analysis.loader` — parses ``src/repro`` once into a
+  :class:`Project` of :class:`Module` ASTs + comment maps (shared by all
+  checkers; nothing analyzed is executed, except the kernel-legality rule
+  which evaluates the live registry's pure config callables);
+* :mod:`repro.analysis.findings` — the :class:`Finding` record,
+  ``# capslint: disable=<rule>`` inline suppressions, and the committed
+  shrink-only :class:`Baseline`;
+* :mod:`repro.analysis.registry` — the :class:`Checker` protocol and
+  :class:`CheckerRegistry` (the :class:`repro.kernels.KernelRegistry`
+  idiom, one layer up);
+* :mod:`repro.analysis.checkers` — the four stock rules:
+  ``lock-discipline``, ``jit-purity``, ``kernel-legality``,
+  ``exception-hygiene``;
+* :mod:`repro.analysis.__main__` — the CLI and CI gate (``--strict``
+  fails on any non-baselined error finding and on stale baseline
+  entries).
+
+See ``docs/analysis.md`` for the rule catalogue and the suppression /
+baseline workflow.
+"""
+
+from repro.analysis.findings import (Baseline, Finding, apply_suppressions,
+                                     sort_findings)
+from repro.analysis.loader import Module, Project
+from repro.analysis.registry import (Checker, CheckerRegistry,
+                                     default_registry, registry)
+
+__all__ = [
+    "Baseline",
+    "Checker",
+    "CheckerRegistry",
+    "Finding",
+    "Module",
+    "Project",
+    "apply_suppressions",
+    "default_registry",
+    "registry",
+    "sort_findings",
+]

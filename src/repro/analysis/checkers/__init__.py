@@ -1,0 +1,6 @@
+"""The stock capslint rules (one module per rule).
+
+Each module exposes one checker class implementing the
+:class:`repro.analysis.Checker` protocol; they are registered by
+:func:`repro.analysis.default_registry`.
+"""

@@ -1,0 +1,296 @@
+"""kernel-legality: every legalized kernel config is provably dispatchable.
+
+The FastCaps design-space story rests on one invariant: whatever block
+sizes the tuner proposes, ``spec.legalize`` clamps them to values the
+kernel can actually run — each block divides its dimension exactly (full
+equal blocks, no ragged tail) and the per-block working set fits the
+target memory.  Dispatch *assumes* this; nothing used to *check* it.
+
+This rule checks it, symbolically.  Each :class:`repro.kernels.KernelSpec`
+now declares ``block_dims(*args) -> {tuned key: dimension}`` — the same
+mapping its ``legalize`` is derived from (via
+``repro.kernels.registry._legalize_blocks``), so the checker and dispatch
+cannot drift.  For every spec the checker builds shape cases from the
+spec's own ``example_cases`` *plus* variants scaled to the serving shape
+buckets in :data:`repro.configs.SHAPES` (seq 4k/32k/500k, batch 1..256),
+as allocation-free ``jax.ShapeDtypeStruct`` stand-ins, then for every
+candidate the tuner could ever propose
+(:func:`repro.kernels.tuning.candidate_configs`) proves:
+
+* **illegal-block** — every legalized block size is a positive int;
+* **non-divisor** — it divides its ``block_dims`` dimension exactly
+  (``largest_divisor`` as a verified invariant, not a hope);
+* **unstable-legalize** — legalization is idempotent (re-legalizing a
+  legal config is the identity; a drifting legalizer would make cached
+  tuner winners resolve differently than they measured);
+* **over-budget** — the per-block working set (every array's block
+  footprint, with block dims substituted) fits the per-backend budget;
+* **unverifiable** (warning) — a spec without ``block_dims`` cannot be
+  verified; warnings don't gate, but they show up in the report.
+
+Unlike the other rules this one runs against the *live* registry (it
+imports ``repro.kernels``), because the invariant lives in Python
+callables, not source text.  It stays cheap: nothing is allocated,
+compiled, or executed beyond the specs' own pure-Python legalize/dims
+functions.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Project
+
+#: worst-case on-chip budget a single block's working set must fit,
+#: per backend family (bytes).  Conservative by design: VMEM/SMEM-class
+#: memories, not HBM.
+BLOCK_BUDGET_BYTES: Dict[str, int] = {
+    "cpu": 1 << 30,                   # L2/L3-ish: effectively unbounded
+    "gpu": 256 << 20,                 # SM-resident working set
+    "tpu": 128 << 20,                 # VMEM-class
+}
+
+
+def _bucket_values() -> List[int]:
+    """Serving shape-bucket dims (seq + batch) from repro.configs, plus an
+    odd prime-ish size so divisor degradation is exercised."""
+    from repro.configs import SHAPES
+
+    vals: Set[int] = {3}
+    for info in SHAPES.values():
+        vals.add(int(info["seq"]))
+        vals.add(int(info["batch"]))
+    return sorted(vals)
+
+
+class _Struct:
+    """Minimal shape/dtype stand-in (independent of jax for testability)."""
+
+    __slots__ = ("shape", "dtype", "itemsize")
+
+    def __init__(self, shape: Tuple[int, ...], dtype: Any,
+                 itemsize: int):
+        self.shape = tuple(int(d) for d in shape)
+        self.dtype = dtype
+        self.itemsize = itemsize
+
+
+def _as_struct(value: Any) -> Any:
+    """Arrays (anything with .shape and .dtype) become allocation-free
+    stand-ins; everything else (ints, strings, None) passes through."""
+    shape = getattr(value, "shape", None)
+    dtype = getattr(value, "dtype", None)
+    if shape is None or dtype is None:
+        return value
+    itemsize = getattr(dtype, "itemsize", None)
+    if itemsize is None:
+        try:
+            import numpy as np
+
+            itemsize = np.dtype(dtype).itemsize
+        except Exception:  # capslint: disable=exception-hygiene — exotic
+            # dtype objects without numpy equivalents: 4 bytes is the
+            # conservative default for budget math, nothing else uses it.
+            itemsize = 4
+    return _Struct(shape, dtype, int(itemsize))
+
+
+def _scaled_case(args: tuple, dims: Dict[str, int], dim_value: int,
+                 bucket: int) -> Optional[tuple]:
+    """A case variant with every axis equal to ``dim_value`` replaced by
+    ``bucket`` (how the same kernel sees a serving-sized shape)."""
+    if bucket == dim_value:
+        return None
+    changed = False
+    out = []
+    for a in args:
+        if isinstance(a, _Struct):
+            shape = tuple(bucket if d == dim_value else d for d in a.shape)
+            changed = changed or shape != a.shape
+            out.append(_Struct(shape, a.dtype, a.itemsize))
+        else:
+            out.append(a)
+    return tuple(out) if changed else None
+
+
+def _block_footprint(args: tuple, dims: Dict[str, int],
+                     config: Dict[str, Any]) -> int:
+    """Bytes one block touches: per array, the product of its axes with
+    each axis matching a block dimension narrowed to that block size."""
+    total = 0
+    for a in args:
+        if not isinstance(a, _Struct):
+            continue
+        nbytes = a.itemsize
+        remaining = dict(dims)        # consume each dim once per array
+        for d in a.shape:
+            block = d
+            for key, dim in list(remaining.items()):
+                if d == dim:
+                    block = min(block, int(config.get(key, d)))
+                    del remaining[key]
+                    break
+            nbytes *= max(block, 1)
+        total += nbytes
+    return total
+
+
+class KernelLegalityChecker:
+    name = "kernel-legality"
+    description = ("every tuner candidate, legalized against the example "
+                   "cases and the repro.configs shape buckets, divides "
+                   "its block_dims dimension and fits the per-backend "
+                   "block budget")
+    codes = {
+        "illegal-block": "legalized block size is not a positive int",
+        "non-divisor": "legalized block does not divide its dimension",
+        "unstable-legalize": "legalize is not idempotent on its own "
+                             "output",
+        "over-budget": "per-block working set exceeds a backend budget",
+        "unverifiable": "spec declares no block_dims; legality cannot "
+                        "be proven",
+    }
+
+    def __init__(self, kernel_registry=None):
+        self._registry = kernel_registry
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        reg = self._registry
+        if reg is None:
+            from repro.kernels.registry import registry as reg
+        emitted: Set[Tuple[str, str, str]] = set()
+        for name in reg.names():
+            spec = reg.get(name)
+            for f in self._check_spec(project, spec):
+                key = (f.code, f.symbol, f.message)
+                if key not in emitted:
+                    emitted.add(key)
+                    yield f
+
+    # -- per-spec ------------------------------------------------------------
+
+    def _location(self, project: Project, spec) -> Tuple[str, int]:
+        fn = spec.block_dims or spec.legalize
+        code = getattr(fn, "__code__", None)
+        if code is None:              # e.g. functools.partial
+            inner = getattr(fn, "func", None)
+            code = getattr(inner, "__code__", None)
+        if code is None:
+            return (f"<kernel:{spec.name}>", 1)
+        path = Path(code.co_filename)
+        try:
+            rel = path.resolve().relative_to(project.root).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        return (rel, code.co_firstlineno)
+
+    def _check_spec(self, project: Project, spec) -> Iterator[Finding]:
+        path, line = self._location(project, spec)
+        if spec.block_dims is None:
+            yield Finding(
+                rule=self.name, code="unverifiable", path=path, line=line,
+                symbol=spec.name, severity="warning",
+                message=(f"kernel `{spec.name}` declares no block_dims "
+                         f"mapping; its legalize cannot be verified"),
+                hint="declare block_dims and derive legalize via "
+                     "_legalize_blocks(block_dims)")
+            return
+        from repro.kernels import tuning
+
+        for args, kwargs in self._cases(spec):
+            dims = spec.block_dims(*args, **kwargs)
+            try:
+                candidates = tuning.candidate_configs(spec, *args, **kwargs)
+            # The whole point: a legalize that *crashes* on a shape case
+            # is itself the finding (recorded below, never swallowed).
+            # capslint: disable=exception-hygiene
+            except Exception as e:
+                yield Finding(
+                    rule=self.name, code="illegal-block", path=path,
+                    line=line, symbol=spec.name,
+                    message=(f"kernel `{spec.name}` fails to legalize on "
+                             f"shapes {self._shapes(args)}: "
+                             f"{type(e).__name__}: {e}"),
+                    hint="legalize/block_dims must accept every example "
+                         "and bucket-scaled shape")
+                continue
+            for config in candidates:
+                yield from self._check_candidate(spec, path, line, args,
+                                                 kwargs, dims, config)
+
+    def _check_candidate(self, spec, path: str, line: int, args: tuple,
+                         kwargs: dict, dims: Dict[str, int],
+                         config: Dict[str, Any]) -> Iterator[Finding]:
+        from repro.kernels import tuning
+
+        shapes = self._shapes(args)
+        for key, dim in dims.items():
+            v = config.get(key)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                yield Finding(
+                    rule=self.name, code="illegal-block", path=path,
+                    line=line, symbol=spec.name,
+                    message=(f"kernel `{spec.name}`: legalized "
+                             f"`{key}`={v!r} on shapes {shapes} is not a "
+                             f"positive int"),
+                    hint="legalize must clamp every tuned key to a "
+                         "positive block size")
+                continue
+            if dim >= 1 and dim % v != 0:
+                yield Finding(
+                    rule=self.name, code="non-divisor", path=path,
+                    line=line, symbol=spec.name,
+                    message=(f"kernel `{spec.name}`: legalized "
+                             f"`{key}`={v} does not divide its dimension "
+                             f"{dim} on shapes {shapes}"),
+                    hint="derive legalize from block_dims via "
+                         "_legalize_blocks so largest_divisor is applied")
+        relegalized = spec.legalize(dict(config), *args, **kwargs)
+        if relegalized != config:
+            yield Finding(
+                rule=self.name, code="unstable-legalize", path=path,
+                line=line, symbol=spec.name,
+                message=(f"kernel `{spec.name}`: legalize is not "
+                         f"idempotent on shapes {shapes} "
+                         f"({tuning.config_label(config)} -> "
+                         f"{tuning.config_label(relegalized)})"),
+                hint="legalize(legalize(c)) must equal legalize(c), or "
+                     "cached tuner winners drift on reload")
+        footprint = _block_footprint(args, dims, config)
+        over = [(b, budget) for b, budget in sorted(
+            BLOCK_BUDGET_BYTES.items()) if footprint > budget]
+        if over:
+            worst = ", ".join(f"{b} budget {budget >> 20} MiB"
+                              for b, budget in over)
+            yield Finding(
+                rule=self.name, code="over-budget", path=path, line=line,
+                symbol=spec.name,
+                message=(f"kernel `{spec.name}`: block working set "
+                         f"{footprint >> 20} MiB with "
+                         f"{tuning.config_label(config)} on shapes "
+                         f"{shapes} exceeds {worst}"),
+                hint="shrink the block space or legalize against a "
+                     "memory cap, not just divisibility")
+
+    # -- case generation -------------------------------------------------
+
+    def _cases(self, spec) -> Iterator[Tuple[tuple, dict]]:
+        buckets = _bucket_values()
+        for case in spec.example_cases:
+            args, kwargs = spec.make_example(case)
+            struct_args = tuple(_as_struct(a) for a in args)
+            yield struct_args, kwargs
+            dims = spec.block_dims(*struct_args, **kwargs)
+            for dim_value in sorted(set(dims.values())):
+                for bucket in buckets:
+                    scaled = _scaled_case(struct_args, dims, dim_value,
+                                          bucket)
+                    if scaled is not None:
+                        yield scaled, kwargs
+
+    @staticmethod
+    def _shapes(args: tuple) -> str:
+        return "/".join("x".join(str(d) for d in a.shape)
+                        for a in args if isinstance(a, _Struct)) or "scalar"

@@ -1,0 +1,570 @@
+"""jit-purity: code reachable from ``jax.jit`` / ``pl.pallas_call`` stays pure.
+
+A traced function runs *once*, at trace time, against abstract tracer
+values — so four whole classes of Python are silently wrong inside it:
+
+* **tracer-branch** — a Python ``if``/``while`` on a tracer-derived value
+  (the branch freezes at trace time; under real jit it raises a
+  ``TracerBoolConversionError`` at the worst possible moment);
+* **tracer-cast** — ``int()`` / ``float()`` / ``bool()`` / ``.item()`` on a
+  tracer (host sync at best, trace error at worst);
+* **impure-call** — reading wall-clock (``time.time`` & friends) or global
+  RNG state (stdlib ``random``, legacy ``np.random.*``) inside traced
+  code: the value is frozen into the executable and silently reused;
+* **mutable-closure** — traced code reading engine shared state
+  (``# guarded-by:`` annotated fields, the same annotation the
+  lock-discipline rule uses): the trace captures one snapshot, the
+  engine keeps mutating, and the executable goes stale.
+
+How it works, entirely on the AST (nothing is imported or executed):
+
+1. **Roots** — functions decorated with ``jax.jit`` (including
+   ``functools.partial(jax.jit, static_argnames=...)``), functions or
+   lambdas passed to ``jax.jit(...)`` / ``pl.pallas_call(...)`` calls
+   (through local ``functools.partial`` wrappers, whose keyword names
+   become static), and ``self.<method>`` references passed to either.
+2. **Taint** — at each root, parameters not named static are tracers;
+   taint propagates through assignments and expressions
+   (``x.shape`` / ``x.dtype`` / ``len(x)`` are trace-time constants and
+   *un*-taint).  tracer-branch / tracer-cast are reported where a tainted
+   value hits a Python branch or cast.
+3. **Reachability** — calls are chased through same-module defs, package
+   imports (``lm.decode_step`` -> ``repro.models.lm``), and ``self.``
+   methods; every reachable function is scanned for impure-call,
+   ``.item()``, and mutable-closure.  Dynamic dispatch (a method on a
+   registry *instance*, higher-order callables) ends the chase — by
+   design: trace-time config resolution behind ``registry.call`` is
+   allowed to read its cache.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Union
+
+from repro.analysis.checkers.locks import class_guarded_fields, _resolve_base
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Module, Project
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+#: attributes that are trace-time constants even on a tracer
+UNTAINT_ATTRS = frozenset({"shape", "dtype", "ndim", "size", "weak_type",
+                           "sharding", "aval", "itemsize"})
+#: builtins whose result is never a tracer
+UNTAINT_CALLS = frozenset({"len", "isinstance", "hasattr", "getattr",
+                           "type", "repr", "str", "id"})
+CAST_CALLS = frozenset({"int", "float", "bool", "complex"})
+CAST_METHODS = frozenset({"item", "tolist"})
+CLOCK_FUNCS = frozenset({"time", "perf_counter", "monotonic",
+                         "process_time", "time_ns", "perf_counter_ns",
+                         "monotonic_ns"})
+
+
+@dataclasses.dataclass(frozen=True)
+class _Fn:
+    """One function in the call graph (module + optional class context)."""
+
+    module: Module
+    node: FuncNode
+    cls: Optional[ast.ClassDef] = None
+
+    @property
+    def symbol(self) -> str:
+        name = getattr(self.node, "name", "<lambda>")
+        return f"{self.cls.name}.{name}" if self.cls else name
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.module.name, self.symbol, self.node.lineno)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Root:
+    fn: _Fn
+    statics: frozenset
+
+
+class JitPurityChecker:
+    name = "jit-purity"
+    description = ("functions reachable from jax.jit / pl.pallas_call "
+                   "must not branch on tracers, cast them to Python "
+                   "scalars, read wall-clock/RNG globals, or close over "
+                   "guarded engine state")
+    codes = {
+        "tracer-branch": "Python `if`/`while` on a tracer-derived value",
+        "tracer-cast": "int()/float()/bool()/.item() on a tracer value",
+        "impure-call": "wall-clock or global-RNG read inside traced code",
+        "mutable-closure": "traced code reads a `# guarded-by:` engine "
+                           "field",
+    }
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        roots: List[_Root] = []
+        for module in project.modules.values():
+            roots.extend(_find_roots(module))
+        emitted: Set[Tuple[str, str, int]] = set()
+        # pass 1: taint analysis at each root
+        for root in roots:
+            for f in _taint_scan(root):
+                if self._fresh(emitted, f):
+                    yield f
+        # pass 2: purity scan over everything reachable from any root
+        for fn in _reachable(project, [r.fn for r in roots]):
+            for f in _purity_scan(project, fn):
+                if self._fresh(emitted, f):
+                    yield f
+
+    @staticmethod
+    def _fresh(emitted: Set[Tuple[str, str, int]], f: Finding) -> bool:
+        key = (f.code, f.path, f.line)
+        if key in emitted:
+            return False
+        emitted.add(key)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Root discovery
+# ---------------------------------------------------------------------------
+
+
+def _is_jit_ref(node: ast.expr) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "jit" \
+            and isinstance(node.value, ast.Name) and node.value.id == "jax":
+        return True
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _is_pallas_call_ref(node: ast.expr) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+        return True
+    return isinstance(node, ast.Name) and node.id == "pallas_call"
+
+
+def _is_partial_ref(node: ast.expr) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "partial":
+        return True
+    return isinstance(node, ast.Name) and node.id == "partial"
+
+
+def _static_names(call: ast.Call, func: Optional[FuncNode]) -> Set[str]:
+    """Parameter names a ``jax.jit`` call marks static (by name or index)."""
+    out: Set[str] = set()
+    pos: List[str] = []
+    if func is not None and not isinstance(func, ast.Lambda):
+        a = func.args
+        pos = [p.arg for p in a.posonlyargs + a.args]
+    elif isinstance(func, ast.Lambda):
+        pos = [p.arg for p in func.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    out.add(c.value)
+        elif kw.arg == "static_argnums":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, int) \
+                        and 0 <= c.value < len(pos):
+                    out.add(pos[c.value])
+    return out
+
+
+class _Scope:
+    """One lexical frame: local function defs and simple assignments."""
+
+    def __init__(self, body: List[ast.stmt]):
+        self.defs: Dict[str, FuncNode] = {}
+        self.assigns: Dict[str, ast.expr] = {}
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs[stmt.name] = stmt
+            elif isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.assigns[t.id] = stmt.value
+
+
+def _find_roots(module: Module) -> List[_Root]:
+    roots: List[_Root] = []
+
+    def resolve(expr: ast.expr, scopes: List[_Scope],
+                cls: Optional[ast.ClassDef], statics: Set[str]
+                ) -> Optional[Tuple[FuncNode, Set[str]]]:
+        if isinstance(expr, ast.Lambda):
+            return (expr, statics)
+        if isinstance(expr, ast.Call) and _is_partial_ref(expr.func) \
+                and expr.args:
+            kw_statics = {kw.arg for kw in expr.keywords if kw.arg}
+            return resolve(expr.args[0], scopes, cls, statics | kw_statics)
+        if isinstance(expr, ast.Name):
+            for scope in reversed(scopes):
+                if expr.id in scope.defs:
+                    return (scope.defs[expr.id], statics)
+                if expr.id in scope.assigns:
+                    return resolve(scope.assigns[expr.id], scopes[:-1]
+                                   if scope is scopes[-1] else scopes,
+                                   cls, statics)
+            return None
+        if isinstance(expr, ast.Attribute) \
+                and isinstance(expr.value, ast.Name) \
+                and expr.value.id == "self" and cls is not None:
+            for stmt in cls.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))\
+                        and stmt.name == expr.attr:
+                    return (stmt, statics)
+        return None
+
+    def visit(node: ast.AST, scopes: List[_Scope],
+              cls: Optional[ast.ClassDef]) -> None:
+        if isinstance(node, ast.ClassDef):
+            for child in node.body:
+                visit(child, scopes, node)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # decorated jit roots: @jax.jit / @partial(jax.jit, ...)
+            for dec in node.decorator_list:
+                if _is_jit_ref(dec):
+                    roots.append(_Root(_Fn(module, node, cls), frozenset()))
+                elif isinstance(dec, ast.Call):
+                    if _is_jit_ref(dec.func):
+                        roots.append(_Root(_Fn(module, node, cls),
+                                           frozenset(_static_names(dec,
+                                                                   node))))
+                    elif _is_partial_ref(dec.func) and dec.args \
+                            and _is_jit_ref(dec.args[0]):
+                        roots.append(_Root(_Fn(module, node, cls),
+                                           frozenset(_static_names(dec,
+                                                                   node))))
+            inner = scopes + [_Scope(node.body)]
+            for child in node.body:
+                visit(child, inner, cls)
+            return
+        if isinstance(node, ast.Call) \
+                and (_is_jit_ref(node.func) or _is_pallas_call_ref(node.func))\
+                and node.args:
+            resolved = resolve(node.args[0], scopes, cls, set())
+            if resolved is not None:
+                fn, statics = resolved
+                statics |= _static_names(node, fn)
+                roots.append(_Root(_Fn(module, fn, cls), frozenset(statics)))
+        for child in ast.iter_child_nodes(node):
+            visit(child, scopes, cls)
+
+    visit(module.tree, [_Scope(module.tree.body)], None)
+    # dedupe: the same function may be rooted from several call sites
+    seen: Set[Tuple[Tuple[str, str, int], frozenset]] = set()
+    out = []
+    for r in roots:
+        key = (r.fn.key(), r.statics)
+        if key not in seen:
+            seen.add(key)
+            out.append(r)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Taint analysis (per root, intra-procedural, nested defs inherit taint)
+# ---------------------------------------------------------------------------
+
+
+def _param_names(fn: FuncNode) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _taint_scan(root: _Root) -> Iterator[Finding]:
+    module, fn = root.fn.module, root.fn.node
+    findings: Dict[Tuple[str, int], Finding] = {}
+
+    def tainted(expr: ast.expr, env: Set[str]) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in env
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in UNTAINT_ATTRS:
+                return False
+            return tainted(expr.value, env)
+        if isinstance(expr, ast.Call):
+            if isinstance(expr.func, ast.Name) \
+                    and expr.func.id in UNTAINT_CALLS:
+                return False
+            parts = list(expr.args) + [kw.value for kw in expr.keywords]
+            if isinstance(expr.func, ast.Attribute):
+                parts.append(expr.func.value)
+            return any(tainted(p, env) for p in parts)
+        if isinstance(expr, ast.Starred):
+            return tainted(expr.value, env)
+        return any(tainted(c, env) for c in ast.iter_child_nodes(expr)
+                   if isinstance(c, ast.expr))
+
+    def report(code: str, node: ast.AST, message: str, hint: str) -> None:
+        findings[(code, node.lineno)] = Finding(
+            rule="jit-purity", code=code, path=module.relpath,
+            line=node.lineno, symbol=root.fn.symbol, message=message,
+            hint=hint)
+
+    def check_exprs(stmt: ast.stmt, env: Set[str]) -> None:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not stmt:
+                continue              # nested defs handled with their own env
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in CAST_CALLS \
+                    and any(tainted(a, env) for a in node.args):
+                report("tracer-cast", node,
+                       f"`{node.func.id}()` applied to a tracer-derived "
+                       f"value inside a jitted function",
+                       "use jnp ops, or mark the argument static "
+                       "(static_argnames)")
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in CAST_METHODS \
+                    and tainted(node.func.value, env):
+                report("tracer-cast", node,
+                       f"`.{node.func.attr}()` on a tracer-derived value "
+                       f"inside a jitted function",
+                       "keep the value on-device (jnp) or compute it "
+                       "outside the traced function")
+
+    def exec_body(body: List[ast.stmt], env: Set[str]) -> None:
+        for _ in range(2):            # two passes: loop-carried taint
+            for stmt in body:
+                exec_stmt(stmt, env)
+
+    def exec_stmt(stmt: ast.stmt, env: Set[str]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = set(env) | set(_param_names(stmt)) - {"self"}
+            exec_body(stmt.body, inner)
+            return
+        check_exprs(stmt, env)
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Lambda):
+                inner = set(env) | {p.arg for p in node.args.args}
+                check_exprs(ast.Expr(value=node.body, lineno=node.lineno,
+                                     col_offset=0), inner)
+        if isinstance(stmt, ast.Assign):
+            if tainted(stmt.value, env):
+                for t in stmt.targets:
+                    _taint_target(t, env)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if tainted(stmt.value, env):
+                _taint_target(stmt.target, env)
+        elif isinstance(stmt, ast.AugAssign):
+            if tainted(stmt.value, env):
+                _taint_target(stmt.target, env)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if tainted(stmt.test, env):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                report("tracer-branch", stmt,
+                       f"Python `{kind}` branches on a tracer-derived "
+                       f"value inside a jitted function",
+                       "use jnp.where / jax.lax.cond / jax.lax.while_loop, "
+                       "or mark the driver static")
+            exec_body(stmt.body, env)
+            exec_body(stmt.orelse, env)
+        elif isinstance(stmt, ast.For):
+            if tainted(stmt.iter, env):
+                _taint_target(stmt.target, env)
+            exec_body(stmt.body, env)
+            exec_body(stmt.orelse, env)
+        elif isinstance(stmt, (ast.With, ast.Try)):
+            for field in ("body", "orelse", "finalbody"):
+                exec_body(getattr(stmt, field, []) or [], env)
+            for h in getattr(stmt, "handlers", []) or []:
+                exec_body(h.body, env)
+
+    def _taint_target(t: ast.expr, env: Set[str]) -> None:
+        if isinstance(t, ast.Name):
+            env.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                _taint_target(e, env)
+        elif isinstance(t, ast.Starred):
+            _taint_target(t.value, env)
+
+    env = {n for n in _param_names(fn) if n not in root.statics} - {"self"}
+    body = fn.body if isinstance(fn.body, list) else None
+    if body is None:                  # lambda root: one expression
+        check_exprs(ast.Expr(value=fn.body, lineno=fn.lineno, col_offset=0),
+                    env)
+    else:
+        exec_body(body, env)
+    yield from findings.values()
+
+
+# ---------------------------------------------------------------------------
+# Reachability + purity scan
+# ---------------------------------------------------------------------------
+
+
+def _reachable(project: Project, roots: List[_Fn]) -> List[_Fn]:
+    seen: Set[Tuple[str, str, int]] = set()
+    out: List[_Fn] = []
+    work = list(roots)
+    while work:
+        fn = work.pop()
+        if fn.key() in seen:
+            continue
+        seen.add(fn.key())
+        out.append(fn)
+        body = fn.node.body if isinstance(fn.node.body, list) \
+            else [ast.Expr(value=fn.node.body, lineno=fn.node.lineno,
+                           col_offset=0)]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    target = _resolve_call(project, fn, node.func)
+                    if target is not None:
+                        work.append(target)
+    return out
+
+
+def _resolve_call(project: Project, fn: _Fn, func: ast.expr
+                  ) -> Optional[_Fn]:
+    module = fn.module
+    if isinstance(func, ast.Name):
+        # same-module top-level def, else a from-import of a function
+        for stmt in module.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name == func.id:
+                return _Fn(module, stmt)
+        target = project.resolve_import(module, func.id)
+        if target and target[1] is not None:
+            other = project.get(target[0])
+            if other:
+                for stmt in other.tree.body:
+                    if isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+                            and stmt.name == target[1]:
+                        return _Fn(other, stmt)
+        return None
+    if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+        if func.value.id == "self" and fn.cls is not None:
+            return _resolve_method(project, module, fn.cls, func.attr)
+        target = project.resolve_import(module, func.value.id)
+        if target and target[1] is None:
+            other = project.get(target[0])
+            if other:
+                for stmt in other.tree.body:
+                    if isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+                            and stmt.name == func.attr:
+                        return _Fn(other, stmt)
+    return None
+
+
+def _resolve_method(project: Project, module: Module, cls: ast.ClassDef,
+                    name: str) -> Optional[_Fn]:
+    seen: Set[Tuple[str, str]] = set()
+
+    def find(mod: Module, cdef: ast.ClassDef) -> Optional[_Fn]:
+        if (mod.name, cdef.name) in seen:
+            return None
+        seen.add((mod.name, cdef.name))
+        for stmt in cdef.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name == name:
+                return _Fn(mod, stmt, cdef)
+        for base in cdef.bases:
+            resolved = _resolve_base(project, mod, base)
+            if resolved:
+                hit = find(*resolved)
+                if hit is not None:
+                    return hit
+        return None
+
+    return find(module, cls)
+
+
+def _purity_scan(project: Project, fn: _Fn) -> Iterator[Finding]:
+    module = fn.module
+    imports = module.imports()
+    guarded = (class_guarded_fields(project, module, fn.cls)
+               if fn.cls is not None else {})
+
+    def is_module(name: str, expect: str) -> bool:
+        target = imports.get(name)
+        return target is not None and target == (expect, None)
+
+    body = fn.node.body if isinstance(fn.node.body, list) \
+        else [ast.Expr(value=fn.node.body, lineno=fn.node.lineno,
+                       col_offset=0)]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute):
+                f = node.func
+                if isinstance(f.value, ast.Name):
+                    if f.value.id == "time" and f.attr in CLOCK_FUNCS \
+                            and is_module("time", "time"):
+                        yield Finding(
+                            rule="jit-purity", code="impure-call",
+                            path=module.relpath, line=node.lineno,
+                            symbol=fn.symbol,
+                            message=(f"`time.{f.attr}()` inside jit-"
+                                     f"reachable code — the clock value "
+                                     f"freezes at trace time"),
+                            hint="measure outside the traced function "
+                                 "(engine hooks run eagerly)")
+                    if f.value.id == "random" \
+                            and is_module("random", "random"):
+                        yield Finding(
+                            rule="jit-purity", code="impure-call",
+                            path=module.relpath, line=node.lineno,
+                            symbol=fn.symbol,
+                            message=(f"stdlib `random.{f.attr}()` inside "
+                                     f"jit-reachable code — global RNG "
+                                     f"state freezes at trace time"),
+                            hint="thread a jax.random key through the "
+                                 "traced function")
+                elif isinstance(f.value, ast.Attribute) \
+                        and f.value.attr == "random" \
+                        and isinstance(f.value.value, ast.Name) \
+                        and is_module(f.value.value.id, "numpy"):
+                    yield Finding(
+                        rule="jit-purity", code="impure-call",
+                        path=module.relpath, line=node.lineno,
+                        symbol=fn.symbol,
+                        message=(f"`np.random.{f.attr}` inside jit-"
+                                 f"reachable code — numpy RNG draws "
+                                 f"freeze at trace time"),
+                        hint="thread a jax.random key through the traced "
+                             "function")
+                if f.attr in CAST_METHODS and fn.cls is None \
+                        and not isinstance(fn.node, ast.Lambda):
+                    pass              # taint pass owns .item() at roots;
+                    #                   reachable helpers checked below
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "self" \
+                    and isinstance(node.ctx, ast.Load) \
+                    and node.attr in guarded:
+                yield Finding(
+                    rule="jit-purity", code="mutable-closure",
+                    path=module.relpath, line=node.lineno,
+                    symbol=fn.symbol,
+                    message=(f"jit-reachable method reads `self."
+                             f"{node.attr}` (a `# guarded-by: "
+                             f"{guarded[node.attr]}` field) — the trace "
+                             f"captures one stale snapshot of shared "
+                             f"engine state"),
+                    hint="pass the state in as a traced argument instead "
+                         "of closing over it")
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" \
+                    and not node.args:
+                yield Finding(
+                    rule="jit-purity", code="tracer-cast",
+                    path=module.relpath, line=node.lineno,
+                    symbol=fn.symbol,
+                    message=("`.item()` inside jit-reachable code — "
+                             "forces a host sync and fails under trace"),
+                    hint="keep the value on-device, or hoist the read "
+                         "out of the traced path")

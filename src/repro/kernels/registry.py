@@ -61,6 +61,12 @@ class KernelSpec:
     example_cases: Tuple[Mapping[str, Any], ...] = ()
     ref_accepts: Tuple[str, ...] = ()     # semantic kwargs the oracle takes
     is_available: Callable[[], bool] = lambda: True
+    #: tuned key -> the array dimension it must divide, evaluated on the
+    #: call arguments (ShapeDtypeStructs suffice — only ``.shape`` is
+    #: read).  ``legalize`` is derived from this via
+    #: :func:`_legalize_blocks`, so the capslint kernel-legality checker
+    #: verifies the *same* dimension mapping dispatch uses.
+    block_dims: Optional[Callable[..., Dict[str, int]]] = None
 
     def ref_call(self, *args, **kwargs):
         """Invoke the jnp oracle, filtering kwargs it does not accept."""
@@ -153,9 +159,29 @@ def _all_concrete(args) -> bool:
 def _pallas_available() -> bool:
     try:
         from jax.experimental import pallas  # noqa: F401
+    # Capability probe: *any* import failure (missing extra, broken
+    # toolchain, platform plugin) means the same thing — "Pallas
+    # unavailable" — and dispatch falls back to the reference oracle.
+    # capslint: disable=exception-hygiene
     except Exception:
         return False
     return True
+
+
+def _legalize_blocks(dims_fn: Callable[..., Dict[str, int]]
+                     ) -> Callable[..., Dict[str, Any]]:
+    """Build a spec ``legalize`` from its ``block_dims`` mapping: every
+    block-size key becomes ``largest_divisor(dim, requested)``.  Keeping
+    legalization derived from the dimension map (rather than hand-written
+    per kernel) is what lets ``repro.analysis``'s kernel-legality rule
+    *prove* divisibility — the checker evaluates the same ``dims_fn``."""
+
+    def legalize(config: Dict[str, Any], *args, **kwargs) -> Dict[str, Any]:
+        for key, dim in dims_fn(*args, **kwargs).items():
+            config[key] = largest_divisor(dim, config[key])
+        return config
+
+    return legalize
 
 
 # ---------------------------------------------------------------------------
@@ -200,10 +226,8 @@ def _routing_reference():
     return fused_routing_ref
 
 
-def _routing_legalize(config, u_hat, **kwargs):
-    config["batch_block"] = largest_divisor(u_hat.shape[0],
-                                            config["batch_block"])
-    return config
+def _routing_block_dims(u_hat, **kwargs):
+    return {"batch_block": u_hat.shape[0]}
 
 
 def _routing_example(case):
@@ -222,7 +246,8 @@ registry.register(KernelSpec(
            "softmax_mode": ("exact", "taylor")},
     tuned=("batch_block",),
     base_config={"batch_block": 8},
-    legalize=_routing_legalize,
+    legalize=_legalize_blocks(_routing_block_dims),
+    block_dims=_routing_block_dims,
     make_example=_routing_example,
     example_cases=(
         {"shape": (4, 24, 10, 16), "softmax_mode": "exact", "atol": 1e-5},
@@ -258,12 +283,11 @@ def _softmax_reference():
     return taylor_softmax_ref
 
 
-def _softmax_legalize(config, x, **kwargs):
+def _softmax_block_dims(x, **kwargs):
     rows = 1
     for d in x.shape[:-1]:
         rows *= d
-    config["row_block"] = largest_divisor(rows, config["row_block"])
-    return config
+    return {"row_block": rows}
 
 
 def _softmax_example(case):
@@ -280,7 +304,8 @@ registry.register(KernelSpec(
     space={"row_block": (32, 64, 128, 256, 512)},
     tuned=("row_block",),
     base_config={"row_block": 256},
-    legalize=_softmax_legalize,
+    legalize=_legalize_blocks(_softmax_block_dims),
+    block_dims=_softmax_block_dims,
     make_example=_softmax_example,
     example_cases=(
         {"shape": (8, 16), "atol": 1e-6},
@@ -334,12 +359,10 @@ def _attention_reference():
     return attention_ref
 
 
-def _attention_legalize(config, q, k=None, v=None, **kwargs):
+def _attention_block_dims(q, k=None, v=None, **kwargs):
     s = q.shape[1]
     t = k.shape[1] if k is not None else s
-    config["q_block"] = largest_divisor(s, config["q_block"])
-    config["kv_block"] = largest_divisor(t, config["kv_block"])
-    return config
+    return {"q_block": s, "kv_block": t}
 
 
 def _attention_example(case):
@@ -362,7 +385,8 @@ registry.register(KernelSpec(
            "softmax_mode": ("exact", "taylor")},
     tuned=("q_block", "kv_block"),
     base_config={"q_block": 512, "kv_block": 512},
-    legalize=_attention_legalize,
+    legalize=_legalize_blocks(_attention_block_dims),
+    block_dims=_attention_block_dims,
     make_example=_attention_example,
     example_cases=(
         {"dims": (2, 128, 128, 8, 4, 32), "causal": True, "atol": 2e-5},

@@ -61,8 +61,19 @@ def largest_divisor(n: int, cap: int) -> int:
     This is the shared block-size default: the whole dimension is covered
     by equal full blocks, and an odd size degrades gracefully (n=9, cap=8
     -> 3) instead of collapsing to 1 the way halving-from-8 did.
+
+    Raises :class:`ValueError` on ``n <= 0`` or ``cap <= 0`` — a zero-size
+    dimension or a zero/negative block request is always a caller bug
+    (empty example case, config typo), and silently returning 1 used to
+    hide it until the kernel produced garbage grids.
     """
-    n, cap = int(n), max(int(cap), 1)
+    n, cap = int(n), int(cap)
+    if n <= 0:
+        raise ValueError(f"largest_divisor: dimension must be positive, "
+                         f"got n={n}")
+    if cap <= 0:
+        raise ValueError(f"largest_divisor: block cap must be positive, "
+                         f"got cap={cap} (for dimension n={n})")
     for d in range(min(n, cap), 0, -1):
         if n % d == 0:
             return d
@@ -153,15 +164,19 @@ class TuneCache:
                 os.path.expanduser("~"), ".cache", "repro-kernels")
             path = os.path.join(root, "autotune.json")
         self.path = path
-        self._entries: Optional[Dict[str, Dict[str, Any]]] = None
-        self._written: set = set()    # keys THIS instance put (merge set)
+        self._entries: Optional[Dict[str, Dict[str, Any]]] = (
+            None)                                      # guarded-by: _lock
+        self._written: set = set()                     # guarded-by: _lock
+        #   ^ the keys THIS instance put (the merge-on-write overlay set)
         self._lock = threading.Lock()
 
     @staticmethod
     def key(kernel: str, backend: str, bucket: str, dtype: str) -> str:
         return f"{kernel}|{backend}|{bucket}|{dtype}"
 
-    def _load(self) -> Dict[str, Dict[str, Any]]:
+    def _load_locked(self) -> Dict[str, Dict[str, Any]]:
+        """Lazy read of the on-disk cache; ``_locked`` = caller holds
+        ``self._lock`` (every public entry point takes it first)."""
         if self._entries is None:
             entries: Dict[str, Dict[str, Any]] = {}
             try:
@@ -176,18 +191,18 @@ class TuneCache:
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         with self._lock:
-            entry = self._load().get(key)
+            entry = self._load_locked().get(key)
             return dict(entry["config"]) if entry else None
 
     def entry(self, key: str) -> Optional[Dict[str, Any]]:
         with self._lock:
-            e = self._load().get(key)
+            e = self._load_locked().get(key)
             return json.loads(json.dumps(e)) if e else None
 
     def put(self, key: str, config: Dict[str, Any],
             timings: Optional[Dict[str, float]] = None) -> None:
         with self._lock:
-            entries = self._load()
+            entries = self._load_locked()
             entries[key] = {"config": dict(config),
                             "timings": dict(timings or {})}
             self._written.add(key)

@@ -343,14 +343,16 @@ class EngineCore:
         self.scheduler = scheduler or FIFOScheduler()
         self.scheduler.bind(self)
         self._clock = clock
-        self._slots: List[Optional[SlotTask]] = [None] * self.capacity
-        self._queue: Deque[SlotTask] = deque()
-        self._requests: Dict[int, _RequestEntry] = {}
-        self._completions: Deque[Any] = deque()
-        self._events: Deque[StreamEvent] = deque()
-        self._stats = EngineStats()
-        self._tick_excluded = 0.0      # one-off hook time (autotuning)
-        self._next_rid = 0
+        self._slots: List[Optional[SlotTask]] = (      # guarded-by: _lock
+            [None] * self.capacity)
+        self._queue: Deque[SlotTask] = deque()         # guarded-by: _lock
+        self._requests: Dict[int, _RequestEntry] = {}  # guarded-by: _lock
+        self._completions: Deque[Any] = deque()        # guarded-by: _lock
+        self._events: Deque[StreamEvent] = deque()     # guarded-by: _lock
+        self._stats = EngineStats()                    # guarded-by: _lock
+        self._tick_excluded = 0.0      # one-off hook time (autotuning);
+        #                                ticker-private (under _tick_lock)
+        self._next_rid = 0                             # guarded-by: _lock
         self._lock = threading.Lock()          # queue / requests / stats
         self._tick_lock = threading.Lock()     # one ticker at a time
 

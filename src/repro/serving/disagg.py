@@ -352,23 +352,26 @@ class DisaggregatedEngine:
         if not decodes:
             raise ValueError("need at least one decode engine")
         self.prefill = prefill
-        self.decodes = list(decodes)
-        self.capacity = sum(e.capacity for e in self.decodes)
+        self.decodes = list(decodes)              # guarded-by: _tick_lock
+        self.capacity = sum(e.capacity            # guarded-by: _tick_lock
+                            for e in self.decodes)
         self.scheduler = scheduler or DisaggScheduler()
         self.scheduler.bind(self)
         self._clock = clock
-        self._handoffs: Deque[CacheHandoff] = deque()
-        self._inflight: Dict[int, _Tracked] = {}
-        self._completions: Deque[Any] = deque()
-        self._events: Deque[StreamEvent] = deque()
-        self._stats = EngineStats()
-        self._next_rid = 0
+        self._handoffs: Deque[CacheHandoff] = deque()   # guarded-by: _lock
+        self._inflight: Dict[int, _Tracked] = {}        # guarded-by: _lock
+        self._completions: Deque[Any] = deque()         # guarded-by: _lock
+        self._events: Deque[StreamEvent] = deque()      # guarded-by: _lock
+        self._stats = EngineStats()                     # guarded-by: _lock
+        self._next_rid = 0                              # guarded-by: _lock
         # engine-identity sets/lists (indices would go stale as the
-        # elastic pool grows and shrinks)
-        self._dead: Set[EngineCore] = set()      # submit raised mid-handoff
-        self._draining: Set[EngineCore] = set()  # retiring: drain, no new work
-        self._retired: List[EngineCore] = []     # removed; stats retained
-        self._rr = 0                  # round-robin transfer cursor
+        # elastic pool grows and shrinks):
+        # _dead = submit raised mid-handoff; _draining = retiring, drains
+        # but takes no new work; _retired = removed, stats retained
+        self._dead: Set[EngineCore] = set()       # guarded-by: _tick_lock
+        self._draining: Set[EngineCore] = set()   # guarded-by: _tick_lock
+        self._retired: List[EngineCore] = []      # guarded-by: _tick_lock
+        self._rr = 0    # round-robin cursor      # guarded-by: _tick_lock
         self._lock = threading.Lock()
         self._tick_lock = threading.Lock()
 
@@ -459,7 +462,7 @@ class DisaggregatedEngine:
             # engine are invisible to n_pending until moved up here
             self._collect_prefill()
             if phase in ("mixed", "handoff"):
-                busy |= self._transfer_all() > 0
+                busy |= self._transfer_all_locked() > 0
             if phase in ("mixed", "decode"):
                 # dead engines (submit raised) still tick: they receive no
                 # new handoffs, but any resident work must drain — and a
@@ -623,14 +626,18 @@ class DisaggregatedEngine:
                     tr.cls, LatencyHistogram()).record(completion.latency_s)
             self._completions.append(completion)
 
-    def _transfer_all(self) -> int:
+    def _transfer_all_locked(self) -> int:
+        """Drain the handoff queue into the decode pool.  ``_locked`` =
+        the caller holds ``_tick_lock`` (the engine-pool views read and
+        written here — ``_dead``, ``_rr`` — are tick-owned); ``_lock`` is
+        still taken internally for the handoff queue itself."""
         moved = 0
         while True:
             with self._lock:
                 if not self._handoffs:
                     return moved
                 h = self._handoffs.popleft()
-            if self._transfer_one(h):
+            if self._transfer_one_locked(h):
                 moved += 1
             else:
                 with self._lock:       # requeued, never dropped
@@ -642,7 +649,7 @@ class DisaggregatedEngine:
                         f"stranded")
                 return moved
 
-    def _transfer_one(self, h: CacheHandoff) -> bool:
+    def _transfer_one_locked(self, h: CacheHandoff) -> bool:
         # draining engines take no new work — unless every live engine is
         # draining (a mis-driven controller), in which case serving beats
         # stranding the handoff
@@ -666,7 +673,13 @@ class DisaggregatedEngine:
                 with self._lock:
                     self._handoffs.appendleft(h)
                 raise
-            except Exception:         # engine died mid-handoff: fail over
+            # Engine died mid-handoff: *any* failure class here means the
+            # same thing — mark it dead and fail over to the next
+            # candidate.  Nothing is swallowed: the handoff is requeued by
+            # the caller (never-dropped invariant) and a fully-dead pool
+            # raises RuntimeError there.
+            # capslint: disable=exception-hygiene
+            except Exception:
                 self._dead.add(eng)
                 continue
             self._rr = (self._rr + k + 1) % max(n, 1)

@@ -1,0 +1,511 @@
+"""Tests for repro.analysis (capslint) — the static-analysis gate itself.
+
+Each rule gets three fixture flavors: a planted violation (asserting the
+exact rule id, sub-code and ``file:line``), a suppressed variant, and a
+clean variant.  On top of that: baseline round-trip (incl. stale-entry
+detection), fingerprint stability under code motion, ``--changed-only``
+filtering, and a subprocess meta-test that the committed repo itself is
+clean under ``python -m repro.analysis --strict``.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, Finding, Project, apply_suppressions,
+                            default_registry, sort_findings)
+from repro.analysis.__main__ import filter_changed
+from repro.analysis.checkers.exceptions import ExceptionHygieneChecker
+from repro.analysis.checkers.legality import KernelLegalityChecker
+from repro.analysis.checkers.locks import LockDisciplineChecker
+from repro.analysis.checkers.purity import JitPurityChecker
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def lint(tmp_path, source, checker, name="mod.py"):
+    """Write ``source`` into a throwaway project, run one checker, and
+    return (kept, suppressed) findings."""
+    (tmp_path / name).write_text(textwrap.dedent(source))
+    project = Project.load([tmp_path], root=tmp_path)
+    findings = list(checker.run(project))
+    return apply_suppressions(project, findings)
+
+
+def locations(findings):
+    return [(f.rule, f.code, f.path, f.line) for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+LOCKED_SRC = """\
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []                      # guarded-by: _lock
+
+    def submit(self, item):
+        self._queue.append(item)              # line 10: unguarded
+
+    def submit_ok(self, item):
+        with self._lock:
+            self._queue.append(item)
+
+    def _drain_locked(self):
+        self._queue.clear()
+
+    def nudge(self):
+        self._drain_locked()                  # line 20: no lock held
+
+    def nudge_ok(self):
+        with self._lock:
+            self._drain_locked()
+"""
+
+
+class TestLockDiscipline:
+    def test_planted_violations_exact_location(self, tmp_path):
+        kept, _ = lint(tmp_path, LOCKED_SRC, LockDisciplineChecker())
+        assert ("lock-discipline", "unguarded-mutation", "mod.py", 10) \
+            in locations(kept)
+        assert ("lock-discipline", "locked-call-unlocked", "mod.py", 20) \
+            in locations(kept)
+        assert len(kept) == 2             # the _ok paths stay clean
+
+    def test_suppression(self, tmp_path):
+        src = LOCKED_SRC.replace(
+            "# line 10: unguarded",
+            "# capslint: disable=lock-discipline — test")
+        kept, suppressed = lint(tmp_path, src, LockDisciplineChecker())
+        assert [f.code for f in kept] == ["locked-call-unlocked"]
+        assert [f.code for f in suppressed] == ["unguarded-mutation"]
+
+    def test_clean_code_no_findings(self, tmp_path):
+        src = """\
+        import threading
+
+
+        class Engine:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._queue = []              # guarded-by: _lock
+
+            def submit(self, item):
+                with self._lock:
+                    self._queue.append(item)
+        """
+        kept, _ = lint(tmp_path, src, LockDisciplineChecker())
+        assert kept == []
+
+    def test_unannotated_field_is_not_policed(self, tmp_path):
+        src = """\
+        class Engine:
+            def __init__(self):
+                self._scratch = []
+
+            def submit(self, item):
+                self._scratch.append(item)
+        """
+        kept, _ = lint(tmp_path, src, LockDisciplineChecker())
+        assert kept == []
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+PURITY_SRC = """\
+import functools
+import random
+import time
+
+import jax
+
+
+@jax.jit
+def bad_branch(x):
+    if x > 0:                                 # line 10: tracer branch
+        return x
+    return -x
+
+
+@jax.jit
+def bad_cast(x):
+    return int(x.sum())                       # line 17: tracer cast
+
+
+def helper(x):
+    return x + random.random()                # line 21: impure, reachable
+
+
+@jax.jit
+def calls_helper(x):
+    return helper(x) * time.time()            # line 26: impure in root
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def static_branch_ok(x, flag):
+    if flag:                                  # static arg: clean
+        return x
+    return -x
+
+
+@jax.jit
+def shape_branch_ok(x):
+    if x.shape[0] > 1:                        # shape is trace-time: clean
+        return x
+    return -x
+"""
+
+
+class TestJitPurity:
+    def test_planted_violations_exact_location(self, tmp_path):
+        kept, _ = lint(tmp_path, PURITY_SRC, JitPurityChecker())
+        locs = locations(kept)
+        assert ("jit-purity", "tracer-branch", "mod.py", 10) in locs
+        assert ("jit-purity", "tracer-cast", "mod.py", 17) in locs
+        assert ("jit-purity", "impure-call", "mod.py", 21) in locs
+        assert ("jit-purity", "impure-call", "mod.py", 26) in locs
+
+    def test_static_and_shape_branches_clean(self, tmp_path):
+        kept, _ = lint(tmp_path, PURITY_SRC, JitPurityChecker())
+        lines = [f.line for f in kept]
+        assert all(ln < 28 for ln in lines), \
+            f"clean functions were flagged: {locations(kept)}"
+
+    def test_mutable_closure(self, tmp_path):
+        src = """\
+        import threading
+
+        import jax
+
+
+        class Engine:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._stats = {}              # guarded-by: _lock
+
+            @jax.jit
+            def tick(self, x):
+                return x + len(self._stats)   # line 13: stale closure
+        """
+        kept, _ = lint(tmp_path, src, JitPurityChecker())
+        assert ("jit-purity", "mutable-closure", "mod.py", 13) \
+            in locations(kept)
+
+    def test_suppression(self, tmp_path):
+        src = PURITY_SRC.replace("# line 10: tracer branch",
+                                 "# capslint: disable=jit-purity")
+        kept, suppressed = lint(tmp_path, src, JitPurityChecker())
+        assert "tracer-branch" not in [f.code for f in kept]
+        assert "tracer-branch" in [f.code for f in suppressed]
+
+    def test_unjitted_code_not_policed(self, tmp_path):
+        src = """\
+        import time
+
+
+        def eager(x):
+            if x > 0:
+                return time.time()
+            return int(x)
+        """
+        kept, _ = lint(tmp_path, src, JitPurityChecker())
+        assert kept == []
+
+
+# ---------------------------------------------------------------------------
+# exception-hygiene
+# ---------------------------------------------------------------------------
+
+EXC_SRC = """\
+def swallow():
+    try:
+        return 1
+    except Exception:                         # line 4: silent swallow
+        return None
+
+
+def reraise_ok():
+    try:
+        return 1
+    except Exception:
+        raise
+
+
+def logged_ok(log):
+    try:
+        return 1
+    except Exception as e:
+        log.warning("failed: %s", e)
+        return None
+
+
+def narrow_ok():
+    try:
+        return 1
+    except ValueError:
+        return None
+"""
+
+
+class TestExceptionHygiene:
+    def test_planted_violation_exact_location(self, tmp_path):
+        kept, _ = lint(tmp_path, EXC_SRC, ExceptionHygieneChecker())
+        assert locations(kept) == [
+            ("exception-hygiene", "silent-swallow", "mod.py", 4)]
+
+    def test_suppression_is_the_justification(self, tmp_path):
+        src = EXC_SRC.replace(
+            "# line 4: silent swallow",
+            "# capslint: disable=exception-hygiene — probe")
+        kept, suppressed = lint(tmp_path, src, ExceptionHygieneChecker())
+        assert kept == []
+        assert len(suppressed) == 1
+
+
+# ---------------------------------------------------------------------------
+# kernel-legality
+# ---------------------------------------------------------------------------
+
+BAD_KERNEL_SRC = """\
+import numpy as np
+
+from repro.kernels.registry import (KernelRegistry, KernelSpec,
+                                    _legalize_blocks)
+from repro.kernels.tuning import largest_divisor
+
+
+def block_dims(x, **kwargs):
+    return {"blk": x.shape[0]}
+
+
+def raw_legalize(config, x, **kwargs):
+    return config                   # no clamping: blk=8 vs dim 12
+
+
+def make_example(case):
+    return (np.zeros(case["shape"], np.float32),), {}
+
+
+def build_registry(legalize, dims=block_dims):
+    reg = KernelRegistry()
+    reg.register(KernelSpec(
+        name="badkernel",
+        build=lambda: None,
+        reference=lambda: None,
+        space={"blk": (8, 64)},
+        tuned=("blk",),
+        base_config={"blk": 8},
+        legalize=legalize,
+        make_example=make_example,
+        example_cases=({"shape": (12, 4)},),
+        block_dims=dims,
+    ))
+    return reg
+"""
+
+
+@pytest.fixture
+def bad_kernel_mod(tmp_path):
+    """The fixture registry lives in a compiled temp module so the
+    checker's ``__code__``-derived file:line points inside tmp_path."""
+    path = tmp_path / "badkernels.py"
+    path.write_text(BAD_KERNEL_SRC)
+    ns = {}
+    exec(compile(BAD_KERNEL_SRC, str(path), "exec"), ns)
+    return ns, path
+
+
+class TestKernelLegality:
+    def test_non_divisor_exact_location(self, tmp_path, bad_kernel_mod):
+        ns, path = bad_kernel_mod
+        reg = ns["build_registry"](ns["raw_legalize"])
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        hits = [f for f in kept if f.code == "non-divisor"]
+        assert hits, f"expected non-divisor, got {locations(kept)}"
+        f = hits[0]
+        assert f.rule == "kernel-legality"
+        assert f.symbol == "badkernel"
+        # location = the block_dims def in the fixture module (line 8)
+        assert f.path == "badkernels.py"
+        assert f.line == ns["block_dims"].__code__.co_firstlineno
+
+    def test_derived_legalize_is_legal(self, tmp_path, bad_kernel_mod):
+        ns, _ = bad_kernel_mod
+        reg = ns["build_registry"](
+            ns["_legalize_blocks"](ns["block_dims"]))
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        assert [f for f in kept if f.severity == "error"] == []
+
+    def test_unstable_legalize(self, tmp_path, bad_kernel_mod):
+        ns, _ = bad_kernel_mod
+
+        def drifting(config, x, **kwargs):
+            config["blk"] = max(1, config["blk"] // 2)   # shrinks again
+            return config
+
+        reg = ns["build_registry"](drifting)
+        project = Project.load([tmp_path], root=tmp_path)
+        codes = {f.code for f in KernelLegalityChecker(reg).run(project)}
+        assert "unstable-legalize" in codes
+
+    def test_missing_block_dims_is_warning(self, tmp_path, bad_kernel_mod):
+        ns, _ = bad_kernel_mod
+        reg = ns["build_registry"](ns["raw_legalize"], dims=None)
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        assert [(f.code, f.severity) for f in kept] == [
+            ("unverifiable", "warning")]
+
+    def test_real_registry_is_clean(self, tmp_path):
+        """The shipped kernel registry must satisfy its own invariant."""
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker().run(project))
+        assert [f for f in kept if f.severity == "error"] == [], \
+            [f.render() for f in kept]
+
+
+# ---------------------------------------------------------------------------
+# findings / suppressions / baseline plumbing
+# ---------------------------------------------------------------------------
+
+def mk(rule="lock-discipline", code="unguarded-mutation", path="a.py",
+       line=10, message="field `_q` mutated", symbol="Engine.submit",
+       severity="error"):
+    return Finding(rule=rule, code=code, path=path, line=line,
+                   message=message, symbol=symbol, severity=severity)
+
+
+class TestFindings:
+    def test_fingerprint_ignores_line(self):
+        assert mk(line=10).fingerprint() == mk(line=99).fingerprint()
+        assert mk().fingerprint() != mk(code="locked-call-unlocked"
+                                        ).fingerprint()
+
+    def test_sort_severity_then_location(self):
+        fs = [mk(path="b.py", severity="warning"), mk(path="b.py"),
+              mk(path="a.py", line=20), mk(path="a.py", line=5)]
+        ordered = sort_findings(fs)
+        assert [(f.severity, f.path, f.line) for f in ordered] == [
+            ("error", "a.py", 5), ("error", "a.py", 20),
+            ("error", "b.py", 10), ("warning", "b.py", 10)]
+
+    def test_rule_dot_code_and_all_suppressions(self, tmp_path):
+        src = """\
+        def swallow():
+            try:
+                return 1
+            # capslint: disable=exception-hygiene.silent-swallow
+            except Exception:
+                return None
+
+
+        def swallow2():
+            try:
+                return 1
+            except Exception:                 # capslint: disable=all
+                return None
+        """
+        kept, suppressed = lint(tmp_path, src, ExceptionHygieneChecker())
+        assert kept == []
+        assert len(suppressed) == 2
+
+
+class TestBaseline:
+    def test_round_trip(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        Baseline.load(path).save(path, [mk(), mk(path="b.py", line=3)])
+        new, accepted, stale = Baseline.load(path).split(
+            [mk(line=42), mk(path="b.py", line=7), mk(path="c.py")])
+        assert [f.path for f in accepted] == ["a.py", "b.py"]
+        assert [f.path for f in new] == ["c.py"]
+        assert stale == []
+
+    def test_stale_entries_reported(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        Baseline.load(path).save(path, [mk(), mk(path="gone.py")])
+        new, accepted, stale = Baseline.load(path).split([mk()])
+        assert new == [] and len(accepted) == 1
+        assert [e["path"] for e in stale] == ["gone.py"]
+
+    def test_missing_file_is_empty(self, tmp_path):
+        b = Baseline.load(tmp_path / "nope.json")
+        assert b.entries == {}
+
+    def test_version_mismatch_raises(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        path.write_text(json.dumps({"version": 99, "findings": []}))
+        with pytest.raises(ValueError, match="version"):
+            Baseline.load(path)
+
+
+class TestChangedOnly:
+    def test_filter_changed(self):
+        fs = [mk(path="a.py"), mk(path="b.py"), mk(path="c/d.py")]
+        assert [f.path for f in filter_changed(fs, ["b.py", "c/d.py"])] \
+            == ["b.py", "c/d.py"]
+        assert filter_changed(fs, []) == []
+
+
+# ---------------------------------------------------------------------------
+# the registry protocol + the gate on the real repo
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_default_registry_names(self):
+        assert default_registry().names() == [
+            "exception-hygiene", "jit-purity", "kernel-legality",
+            "lock-discipline"]
+
+    def test_unknown_checker_raises(self):
+        with pytest.raises(ValueError, match="unknown checker"):
+            default_registry().get("nope")
+
+    def test_select_subset(self, tmp_path):
+        (tmp_path / "m.py").write_text("x = 1\n")
+        project = Project.load([tmp_path], root=tmp_path)
+        out = default_registry().run(project,
+                                     select=["exception-hygiene"])
+        assert out == []
+
+
+class TestRepoGate:
+    """`python -m repro.analysis --strict` must pass on the committed repo
+    (modulo the committed baseline) — the CI lane in test form."""
+
+    def test_strict_json_clean(self, tmp_path):
+        out = tmp_path / "findings.json"
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--strict",
+             "--json", str(out)],
+            cwd=REPO, capture_output=True, text=True,
+            env={**__import__("os").environ,
+                 "PYTHONPATH": str(REPO / "src")})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        payload = json.loads(out.read_text())
+        assert payload["ok"] is True
+        assert payload["counts"]["errors"] == 0
+        assert payload["counts"]["modules"] > 50
+
+    def test_list_catalogue(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--list"],
+            cwd=REPO, capture_output=True, text=True,
+            env={**__import__("os").environ,
+                 "PYTHONPATH": str(REPO / "src")})
+        assert proc.returncode == 0
+        for rule in ("lock-discipline", "jit-purity", "kernel-legality",
+                     "exception-hygiene"):
+            assert rule in proc.stdout

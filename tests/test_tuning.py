@@ -30,6 +30,15 @@ class TestHelpers:
         assert tuning.largest_divisor(n, cap) == want
         assert n % tuning.largest_divisor(n, cap) == 0
 
+    @pytest.mark.parametrize("n,cap", [
+        (0, 8), (-3, 8), (12, 0), (12, -1), (0, 0),
+    ])
+    def test_largest_divisor_rejects_nonpositive(self, n, cap):
+        # the kernel-legality checker relies on this contract: a zero-size
+        # dimension or block request is a caller bug, never a silent 1
+        with pytest.raises(ValueError, match="must be positive"):
+            tuning.largest_divisor(n, cap)
+
     def test_shape_bucket(self):
         assert tuning.shape_bucket([(9, 252, 10, 16)]) == "16x256x16x16"
         assert tuning.shape_bucket([(8, 16), (8, 16)]) == "8x16,8x16"

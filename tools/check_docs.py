@@ -29,7 +29,8 @@ DOC_FILES = [REPO / "docs" / "architecture.md",
              REPO / "docs" / "serving.md",
              REPO / "docs" / "benchmarks.md",
              REPO / "docs" / "kernels.md",
-             REPO / "docs" / "traffic.md"]
+             REPO / "docs" / "traffic.md",
+             REPO / "docs" / "analysis.md"]
 README = REPO / "README.md"
 
 _REF_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
