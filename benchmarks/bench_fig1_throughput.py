@@ -32,6 +32,106 @@ from repro.serving import (CapsuleEngine, DisaggregatedEngine, ImageRequest,
                            SLOBatchScheduler)
 
 
+TRANSPORT_KINDS = ("in_process", "host_staged", "device_to_device")
+
+
+def run_transport(tiny: bool = False) -> dict:
+    """Handoff Transport comparison: the same LM request mix served
+    through :func:`repro.serving.multihost_disaggregated_lm_engine`
+    (prefill and decode on disjoint submeshes) once per
+    :class:`repro.serving.Transport` kind, with bit-exactness asserted
+    across kinds and per-leg transfer latencies compared.
+
+    The headline numbers are the per-delivery ``total`` p95s computed
+    from each transport's ``records`` ring (the first delivery is
+    dropped — it syncs against prefill's compile and would dominate a
+    small-sample p95); the EngineStats transfer histograms are printed
+    alongside.  On a >=2-device host ``device_to_device`` dispatches
+    asynchronously and should beat ``host_staged``'s blocking
+    d2h+h2d round trip — the emitted ``d2d_faster`` records that.
+    """
+    import jax
+
+    from repro.models import lm
+    from repro.models.common import LMConfig
+    from repro.serving import (Request, make_transport,
+                               multihost_disaggregated_lm_engine)
+
+    if tiny:
+        cfg = LMConfig(arch_id="xfer-tiny", family="dense", n_layers=4,
+                       d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                       vocab=128, remat=False, compute_dtype="float32",
+                       param_dtype="float32")
+        max_len, n_requests, max_new = 256, 6, 4
+    else:
+        cfg = LMConfig(arch_id="xfer-bench", family="dense", n_layers=6,
+                       d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                       vocab=256, remat=False, compute_dtype="float32",
+                       param_dtype="float32")
+        max_len, n_requests, max_new = 512, 12, 8
+    params = lm.init(cfg, jax.random.key(0))
+    rng = np.random.RandomState(0)
+    # one prompt-length bucket, so prefill compiles once (on the warmup
+    # request) and measured deliveries see steady-state staging costs
+    prompts = [[int(t) for t in rng.randint(1, cfg.vocab, size=12)]
+               for _ in range(n_requests)]
+
+    out = {"device_count": jax.device_count(), "per_transport": {}}
+    rows, baseline = [], None
+    for kind in TRANSPORT_KINDS:
+        transport = make_transport(kind)
+        eng = multihost_disaggregated_lm_engine(
+            cfg, params, n_slots=2, max_len=max_len, n_decode=1,
+            transport=transport)
+        warm = eng.serve([Request(prompt=prompts[0], max_new_tokens=max_new,
+                                  rid=10_000)])
+        assert len(warm) == 1
+        comps = {c.rid: list(c.tokens) for c in eng.serve(
+            [Request(prompt=p, max_new_tokens=max_new, rid=i)
+             for i, p in enumerate(prompts)])}
+        if baseline is None:
+            baseline = comps
+        elif comps != baseline:
+            raise AssertionError(f"{kind} diverged from in_process output")
+
+        recs = list(transport.records)[1:]          # drop compile-tainted warmup
+        totals_ms = np.asarray([r.total_s for r in recs]) * 1e3
+        entry = {
+            "handoffs": len(recs),
+            "nbytes_per_handoff": int(recs[0].nbytes) if recs else 0,
+            "total_p50_ms": float(np.percentile(totals_ms, 50)),
+            "total_p95_ms": float(np.percentile(totals_ms, 95)),
+            "legs": {leg: {"p50_ms": float(np.percentile(v, 50)),
+                           "p95_ms": float(np.percentile(v, 95))}
+                     for leg in (recs[0].legs if recs else {})
+                     for v in [np.asarray([r.legs[leg]
+                                           for r in recs]) * 1e3]},
+            "histograms": {stage: {"count": n, "p50_ms": p50, "p95_ms": p95}
+                           for stage, (n, p50, p95)
+                           in eng.stats().transfer_summary().items()},
+        }
+        out["per_transport"][kind] = entry
+        rows.append([kind, f"{len(recs)}", f"{entry['nbytes_per_handoff']}",
+                     f"{entry['total_p50_ms']:.3f}",
+                     f"{entry['total_p95_ms']:.3f}",
+                     " ".join(f"{leg}={s['p95_ms']:.3f}"
+                              for leg, s in entry["legs"].items())])
+
+    host = out["per_transport"]["host_staged"]["total_p95_ms"]
+    d2d = out["per_transport"]["device_to_device"]["total_p95_ms"]
+    out["host_staged_p95_ms"] = host
+    out["device_to_device_p95_ms"] = d2d
+    out["d2d_faster"] = bool(d2d < host)
+    bc.print_table(
+        f"Fig.1 (transport): handoff delivery latency per Transport "
+        f"({out['device_count']} device(s), multihost disagg topology)",
+        ["transport", "handoffs", "bytes", "total p50 ms", "total p95 ms",
+         "leg p95s"], rows)
+    print(f"[bench] device_to_device p95 {d2d:.3f}ms vs host_staged p95 "
+          f"{host:.3f}ms -> d2d_faster={out['d2d_faster']}")
+    return out
+
+
 def _make_engine(deployed, batch: int, slo_ms: float, scheduler: str):
     """``slo``: the single SLO-scheduled CapsuleEngine.  ``disagg``: a
     DisaggregatedEngine front-end dispatching over a 2-engine pool (the
@@ -162,12 +262,25 @@ if __name__ == "__main__":
                     help="serving topology: one SLO-scheduled engine, or a "
                          "disaggregated front-end over an engine pool "
                          "(adds per-phase depth/transfer histograms)")
+    ap.add_argument("--transport", action="store_true",
+                    help="with --scheduler disagg: compare handoff "
+                         "Transport kinds over the multihost LM topology "
+                         "instead of the CapsNet sweep (emits a "
+                         "fig1_transport record via --json)")
     ap.add_argument("--json", default=None,
                     help="write a BENCH_fig1.json perf-trajectory record")
     args = ap.parse_args()
-    results = run(quick=not args.full, tiny=args.tiny, slo_ms=args.slo_ms,
-                  scheduler=args.scheduler)
-    if args.json:
-        mode = "tiny" if args.tiny else ("full" if args.full else "quick")
-        results["scheduler"] = args.scheduler
-        bc.write_bench_json(args.json, "fig1", results, mode=mode)
+    mode = "tiny" if args.tiny else ("full" if args.full else "quick")
+    if args.transport:
+        if args.scheduler != "disagg":
+            ap.error("--transport requires --scheduler disagg")
+        results = run_transport(tiny=args.tiny)
+        if args.json:
+            bc.write_bench_json(args.json, "fig1_transport", results,
+                                mode=mode)
+    else:
+        results = run(quick=not args.full, tiny=args.tiny,
+                      slo_ms=args.slo_ms, scheduler=args.scheduler)
+        if args.json:
+            results["scheduler"] = args.scheduler
+            bc.write_bench_json(args.json, "fig1", results, mode=mode)

@@ -18,6 +18,11 @@ through the unified ``repro.serving`` engine API
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --scheduler disagg --decode-engines 2
 
+    # LM, multi-host disaggregated: prefill/decode on disjoint submeshes,
+    # handoffs staged through the host (or device_to_device / auto)
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --scheduler disagg --multihost --transport host_staged
+
     # CapsNet: FastCapsPipeline -> DeployedCapsNet.serve(), FPS report
     PYTHONPATH=src python -m repro.launch.serve --arch capsnet-mnist \
         --requests 8 --batch 16 --routing pallas --scheduler slo --slo-ms 50
@@ -42,7 +47,8 @@ from repro.serving import (DecodeEngine, DisaggregatedEngine, FIFOScheduler,
                            ImageRequest, InterleavingScheduler,
                            PriorityScheduler, Request, ServeEngine,
                            ShardedScheduler, SLOBatchScheduler,
-                           disaggregated_lm_engine)
+                           disaggregated_lm_engine,
+                           multihost_disaggregated_lm_engine)
 
 
 def _make_scheduler(args):
@@ -114,7 +120,7 @@ def serve_traffic(args) -> None:
                                 max_len=args.max_len)
         engine = disaggregated_lm_engine(
             cfg, params, n_slots=args.slots, max_len=args.max_len,
-            n_decode=1,
+            n_decode=1, transport=args.transport,
             decode_schedulers=[PriorityScheduler()] if args.priority
             else None)
         controller = AutoscaleController(mk, min_engines=1,
@@ -122,7 +128,7 @@ def serve_traffic(args) -> None:
     elif args.scheduler == "disagg":
         engine = disaggregated_lm_engine(
             cfg, params, n_slots=args.slots, max_len=args.max_len,
-            n_decode=args.decode_engines,
+            n_decode=args.decode_engines, transport=args.transport,
             decode_schedulers=[PriorityScheduler()
                                for _ in range(args.decode_engines)]
             if args.priority else None)
@@ -166,10 +172,15 @@ def serve_lm(args) -> None:
     if args.scheduler == "disagg":
         # disaggregated prefill: admission/prefill on a dedicated engine,
         # decode on --decode-engines engines joined by cache handoffs
-        engine = disaggregated_lm_engine(
+        # delivered over --transport; --multihost places prefill and each
+        # decode engine on disjoint submeshes (handoffs cross meshes)
+        factory = (multihost_disaggregated_lm_engine if args.multihost
+                   else disaggregated_lm_engine)
+        engine = factory(
             cfg, params, n_slots=args.slots, max_len=args.max_len,
             n_decode=args.decode_engines,
-            kernel_tune=args.kernel_tune or None)
+            kernel_tune=args.kernel_tune or None,
+            transport=args.transport)
     else:
         engine = ServeEngine(cfg, params, n_slots=args.slots,
                              max_len=args.max_len,
@@ -281,6 +292,18 @@ def main():
     ap.add_argument("--decode-engines", type=int, default=2,
                     help="disagg: number of decode engines behind the "
                          "prefill engine")
+    ap.add_argument("--transport", default="auto",
+                    choices=["auto", "in_process", "host_staged",
+                             "device_to_device"],
+                    help="disagg: cache-handoff delivery route (auto "
+                         "selects by mesh placement — device-to-device "
+                         "when decode owns a different mesh than prefill, "
+                         "in-process otherwise)")
+    ap.add_argument("--multihost", action="store_true",
+                    help="disagg (LM): place prefill and each decode "
+                         "engine on disjoint submeshes over the local "
+                         "devices, so cache handoffs genuinely cross a "
+                         "device boundary")
     # LM options
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--kernel-tune", action="store_true",
@@ -322,6 +345,8 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.6,
                     help="LAKP sparsity for both conv layers (0 = dense)")
     args = ap.parse_args()
+    if args.multihost and args.scheduler != "disagg":
+        ap.error("--multihost requires --scheduler disagg")
     if args.arch.startswith("capsnet"):
         serve_capsnet(args)
     elif args.trace != "none":

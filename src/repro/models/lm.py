@@ -676,6 +676,17 @@ def scatter_cache_rows(cfg: LMConfig, slot_idx: jax.Array, rows: Any,
                         is_leaf=lambda x: isinstance(x, tuple))
 
 
+def cache_row_nbytes(rows: Any) -> int:
+    """Payload size in bytes of a gathered cache-row pytree.
+
+    What a serving handoff transport actually moves per request: the sum
+    over leaves of ``nbytes`` (jax and numpy arrays both expose it
+    host-side, so this never forces a device sync).  ``None``/empty
+    trees size to 0."""
+    return int(sum(int(getattr(leaf, "nbytes", 0))
+                   for leaf in jax.tree.leaves(rows)))
+
+
 def model_flops_per_token(cfg: LMConfig, params_total: int,
                           params_active: Optional[int] = None) -> float:
     """MODEL_FLOPS ~ 6 * N (active) per token (roofline §)."""

@@ -24,6 +24,7 @@ import dataclasses
 from typing import Any, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
@@ -339,3 +340,30 @@ def divisible_or_none(dim: int, axes: MeshAxes, mesh: Mesh) -> bool:
     for a in tup:
         total *= mesh.shape[a]
     return dim % total == 0
+
+
+def disjoint_submeshes(n: int, axis_name: str = "data",
+                       devices: Optional[Sequence[Any]] = None
+                       ) -> Tuple[Mesh, ...]:
+    """``n`` single-axis meshes over disjoint device groups.
+
+    The multi-host emulation primitive for disaggregated serving: give
+    the prefill engine and each decode engine its *own* mesh so cache
+    handoffs must genuinely cross device boundaries (and a
+    device-to-device transport has real work to do).  With ``d`` devices
+    each submesh gets ``d // n`` of them (any remainder stays unused so
+    the groups stay equal-sized).  When the host has fewer devices than
+    requested groups the meshes degrade to 1-device each and *reuse*
+    devices round-robin — distinct Mesh objects, degenerate placement —
+    so single-device CI still exercises every code path.
+    """
+    if n <= 0:
+        raise ValueError(f"need a positive submesh count, got {n}")
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if not devs:
+        raise ValueError("no devices to build submeshes from")
+    per = max(len(devs) // n, 1)
+    groups = [[devs[(i * per + j) % len(devs)] for j in range(per)]
+              for i in range(n)]
+    return tuple(Mesh(np.array(g, dtype=object), (axis_name,))
+                 for g in groups)

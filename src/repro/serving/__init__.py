@@ -22,10 +22,16 @@ from repro.serving.core import (DepthHistogram, EngineCore,  # noqa: F401
                                 StreamEvent)
 from repro.serving.disagg import (CacheHandoff, DecodeEngine,  # noqa: F401
                                   DisaggregatedEngine, HandoffRequest,
-                                  PrefillEngine, disaggregated_lm_engine)
+                                  PrefillEngine, disaggregated_lm_engine,
+                                  multihost_disaggregated_lm_engine)
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401
 from repro.serving.schedulers import (DisaggScheduler,  # noqa: F401
                                       FIFOScheduler, InterleavingScheduler,
                                       PriorityScheduler, Scheduler,
                                       ShardedScheduler, SLOBatchScheduler,
                                       TickRecord, pow2_bucket)
+from repro.serving.transport import (DeviceToDeviceTransport,  # noqa: F401
+                                     HostStagedTransport, InProcessTransport,
+                                     TransferRecord, Transport,
+                                     TransportError, make_transport,
+                                     select_transport)

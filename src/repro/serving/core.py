@@ -190,7 +190,14 @@ class EngineStats:
     :class:`DepthHistogram` of the queue depth observed at each tick of
     that phase, and ``transfer`` maps a handoff stage to a
     :class:`LatencyHistogram` of its transfer wall-clock — both only
-    populated by engines that run the corresponding phase.
+    populated by engines that run the corresponding phase.  The
+    ``transfer`` key vocabulary on a disaggregated front-end:
+    ``"handoff"`` is the queue wait (prefill completion to decode
+    submit), and each routed :class:`repro.serving.Transport` adds
+    per-leg critical-path histograms ``"<transport>/<leg>"`` (e.g.
+    ``"host_staged/d2h"``, ``"device_to_device/dispatch"``) plus a
+    ``"<transport>/total"`` sum — the yardstick for how much delivery
+    cost sits on the decode critical path.
     """
 
     items: int = 0                    # real work units served
@@ -204,7 +211,8 @@ class EngineStats:
     depth: Dict[str, DepthHistogram] = dataclasses.field(
         default_factory=dict)         # tick phase -> queue-depth histogram
     transfer: Dict[str, LatencyHistogram] = dataclasses.field(
-        default_factory=dict)         # handoff stage -> transfer latency
+        default_factory=dict)         # handoff stage / transport leg ->
+    #                                   transfer latency
 
     @property
     def throughput(self) -> float:

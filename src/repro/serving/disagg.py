@@ -64,7 +64,11 @@ from repro.serving.core import (DepthHistogram, EngineCore, EngineStats,
                                 LatencyHistogram, SlotTask, StreamEvent,
                                 allocate_rid)
 from repro.serving.engine import ServeEngine
-from repro.serving.schedulers import DisaggScheduler, Scheduler
+from repro.serving.schedulers import (DisaggScheduler, Scheduler,
+                                      ShardedScheduler)
+from repro.serving.transport import (InProcessTransport, TransferRecord,
+                                     Transport, make_transport,
+                                     select_transport)
 
 
 @dataclasses.dataclass
@@ -315,9 +319,25 @@ class DisaggregatedEngine:
     latency: front-end submit to final token, both engine legs and the
     queue wait included).
 
-    **Fault handling** — a decode engine whose ``submit`` raises during a
-    handoff is marked dead and the handoff *requeues* onto the next
-    engine (never dropped); a ``ValueError`` (typed handoff rejection)
+    **Transport** — every rows-carrying handoff is *delivered* through a
+    :class:`repro.serving.Transport` before the decode submit: the rows
+    move into the target engine's memory space (in-process pass-through,
+    blocking host staging, or async cross-mesh ``device_put`` — see
+    ``repro.serving.transport``) and the per-leg timings land in
+    ``stats().transfer`` as ``"<transport>/<leg>"`` histograms plus a
+    ``"<transport>/total"`` critical-path histogram, next to the PR-5
+    ``"handoff"`` queue-wait histogram.  ``transport`` accepts an
+    instance, a name (``"in_process"`` / ``"host_staged"`` /
+    ``"device_to_device"``), or ``"auto"`` (device-to-device when the
+    decode pool owns meshes distinct from prefill's, else in-process).
+    Stateless dispatch-only handoffs carry no rows and bypass the
+    transport.
+
+    **Fault handling** — a decode engine whose transport delivery or
+    ``submit`` raises during a handoff is marked dead and the handoff
+    *requeues* onto the next engine (never dropped — a failed delivery
+    leaves ``rows`` untouched, so the surviving route re-delivers the
+    exact same state); a ``ValueError`` (typed handoff rejection)
     propagates instead, since it means a mis-built pair.  When every
     decode engine is dead the front-end raises rather than spin.
 
@@ -348,10 +368,21 @@ class DisaggregatedEngine:
     def __init__(self, prefill: Optional[EngineCore],
                  decodes: List[EngineCore],
                  scheduler: Optional[Scheduler] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 transport: Optional[Any] = None):
         if not decodes:
             raise ValueError("need at least one decode engine")
         self.prefill = prefill
+        if transport is None:
+            transport = InProcessTransport()
+        elif transport == "auto":
+            transport = select_transport(prefill, decodes)
+        elif isinstance(transport, str):
+            transport = make_transport(transport)
+        elif not isinstance(transport, Transport):
+            raise TypeError(f"transport must be a Transport instance or "
+                            f"name, got {type(transport).__name__}")
+        self.transport = transport    # set once here, never rebound
         self.decodes = list(decodes)              # guarded-by: _tick_lock
         self.capacity = sum(e.capacity            # guarded-by: _tick_lock
                             for e in self.decodes)
@@ -662,8 +693,14 @@ class DisaggregatedEngine:
             eng = cands[(self._rr + k) % n]
             try:
                 if h.stateless:
+                    rec = None        # dispatch-only: no rows to move
                     eng.submit(h.request)
                 else:
+                    # deliver-then-submit: the transport moves the rows
+                    # into the target engine's memory space (a failed
+                    # delivery leaves them untouched, so the next
+                    # candidate re-delivers identical state)
+                    rec = self.transport.deliver(h, eng)
                     eng.submit(HandoffRequest(handoff=h, rid=h.rid,
                                               stream=h.stream))
             except ValueError:
@@ -673,20 +710,26 @@ class DisaggregatedEngine:
                 with self._lock:
                     self._handoffs.appendleft(h)
                 raise
-            # Engine died mid-handoff: *any* failure class here means the
-            # same thing — mark it dead and fail over to the next
-            # candidate.  Nothing is swallowed: the handoff is requeued by
-            # the caller (never-dropped invariant) and a fully-dead pool
-            # raises RuntimeError there.
+            # Engine (or its transport route) died mid-handoff: *any*
+            # failure class here means the same thing — mark it dead and
+            # fail over to the next candidate.  Nothing is swallowed: the
+            # handoff is requeued by the caller (never-dropped invariant)
+            # and a fully-dead pool raises RuntimeError there.
             # capslint: disable=exception-hygiene
             except Exception:
                 self._dead.add(eng)
                 continue
             self._rr = (self._rr + k + 1) % max(n, 1)
             with self._lock:
-                self._stats.transfer.setdefault(
-                    "handoff", LatencyHistogram()).record(
-                        max(self._clock() - h.t_handoff, 0.0))
+                tr = self._stats.transfer
+                tr.setdefault("handoff", LatencyHistogram()).record(
+                    max(self._clock() - h.t_handoff, 0.0))
+                if rec is not None:
+                    for leg, s in rec.legs.items():
+                        tr.setdefault(f"{rec.transport}/{leg}",
+                                      LatencyHistogram()).record(s)
+                    tr.setdefault(f"{rec.transport}/total",
+                                  LatencyHistogram()).record(rec.total_s)
             return True
         return False                  # caller requeues
 
@@ -700,7 +743,8 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
                                 List[Optional[Scheduler]]] = None,
                             scheduler: Optional[Scheduler] = None,
                             clock: Callable[[], float] = time.perf_counter,
-                            kernel_tune: Optional[bool] = None
+                            kernel_tune: Optional[bool] = None,
+                            transport: Optional[Any] = None
                             ) -> DisaggregatedEngine:
     """The standard LM disaggregation: one :class:`PrefillEngine` feeding
     ``n_decode`` :class:`DecodeEngine`\\ s of ``n_slots`` slots each,
@@ -708,7 +752,9 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
     scheduler instances are stateful and must never be shared) lets e.g.
     a :class:`repro.serving.ShardedScheduler` place each decode engine on
     its own mesh; ``scheduler`` is the front-end phase policy
-    (:class:`repro.serving.DisaggScheduler` by default)."""
+    (:class:`repro.serving.DisaggScheduler` by default); ``transport``
+    is the handoff delivery route (instance, name, or ``"auto"`` — see
+    :class:`repro.serving.Transport`)."""
     if decode_schedulers is None:
         decode_schedulers = [None] * n_decode
     if len(decode_schedulers) != n_decode:
@@ -722,4 +768,49 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
                         seed=seed, scheduler=decode_schedulers[i],
                         clock=clock, kernel_tune=kernel_tune)
            for i in range(n_decode)]
-    return DisaggregatedEngine(pre, dec, scheduler=scheduler, clock=clock)
+    return DisaggregatedEngine(pre, dec, scheduler=scheduler, clock=clock,
+                               transport=transport)
+
+
+def multihost_disaggregated_lm_engine(cfg, params, n_slots: int = 4,
+                                      max_len: int = 512, seed: int = 0,
+                                      n_decode: int = 1,
+                                      prefill_slots: Optional[int] = None,
+                                      scheduler: Optional[Scheduler] = None,
+                                      clock: Callable[[], float]
+                                      = time.perf_counter,
+                                      kernel_tune: Optional[bool] = None,
+                                      transport: Optional[Any] = "auto",
+                                      devices: Optional[List[Any]] = None
+                                      ) -> DisaggregatedEngine:
+    """Multi-host-shaped LM disaggregation: prefill and every decode
+    engine own **distinct meshes** over disjoint device groups
+    (:func:`repro.parallel.sharding.disjoint_submeshes`), so a cache
+    handoff genuinely crosses a device boundary and the transport does
+    real work.  Each engine replicates its own copy of ``params`` onto
+    its mesh and shards its slot caches there — the multi-host memory
+    model, emulated in one process (on a 1-device host the submeshes
+    degrade to shared-device placement, so the topology still runs
+    everywhere).
+
+    ``transport`` defaults to ``"auto"``, which selects by *actual*
+    placement: on a multi-device host the decode meshes are distinct
+    from prefill's, so rows move cross-mesh via
+    :class:`repro.serving.DeviceToDeviceTransport` (async dispatch,
+    overlapped with decode ticks); on a 1-device host the degenerate
+    submeshes share the one device and auto stays in-process (nothing
+    needs to move).
+    """
+    from repro.parallel.sharding import disjoint_submeshes
+
+    meshes = disjoint_submeshes(1 + n_decode, devices=devices)
+    pre = PrefillEngine(cfg, params, n_slots=prefill_slots or n_slots,
+                        max_len=max_len, seed=seed,
+                        scheduler=ShardedScheduler(meshes[0]), clock=clock,
+                        kernel_tune=kernel_tune)
+    dec = [DecodeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                        seed=seed, scheduler=ShardedScheduler(meshes[1 + i]),
+                        clock=clock, kernel_tune=kernel_tune)
+           for i in range(n_decode)]
+    return DisaggregatedEngine(pre, dec, scheduler=scheduler, clock=clock,
+                               transport=transport)

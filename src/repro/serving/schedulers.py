@@ -299,14 +299,25 @@ class DisaggScheduler(Scheduler):
     :class:`repro.serving.EngineCore` nothing sets ``handoff_depth``, a
     ``"handoff"`` answer is coerced to ``"mixed"``, and the scheduler
     degrades to interleaving-style prefill/decode separation.
+
+    ``overlap=True`` answers ``"mixed"`` instead of ``"handoff"`` when
+    the handoff queue is non-empty: transfer, prefill and decode all
+    advance in the same front-end tick.  This is the phase policy built
+    for an *async* :class:`repro.serving.Transport`
+    (``device_to_device``): delivery is dispatch-only, so draining the
+    queue inside a mixed tick costs the decodes nothing — a dedicated
+    handoff phase would just add dead ticks.  With a blocking transport
+    the default drain-first policy keeps the (expensive) transfer out
+    of the way of a whole-pool mixed tick.
     """
 
-    def __init__(self):
+    def __init__(self, overlap: bool = False):
         self.handoff_depth = 0
+        self.overlap = overlap
 
     def phase(self, n_queued: int, n_active: int) -> str:
         if self.handoff_depth > 0:
-            return "handoff"
+            return "mixed" if self.overlap else "handoff"
         if n_queued > 0 and n_active > 0:
             return "mixed"            # separate engines: advance both
         if n_queued > 0:

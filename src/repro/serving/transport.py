@@ -1,0 +1,286 @@
+"""Pluggable :class:`CacheHandoff` delivery between serving engines.
+
+PR 5's disaggregated handoff moved cache rows implicitly: the prefill
+engine gathered them, the front-end passed the pytree by reference, and
+the decode engine's scatter pulled whatever placement the rows happened
+to have.  That is the *in-process* transport — correct, but it hides the
+transfer on the decode critical path, which is exactly the bottleneck
+FastCaps avoids on FPGA by co-designing the whole pipeline instead of
+accelerating one stage.  This module makes the transfer a typed,
+measured, swappable stage:
+
+  * :class:`Transport` — the contract.  ``deliver(handoff, target)``
+    moves ``handoff.rows`` into the target engine's memory space and
+    returns a :class:`TransferRecord` with per-leg wall-clock timings.
+    Delivery is all-or-nothing: ``handoff.rows`` is reassigned only on
+    success, so a failed delivery never leaves a half-moved pytree and
+    the front-end can requeue the handoff onto a surviving route.
+    ``close()`` is idempotent; delivering through a closed transport
+    raises :class:`TransportError`.
+  * :class:`InProcessTransport` — today's behavior, made explicit: rows
+    pass through untouched (one ``pass`` leg, ~0 cost).  The right
+    choice when prefill and decode share a device.
+  * :class:`HostStagedTransport` — explicit device -> host -> device
+    staging with per-leg timing (``d2h``, ``h2d``), both legs blocking.
+    This is the portable route between engines with no common
+    addressable device space — and the yardstick the overlapped
+    transport is measured against: its cost sits fully on the decode
+    critical path.
+  * :class:`DeviceToDeviceTransport` — ``jax.device_put`` across meshes
+    with **async dispatch** (one ``dispatch`` leg): the copy is enqueued
+    onto the target placement and *not* blocked on, so it overlaps with
+    decode ticks already in flight.  The recorded critical-path cost is
+    dispatch only — handoff cost vanishes from the decode loop, the
+    CapsAcc point (throughput comes from keeping intermediate state
+    on-device between stages) made measurable.
+
+Per-leg timings land in ``EngineStats.transfer`` as
+``"<transport>/<leg>"`` histograms plus a ``"<transport>/total"``
+critical-path histogram when a :class:`repro.serving.DisaggregatedEngine`
+drives the transport (the PR-5 ``"handoff"`` queue-wait histogram is
+unchanged).  Every transport also keeps its own bounded ring of
+:class:`TransferRecord`\\ s and an optional ``on_transfer`` hook — the
+conformance suite's observability surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.models.lm import cache_row_nbytes
+
+__all__ = [
+    "TransferRecord", "Transport", "TransportError",
+    "InProcessTransport", "HostStagedTransport", "DeviceToDeviceTransport",
+    "TRANSPORTS", "make_transport", "select_transport", "target_mesh",
+]
+
+
+class TransportError(RuntimeError):
+    """A transport could not deliver a handoff (closed, or the move
+    itself failed).  The front-end treats it like an engine death: the
+    handoff requeues onto a surviving route, never dropped."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRecord:
+    """One delivered handoff, as the transport saw it.
+
+    ``legs`` maps leg name -> seconds of *critical-path* wall-clock (the
+    time ``deliver`` spent before returning — an async dispatch leg
+    records only the enqueue cost, which is the whole point).  ``nbytes``
+    is the payload size (0 for row-less done/stateless handoffs)."""
+
+    transport: str
+    rid: int
+    legs: Dict[str, float]
+    nbytes: int = 0
+
+    @property
+    def total_s(self) -> float:
+        """Critical-path seconds this delivery cost the front-end."""
+        return float(sum(self.legs.values()))
+
+
+def target_mesh(target: Any):
+    """The mesh a delivery target decodes on, or ``None``.
+
+    Engines expose placement through their scheduler
+    (:class:`repro.serving.ShardedScheduler` carries ``.mesh``); plain
+    single-device engines have no mesh and rows go to the default
+    device."""
+    return getattr(getattr(target, "scheduler", None), "mesh", None)
+
+
+class Transport:
+    """Base contract for moving :class:`repro.serving.CacheHandoff` rows
+    between a prefill engine and a decode engine.
+
+    Subclasses implement :meth:`_move`; everything else — close
+    semantics, record keeping, the all-or-nothing rows swap — is shared
+    so every implementation satisfies the same conformance suite.
+    ``clock`` is injectable for deterministic tests."""
+
+    name = "base"
+    #: leg names this transport records for a rows-carrying delivery, in
+    #: order — the conformance suite pins them as part of the contract
+    LEGS: tuple = ()
+
+    def __init__(self,
+                 on_transfer: Optional[Callable[[TransferRecord], None]] = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 keep_records: int = 256):
+        self._on_transfer = on_transfer
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._closed = False                        # guarded-by: _lock
+        self._records: Deque[TransferRecord] = (    # guarded-by: _lock
+            deque(maxlen=keep_records))
+
+    # -- contract ----------------------------------------------------------
+
+    def deliver(self, handoff: Any, target: Any) -> TransferRecord:
+        """Move ``handoff.rows`` into ``target``'s memory space.
+
+        Returns the :class:`TransferRecord`.  ``handoff.rows`` is
+        reassigned only when the whole move succeeded; on any failure
+        the handoff is exactly as it was, so the caller can retry it on
+        another route.  Raises :class:`TransportError` when closed."""
+        with self._lock:
+            if self._closed:
+                raise TransportError(
+                    f"{self.name} transport is closed; cannot deliver "
+                    f"handoff rid={getattr(handoff, 'rid', '?')}")
+        rows = getattr(handoff, "rows", None)
+        if rows is None:              # done/stateless handoff: nothing moves
+            legs: Dict[str, float] = {}
+            nbytes = 0
+        else:
+            nbytes = cache_row_nbytes(rows)
+            moved, legs = self._move(rows, target)
+            handoff.rows = moved      # all-or-nothing: only on success
+        rec = TransferRecord(transport=self.name,
+                             rid=int(getattr(handoff, "rid", -1)),
+                             legs=legs, nbytes=nbytes)
+        with self._lock:
+            self._records.append(rec)
+        if self._on_transfer is not None:
+            self._on_transfer(rec)
+        return rec
+
+    def _move(self, rows: Any, target: Any):
+        """Move one rows pytree; returns ``(moved_rows, legs)``.
+        Subclass hook — must not mutate ``rows`` in place."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Idempotent: after the first call every ``deliver`` raises
+        :class:`TransportError`; closing again is a no-op."""
+        with self._lock:
+            self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    @property
+    def records(self):
+        """Snapshot of the most recent :class:`TransferRecord`\\ s, in
+        delivery order (bounded ring, ``keep_records`` deep)."""
+        with self._lock:
+            return list(self._records)
+
+    def _target_shardings(self, rows: Any, target: Any):
+        """Replicated shardings on the target's mesh, or ``None`` when
+        the target has no mesh (rows then go to the default device)."""
+        mesh = target_mesh(target)
+        if mesh is None:
+            return None
+        from repro.parallel.sharding import replicated_shardings
+
+        return replicated_shardings(rows, mesh)
+
+
+class InProcessTransport(Transport):
+    """Rows stay exactly where the prefill engine left them — the
+    pre-transport behavior, now explicit and measured.  Correct whenever
+    both engines address the same devices (the decode engine's own
+    ``_place_rows`` still replicates onto its mesh at injection)."""
+
+    name = "in_process"
+    LEGS = ("pass",)
+
+    def _move(self, rows: Any, target: Any):
+        t0 = self._clock()
+        return rows, {"pass": max(self._clock() - t0, 0.0)}
+
+
+class HostStagedTransport(Transport):
+    """Explicit device -> host -> device staging, both legs blocking.
+
+    ``d2h`` copies every leaf to host memory (``np.asarray`` forces the
+    device sync); ``h2d`` puts the host copy onto the target's mesh (or
+    default device) and blocks until the copy lands.  The whole round
+    trip sits on the decode critical path — this is the portable
+    baseline the overlapped transport is measured against."""
+
+    name = "host_staged"
+    LEGS = ("d2h", "h2d")
+
+    def _move(self, rows: Any, target: Any):
+        t0 = self._clock()
+        host = jax.tree.map(np.asarray, rows)
+        t1 = self._clock()
+        shardings = self._target_shardings(host, target)
+        if shardings is None:
+            staged = jax.device_put(host)
+        else:
+            staged = jax.device_put(host, shardings)
+        staged = jax.block_until_ready(staged)
+        t2 = self._clock()
+        return staged, {"d2h": max(t1 - t0, 0.0), "h2d": max(t2 - t1, 0.0)}
+
+
+class DeviceToDeviceTransport(Transport):
+    """``jax.device_put`` across meshes, overlapped with decode ticks.
+
+    The copy is *dispatched* onto the target placement and not blocked
+    on: XLA's async copy engine moves the rows while the decode engines
+    keep ticking, and the scatter that eventually consumes them
+    synchronizes naturally.  The recorded ``dispatch`` leg is the only
+    cost the front-end pays — with this transport the handoff transfer
+    vanishes from the decode critical path (the acceptance yardstick in
+    ``BENCH_fig1_transport.json``)."""
+
+    name = "device_to_device"
+    LEGS = ("dispatch",)
+
+    def _move(self, rows: Any, target: Any):
+        t0 = self._clock()
+        shardings = self._target_shardings(rows, target)
+        if shardings is None:
+            moved = jax.device_put(rows)
+        else:
+            moved = jax.device_put(rows, shardings)
+        # deliberately no block_until_ready: the whole point is overlap
+        return moved, {"dispatch": max(self._clock() - t0, 0.0)}
+
+
+TRANSPORTS: Dict[str, type] = {
+    InProcessTransport.name: InProcessTransport,
+    HostStagedTransport.name: HostStagedTransport,
+    DeviceToDeviceTransport.name: DeviceToDeviceTransport,
+}
+
+
+def make_transport(kind: str, **kwargs: Any) -> Transport:
+    """Build a transport by name (``in_process`` / ``host_staged`` /
+    ``device_to_device``); kwargs forward to the constructor."""
+    try:
+        cls = TRANSPORTS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {kind!r}; choose from "
+            f"{sorted(TRANSPORTS)}") from None
+    return cls(**kwargs)
+
+
+def select_transport(prefill: Any, decodes: Any, **kwargs: Any) -> Transport:
+    """Auto-selection: device-to-device when any decode engine owns a
+    mesh distinct from the prefill engine's (the multi-host shape —
+    rows must actually move), else in-process (shared device space;
+    nothing to stage)."""
+    pre_mesh = target_mesh(prefill) if prefill is not None else None
+    for eng in decodes or ():
+        mesh = target_mesh(eng)
+        if mesh is not None and mesh is not pre_mesh:
+            return DeviceToDeviceTransport(**kwargs)
+    return InProcessTransport(**kwargs)

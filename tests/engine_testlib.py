@@ -7,6 +7,14 @@ model compiles, so engine/scheduler contracts can be exercised
 exhaustively (hundreds of randomized op sequences) in milliseconds; the
 instrumentation records exactly the quantities the contracts bound
 (slot high-water marks, admission order, compiled batch sizes).
+
+``ToyPrefillEngine`` / ``ToyDecodeEngine`` are the disaggregated pair of
+the same idea: prefill completes every request with a
+:class:`repro.serving.CacheHandoff` whose rows *encode the handoff
+identity* (:func:`toy_rows`), and decode verifies them bit-exactly on
+admission — so any :class:`repro.serving.Transport` that corrupts,
+drops, or reorders a leaf fails loudly without compiling a model.
+``FlakyTransport`` injects scripted delays and failures into that path.
 """
 
 from __future__ import annotations
@@ -15,7 +23,11 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.serving.core import EngineCore, SlotTask
+from repro.serving.disagg import CacheHandoff, HandoffRequest
+from repro.serving.transport import InProcessTransport, TransportError
 
 
 @dataclasses.dataclass
@@ -90,3 +102,111 @@ class ToyEngine(EngineCore):
     def _finalize(self, entry, latency_s: float) -> ToyCompletion:
         return ToyCompletion(rid=entry.request.rid, items=len(entry.tasks),
                              latency_s=latency_s)
+
+
+def toy_rows(rid: int, steps: int) -> Dict[str, np.ndarray]:
+    """Deterministic cache-row payload derived from the handoff identity
+    (mixed shapes/dtypes, like a real cache pytree), so the decode side
+    can verify delivery exactness without any shared state."""
+    return {"state": np.full((2, 3), float(rid * 1000 + steps), np.float32),
+            "tag": np.asarray([rid, steps], np.int32)}
+
+
+class ToyPrefillEngine(ToyEngine):
+    """Prefill half of a workload-free disaggregated pair.
+
+    Mirrors :class:`repro.serving.PrefillEngine`: slots live one
+    admission (the countdown is pinned to a single tick), the engine
+    never streams, and every request *completes at prefill* with a
+    :class:`repro.serving.CacheHandoff` — ``family="toy"``, ``left`` set
+    to the request's ``steps`` (the decode-side countdown), and rows
+    from :func:`toy_rows`.  Zero-task requests complete with the plain
+    identity :class:`ToyCompletion`, exactly like ``max_new_tokens <= 0``
+    on the real engine.
+    """
+
+    def _wants_stream(self, request: ToyRequest) -> bool:
+        return False                  # streaming starts on the decode side
+
+    def _expand(self, request: ToyRequest
+                ) -> Tuple[List[SlotTask], Dict[str, Any]]:
+        tasks, extra = super()._expand(request)
+        # a handoff is per-request: one slot task, one prefill tick
+        return [SlotTask(payload=1) for _ in tasks[:1]], extra
+
+    def _finalize(self, entry, latency_s: float):
+        if not entry.tasks:           # zero-task: identity completion
+            return super()._finalize(entry, latency_s)
+        req = entry.request
+        return CacheHandoff(
+            rid=req.rid, request=req, family="toy", arch_id="toy",
+            max_len=0, rows=toy_rows(req.rid, req.steps), tok=0, pos=0,
+            out=[], left=int(req.steps), stream=bool(req.stream),
+            cls=self._request_class(req))
+
+
+class ToyDecodeEngine(ToyEngine):
+    """Decode half of the pair: admits :class:`HandoffRequest`\\ s whose
+    rows it *verifies bit-exactly* against :func:`toy_rows` — tree keys,
+    shapes, dtypes, values — raising ``ValueError`` on any mismatch (the
+    same typed-rejection contract as ``DecodeEngine.validate_handoff``,
+    which the front-end propagates as a mis-built pair).  A verified
+    handoff counts down ``left`` ticks streaming one item per step."""
+
+    def _expand(self, request: Any
+                ) -> Tuple[List[SlotTask], Dict[str, Any]]:
+        if not isinstance(request, HandoffRequest):
+            return super()._expand(request)
+        h = request.handoff
+        if h.family != "toy":
+            raise ValueError(
+                f"toy decode engine got family {h.family!r} handoff")
+        if not h.done:
+            want = toy_rows(h.rid, h.left)
+            got = h.rows if isinstance(h.rows, dict) else {}
+            for key, w in want.items():
+                g = np.asarray(got.get(key))
+                if (g.shape != w.shape or g.dtype != w.dtype
+                        or not np.array_equal(g, w)):
+                    raise ValueError(
+                        f"handoff rid={h.rid}: rows leaf {key!r} corrupted "
+                        f"in transit ({g.dtype}{g.shape} vs "
+                        f"{w.dtype}{w.shape})")
+        return [SlotTask(payload=max(int(h.left), 1))], {}
+
+    def _request_class(self, request: Any) -> str:
+        if isinstance(request, HandoffRequest):
+            return request.handoff.cls
+        return super()._request_class(request)
+
+
+class FlakyTransport(InProcessTransport):
+    """In-process delivery with scripted synthetic delays and injected
+    failures — the fault/latency harness for transport property and
+    failover tests.
+
+    ``fail_on`` holds 0-based delivery-attempt indices that raise
+    :class:`repro.serving.TransportError` (the front-end then marks the
+    target engine dead and fails over); ``delays`` cycles into the
+    recorded ``pass`` leg as *synthetic* seconds — recorded, never
+    slept, so a property suite can sweep wide delay distributions for
+    free while the histograms still see them."""
+
+    name = "flaky"
+    LEGS = ("pass",)
+
+    def __init__(self, delays=(), fail_on=(), **kwargs):
+        super().__init__(**kwargs)
+        self.delays = list(delays)
+        self.fail_on = set(fail_on)
+        self.calls = 0                              # guarded-by: _lock
+
+    def _move(self, rows: Any, target: Any):
+        with self._lock:
+            i = self.calls
+            self.calls += 1
+        if i in self.fail_on:
+            raise TransportError(f"injected failure on delivery {i}")
+        delay = float(self.delays[i % len(self.delays)]) if self.delays \
+            else 0.0
+        return rows, {"pass": delay}

@@ -106,6 +106,45 @@ class TestLockDiscipline:
         kept, _ = lint(tmp_path, src, LockDisciplineChecker())
         assert kept == []
 
+    def test_transport_shaped_violation_exact_location(self, tmp_path):
+        """Transport lock discipline is policed like any engine's: the
+        closed flag and record ring are ``# guarded-by:`` annotated
+        shared state, so a deliver() mutating them outside the lock is a
+        planted error at an exact location — the shape the real
+        ``repro.serving.transport`` base class must never regress to."""
+        src = """\
+        import threading
+
+
+        class Transport:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._closed = False              # guarded-by: _lock
+                self._records = []                # guarded-by: _lock
+
+            def deliver(self, handoff, target):
+                if self._closed:
+                    raise RuntimeError("closed")
+                self._records.append(handoff)     # line 13: unguarded
+
+            def deliver_ok(self, handoff, target):
+                with self._lock:
+                    self._records.append(handoff)
+
+            def close(self):
+                self._closed = True               # line 20: unguarded
+
+            def close_ok(self):
+                with self._lock:
+                    self._closed = True
+        """
+        kept, _ = lint(tmp_path, src, LockDisciplineChecker())
+        assert ("lock-discipline", "unguarded-mutation", "mod.py", 13) \
+            in locations(kept)
+        assert ("lock-discipline", "unguarded-mutation", "mod.py", 20) \
+            in locations(kept)
+        assert len([f for f in kept if f.code == "unguarded-mutation"]) == 2
+
     def test_unannotated_field_is_not_policed(self, tmp_path):
         src = """\
         class Engine:

@@ -10,10 +10,12 @@ Covers the tentpole guarantees:
     boundary, and the done event carries the end-to-end completion;
   * fault injection — a decode engine rejects a mismatched handoff
     (dtype/shape/model-family) with a clear error before any state
-    changes, and a decode engine killed mid-handoff causes a requeue +
-    failover, never a dropped request;
+    changes, and a decode engine killed mid-handoff — or a transport
+    route erroring mid-transfer — causes a requeue + failover onto a
+    surviving route, never a dropped request, under every transport;
   * stats — per-phase queue-depth and handoff transfer-latency
-    histograms populate and aggregate.
+    histograms (including the per-transport per-leg keys) populate and
+    aggregate.
 """
 
 import os
@@ -24,13 +26,16 @@ import jax
 import numpy as np
 import pytest
 
+from engine_testlib import FlakyTransport
 from repro.models import lm
 from repro.models.common import LMConfig, SSMConfig, XLSTMConfig
 from repro.serving import (CacheHandoff, DecodeEngine, DisaggregatedEngine,
                            HandoffRequest, PrefillEngine, Request,
-                           ServeEngine, disaggregated_lm_engine)
+                           ServeEngine, disaggregated_lm_engine,
+                           multihost_disaggregated_lm_engine)
 
 PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+TRANSPORTS = ["in_process", "host_staged", "device_to_device"]
 
 
 def tiny(family="dense", **kw):
@@ -74,6 +79,45 @@ class TestExactness:
         for i, p in enumerate(PROMPTS):
             want = ref.generate([p], max_new_tokens=4)[0]
             assert comps[i].tokens == want, (family, i)
+
+    @pytest.mark.parametrize("family", ["dense", "vlm", "ssm", "hybrid"])
+    @pytest.mark.parametrize("transport", ["host_staged",
+                                           "device_to_device"])
+    def test_matches_generate_under_every_transport(self, family, transport):
+        """The acceptance matrix: every moving transport variant stays
+        bit-exact vs per-request generation for every cache family (the
+        in-process default is the matrix's third row, pinned by
+        ``test_matches_per_request_generate`` above)."""
+        cfg = cfg_for(family)
+        params = lm.init(cfg, jax.random.key(0))
+        eng = disaggregated_lm_engine(cfg, params, n_slots=2, max_len=32,
+                                      n_decode=2, transport=transport)
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+        reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                for i, p in enumerate(PROMPTS)]
+        comps = {c.rid: c for c in eng.serve(reqs)}
+        for i, p in enumerate(PROMPTS):
+            want = ref.generate([p], max_new_tokens=4)[0]
+            assert comps[i].tokens == want, (family, transport, i)
+        st = eng.stats()
+        assert st.transfer[f"{transport}/total"].count == len(PROMPTS)
+
+    def test_multihost_distinct_meshes_exact(self):
+        """Prefill and decode engines on their own meshes (degenerate
+        shared-device submeshes on a 1-device host — the 2-device case
+        runs in the subprocess test below): still bit-exact, with the
+        auto-selected transport."""
+        cfg = cfg_for("dense")
+        params = lm.init(cfg, jax.random.key(0))
+        eng = multihost_disaggregated_lm_engine(cfg, params, n_slots=2,
+                                                max_len=32, n_decode=1)
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+        reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                for i, p in enumerate(PROMPTS)]
+        comps = {c.rid: c for c in eng.serve(reqs)}
+        for i, p in enumerate(PROMPTS):
+            assert comps[i].tokens == ref.generate([p],
+                                                   max_new_tokens=4)[0]
 
     def test_zero_new_tokens_identity(self):
         cfg = cfg_for("dense")
@@ -135,6 +179,10 @@ class TestStats:
         assert set(st.depth) >= {"prefill", "handoff", "decode"}
         assert st.depth["handoff"].peak >= 1
         assert st.transfer["handoff"].count == 3   # one transfer per request
+        # per-transport per-leg critical-path histograms, one entry per
+        # delivered handoff (default transport: in_process)
+        assert st.transfer["in_process/pass"].count == 3
+        assert st.transfer["in_process/total"].count == 3
         assert st.latency_summary() and st.depth_summary() \
             and st.transfer_summary()
 
@@ -216,7 +264,7 @@ class TestFailover:
     """Fault injection: a decode engine killed mid-handoff must cause a
     requeue onto another engine, never a dropped request."""
 
-    def _pair(self, kill_first):
+    def _pair(self, kill_first, transport=None):
         cfg = cfg_for("dense")
         params = lm.init(cfg, jax.random.key(0))
         pre = PrefillEngine(cfg, params, n_slots=2, max_len=32)
@@ -226,10 +274,15 @@ class TestFailover:
             def boom(request):
                 raise RuntimeError("decode engine killed mid-handoff")
             decs[0].submit = boom
-        return cfg, params, DisaggregatedEngine(pre, decs)
+        return cfg, params, DisaggregatedEngine(pre, decs,
+                                                transport=transport)
 
-    def test_killed_engine_fails_over(self):
-        cfg, params, eng = self._pair(kill_first=True)
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_killed_engine_fails_over(self, transport):
+        """An engine killed mid-handoff fails over under every transport
+        — including the moving ones, whose delivery has already happened
+        when the submit dies (the rows re-deliver to the survivor)."""
+        cfg, params, eng = self._pair(kill_first=True, transport=transport)
         rid = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
         comps = eng.run_until_idle()
         assert [c.rid for c in comps] == [rid]      # requeued, not dropped
@@ -237,6 +290,27 @@ class TestFailover:
         ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
         assert comps[0].tokens == ref.generate([[1, 2, 3]],
                                                max_new_tokens=4)[0]
+
+    def test_transport_error_mid_transfer_requeues_and_survives(self):
+        """A transport route erroring mid-transfer behaves exactly like
+        a killed engine: the target is marked dead, the handoff requeues
+        onto a surviving route, tokens stay exact, and the failed
+        delivery leaves no partial state (rows re-deliver untouched)."""
+        cfg = cfg_for("dense")
+        params = lm.init(cfg, jax.random.key(0))
+        flaky = FlakyTransport(fail_on={0})         # first delivery dies
+        eng = disaggregated_lm_engine(cfg, params, n_slots=2, max_len=32,
+                                      n_decode=2, transport=flaky)
+        rid = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+        comps = eng.run_until_idle()
+        assert [c.rid for c in comps] == [rid]      # requeued, not dropped
+        assert len(eng._dead) == 1                  # the failed route's target
+        assert flaky.calls == 2                     # failed + surviving
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+        assert comps[0].tokens == ref.generate([[1, 2, 3]],
+                                               max_new_tokens=4)[0]
+        st = eng.stats()
+        assert st.transfer["flaky/total"].count == 1   # only the success
 
     def test_no_decode_starvation_under_sustained_arrivals(self):
         """A new request arriving every front-end tick must not stop the
@@ -346,6 +420,57 @@ print("DISAGG_SHARDED_OK")
     r = subprocess.run([sys.executable, "-c", script], env=env,
                        capture_output=True, text=True, timeout=600)
     assert "DISAGG_SHARDED_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_transport_failover_sharded_decode_on_2device_cpu_mesh():
+    """Killed-mid-handoff coverage for each transport on a REAL 2-device
+    multihost topology (subprocess): prefill and both decode engines own
+    distinct single-device meshes, the first decode engine dies at
+    submit, and every transport must fail the handoff over to the
+    engine on the *other* device with tokens staying exact — the rows
+    genuinely re-deliver across a device boundary."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+from repro.models import lm
+from repro.models.common import LMConfig
+from repro.parallel.sharding import disjoint_submeshes
+from repro.serving import (DecodeEngine, DisaggregatedEngine, PrefillEngine,
+                           Request, ServeEngine, ShardedScheduler)
+
+cfg = LMConfig(arch_id="tiny-dense", family="dense", n_layers=2, d_model=32,
+               n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+               compute_dtype="float32", param_dtype="float32")
+params = lm.init(cfg, jax.random.key(0))
+ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+want = ref.generate([[1, 2, 3]], max_new_tokens=4)[0]
+for transport in ["in_process", "host_staged", "device_to_device"]:
+    meshes = disjoint_submeshes(2)        # prefill dev0, survivor dev1
+    pre = PrefillEngine(cfg, params, n_slots=2, max_len=32,
+                        scheduler=ShardedScheduler(meshes[0]))
+    decs = [DecodeEngine(cfg, params, n_slots=2, max_len=32,
+                         scheduler=ShardedScheduler(meshes[i % 2]))
+            for i in range(2)]
+    def boom(request):
+        raise RuntimeError("decode engine killed mid-handoff")
+    decs[0].submit = boom
+    eng = DisaggregatedEngine(pre, decs, transport=transport)
+    rid = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    comps = eng.run_until_idle()
+    assert [c.rid for c in comps] == [rid], transport
+    assert eng._dead == {decs[0]}, transport
+    assert comps[0].tokens == want, (transport, comps[0].tokens, want)
+    st = eng.stats()
+    assert st.transfer[transport + "/total"].count == 1, transport
+    print(transport, "OK")
+print("TRANSPORT_FAILOVER_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "TRANSPORT_FAILOVER_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_image_dispatch_pool():

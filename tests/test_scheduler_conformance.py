@@ -50,6 +50,10 @@ SCHEDULERS = {
     "sharded": _sharded,
     "interleave": lambda: InterleavingScheduler(decode_ratio=1),
     "disagg": DisaggScheduler,
+    # overlap mode answers "mixed" while handoffs are queued (async
+    # transports drain them alongside decode ticks) — same vocabulary,
+    # same conformance surface
+    "disagg_overlap": lambda: DisaggScheduler(overlap=True),
     # uniform-priority traffic must degrade to plain FIFO (select ties
     # break first-come, preempt never fires), so every shared invariant
     # — including admission order — holds unchanged

@@ -11,6 +11,16 @@ sequences instead of the hand-picked scenarios of ``test_serving_api.py``
   * completion exactness: every submitted request completes exactly
     once after a full drain, with the right task count.
 
+The disaggregated section drives the workload-free toy pair
+(``ToyPrefillEngine -> FlakyTransport -> ToyDecodeEngine``) through the
+same random op sequences with random *transport* delay/failure
+injection: delivery interleavings may park handoffs anywhere between
+the engines, routes may die mid-transfer, and the StreamEvent ordering
++ EngineStats monotonicity contracts (now including the per-transport
+per-leg ``transfer`` histograms) must hold regardless — with every
+handoff's rows arriving bit-exact (the toy decode engine verifies them
+against the handoff identity on admission).
+
 The invariant harness (``run_ops``) is plain code shared with
 deterministic regression cases, so the contract stays exercised even
 where hypothesis is absent (tier-1 CI intentionally omits it and these
@@ -19,8 +29,10 @@ serving-conformance CI job installs hypothesis and runs the randomized
 sequences on a forced 2-device host.
 """
 
-from engine_testlib import ToyEngine, ToyRequest
+from engine_testlib import (FlakyTransport, ToyDecodeEngine,
+                            ToyEngine, ToyPrefillEngine, ToyRequest)
 from hypothesis_compat import given, settings, st
+from repro.serving import DisaggregatedEngine
 
 
 def assert_monotone(prev, cur):
@@ -38,6 +50,10 @@ def assert_monotone(prev, cur):
         h2 = cur.depth[phase]
         assert h2.count >= h1.count
         assert h2.peak >= h1.peak
+        assert all(b >= a for a, b in zip(h1.counts, h2.counts))
+    for stage, h1 in prev.transfer.items():
+        h2 = cur.transfer[stage]
+        assert h2.count >= h1.count
         assert all(b >= a for a, b in zip(h1.counts, h2.counts))
 
 
@@ -92,8 +108,96 @@ def run_ops(ops):
     return eng
 
 
+def run_disagg_ops(ops, delays=(), fail_on=()):
+    """Drive a toy disaggregated pair (prefill -> FlakyTransport ->
+    decode pool) through one op sequence, checking stats monotonicity
+    (including the per-transport per-leg transfer histograms) at every
+    step and the stream/completion contracts after a full drain.
+
+    ``delays`` are synthetic per-delivery leg seconds (recorded into the
+    histograms, never slept); ``fail_on`` are delivery-attempt indices
+    that die mid-transfer — each triggered failure kills one route, so
+    the pool is sized ``len(fail_on) + 1`` and a surviving route always
+    exists (the never-dropped invariant is asserted, not assumed)."""
+    fail_on = set(fail_on)
+    transport = FlakyTransport(delays=delays, fail_on=fail_on)
+    eng = DisaggregatedEngine(
+        ToyPrefillEngine(capacity=2),
+        [ToyDecodeEngine(capacity=2) for _ in range(len(fail_on) + 1)],
+        transport=transport)
+    completions = []
+    events = []
+    expected = {}                     # rid -> (n_tasks, streamed?)
+    prev = eng.stats()
+    for op in ops:
+        if op[0] == "submit":
+            _, n_tasks, steps, stream = op
+            rid = eng.submit(ToyRequest(n_tasks=n_tasks, steps=steps,
+                                        stream=stream))
+            expected[rid] = (min(n_tasks, 1), stream)   # handoffs are
+            #                                             per-request
+        elif op[0] == "tick":
+            eng.tick()
+        elif op[0] == "poll":
+            completions += eng.poll()
+        elif op[0] == "stream":
+            events += eng.poll(stream=True)
+        cur = eng.stats()
+        assert_monotone(prev, cur)
+        prev = cur
+
+    completions += eng.run_until_idle()
+    events += eng.poll(stream=True)
+    completions += eng.poll()
+    assert eng.n_pending == 0
+
+    # completion contract: everyone completes exactly once — requeues
+    # and dead routes may reorder delivery but never drop or duplicate
+    assert sorted(c.rid for c in completions) == sorted(expected)
+    for c in completions:
+        assert c.items == expected[c.rid][0]
+    st_ = eng.stats()
+    assert st_.completed == len(expected)
+
+    # transfer contract: one handoff queue-wait and one per-leg record
+    # per *successful* delivery; each triggered failure killed exactly
+    # one route and cost exactly one extra delivery attempt
+    n_handoffs = sum(1 for n, _ in expected.values() if n >= 1)
+    if n_handoffs:
+        assert st_.transfer["handoff"].count == n_handoffs
+        assert st_.transfer["flaky/pass"].count == n_handoffs
+        assert st_.transfer["flaky/total"].count == n_handoffs
+    n_failed = sum(1 for i in fail_on if i < transport.calls)
+    assert transport.calls == n_handoffs + n_failed
+    assert len(eng._dead) == n_failed
+
+    # stream contract: ordered per rid across the handoff boundary,
+    # one done event last, opt-in only
+    per_rid = {}
+    for ev in events:
+        per_rid.setdefault(ev.rid, []).append(ev)
+    for rid, evs in per_rid.items():
+        assert expected[rid][1], f"rid {rid} streamed without opting in"
+        assert [e.seq for e in evs] == list(range(len(evs)))
+        assert [e.done for e in evs] == [False] * (len(evs) - 1) + [True]
+        assert evs[-1].completion.rid == rid
+    for rid, (n_tasks, stream) in expected.items():
+        if stream and n_tasks >= 1:   # zero-task requests finish at
+            #                           prefill: no decode, no stream
+            assert rid in per_rid, f"streaming rid {rid} emitted nothing"
+    return eng
+
+
 OPS = st.one_of(
     st.tuples(st.just("submit"), st.integers(min_value=0, max_value=4),
+              st.integers(min_value=1, max_value=3), st.booleans()),
+    st.tuples(st.just("tick")),
+    st.tuples(st.just("poll")),
+    st.tuples(st.just("stream")),
+)
+
+DISAGG_OPS = st.one_of(
+    st.tuples(st.just("submit"), st.integers(min_value=0, max_value=1),
               st.integers(min_value=1, max_value=3), st.booleans()),
     st.tuples(st.just("tick")),
     st.tuples(st.just("poll")),
@@ -118,6 +222,20 @@ def test_burst_submit_then_drain(reqs):
     run_ops(ops)
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.lists(DISAGG_OPS, max_size=30),
+       st.lists(st.floats(min_value=0.0, max_value=0.25, allow_nan=False,
+                          allow_infinity=False),
+                max_size=5),
+       st.sets(st.integers(min_value=0, max_value=20), max_size=3))
+def test_random_disagg_sequences_with_flaky_transport(ops, delays, fail_on):
+    """Random op sequences x random transport delay/failure injection:
+    handoffs may be parked, delayed arbitrarily, or lose their route
+    mid-transfer at any delivery interleaving — ordering, monotonicity
+    (incl. per-leg transfer histograms), and delivery exactness hold."""
+    run_disagg_ops(list(ops), delays=delays, fail_on=fail_on)
+
+
 def test_deterministic_sequences_smoke():
     """The same invariant harness on fixed sequences, so the contract is
     exercised even where hypothesis is absent."""
@@ -126,3 +244,20 @@ def test_deterministic_sequences_smoke():
              ("tick",), ("tick",), ("stream",)])
     run_ops([("tick",), ("poll",), ("stream",)])
     run_ops([("submit", 1, 3, True), ("submit", 3, 1, False), ("tick",)])
+
+
+def test_deterministic_disagg_sequences_smoke():
+    """Fixed disagg sequences through the same harness: a clean run, a
+    first-delivery transport failure, a mid-run failure with synthetic
+    delays, and an empty-engine drain — exercised even without
+    hypothesis."""
+    run_disagg_ops([("submit", 1, 2, True), ("tick",), ("tick",),
+                    ("stream",), ("submit", 1, 1, False), ("tick",),
+                    ("poll",), ("submit", 0, 1, True), ("tick",)])
+    run_disagg_ops([("submit", 1, 2, False), ("tick",), ("tick",)],
+                   fail_on={0})
+    run_disagg_ops([("submit", 1, 1, True), ("submit", 1, 3, True),
+                    ("tick",), ("submit", 1, 2, False), ("tick",),
+                    ("stream",), ("tick",)],
+                   delays=[0.01, 0.2], fail_on={1, 3})
+    run_disagg_ops([("tick",), ("poll",), ("stream",)])

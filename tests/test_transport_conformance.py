@@ -1,0 +1,257 @@
+"""One contract suite for EVERY Transport implementation.
+
+Handoff delivery grew from an implicit by-reference pass into three
+routes (in-process, host-staged, cross-mesh device-to-device); this
+file is the single parametrized source of their shared contract, so a
+new transport cannot drift without failing here:
+
+  * delivery exactness — every ``CacheHandoff`` rows leaf arrives with
+    identical tree structure, shape, dtype, and values, on plain and
+    mesh-owning targets alike;
+  * all-or-nothing — a rows-less (done) handoff passes through with no
+    legs and no payload; delivery never mutates the handoff on failure;
+  * ordering — ``records`` and the ``on_transfer`` hook observe
+    deliveries in submission order;
+  * per-leg timing — each transport records exactly its declared
+    ``LEGS`` with non-negative critical-path seconds (pinned with an
+    injected deterministic clock);
+  * idempotent close — ``close()`` twice is a no-op; delivering through
+    a closed transport raises ``TransportError``.
+
+The end-to-end section drives each transport through a full
+``DisaggregatedEngine`` tick loop over the workload-free toy pair
+(``ToyPrefillEngine`` -> ``ToyDecodeEngine``), whose rows encode the
+handoff identity — no model compiles, yet a transport that corrupted a
+single leaf would raise on decode admission.  CI additionally runs this
+suite on a forced 2-device CPU host so mesh-target placement is real.
+"""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from engine_testlib import (ToyCompletion, ToyDecodeEngine,
+                            ToyPrefillEngine, ToyRequest)
+from repro.launch.mesh import make_mesh
+from repro.serving import (DeviceToDeviceTransport, DisaggregatedEngine,
+                           HostStagedTransport, InProcessTransport,
+                           TransportError, make_transport)
+from repro.serving.disagg import CacheHandoff
+
+TRANSPORTS = {
+    "in_process": InProcessTransport,
+    "host_staged": HostStagedTransport,
+    "device_to_device": DeviceToDeviceTransport,
+}
+
+
+@pytest.fixture(params=sorted(TRANSPORTS))
+def transport_name(request):
+    return request.param
+
+
+def make_rows(rid=0):
+    """A rows pytree with the variety a real cache handoff has: nested
+    containers, mixed float/int/bool dtypes, jax and numpy leaves."""
+    return {
+        "f32": np.arange(12, dtype=np.float32).reshape(3, 4) + rid,
+        "i32": np.asarray([[rid, 7], [3, 4]], np.int32),
+        "bf16": jnp.asarray([0.5, 1.5, float(rid)], jnp.bfloat16),
+        "nested": {"flags": np.asarray([True, False]),
+                   "units": [np.full((2, 2, 2), rid, np.float32)]},
+    }
+
+
+def make_handoff(rid=0, rows="make", done=False):
+    return CacheHandoff(
+        rid=rid, request=ToyRequest(rid=rid, steps=2), family="toy",
+        arch_id="toy", max_len=0,
+        rows=None if rows is None else make_rows(rid),
+        tok=0, pos=0, out=[], left=2, done=done)
+
+
+def plain_target():
+    return types.SimpleNamespace(scheduler=None)
+
+
+def mesh_target():
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    return types.SimpleNamespace(scheduler=types.SimpleNamespace(mesh=mesh))
+
+
+def assert_rows_equal(got, want):
+    got_leaves, got_def = jax.tree.flatten(got)
+    want_leaves, want_def = jax.tree.flatten(want)
+    assert got_def == want_def
+    for g, w in zip(got_leaves, want_leaves):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.shape == w.shape
+        assert g.dtype == w.dtype
+        assert np.array_equal(g, w)
+
+
+class TestDeliveryExactness:
+    @pytest.mark.parametrize("target_kind", ["plain", "mesh"])
+    def test_every_leaf_exact(self, transport_name, target_kind):
+        t = TRANSPORTS[transport_name]()
+        target = plain_target() if target_kind == "plain" else mesh_target()
+        h = make_handoff(rid=3)
+        want = make_rows(rid=3)
+        rec = t.deliver(h, target)
+        assert_rows_equal(h.rows, want)
+        assert rec.transport == transport_name
+        assert rec.rid == 3
+        assert rec.nbytes > 0
+
+    def test_mesh_placement(self, transport_name):
+        # moving transports commit rows onto the target's mesh devices;
+        # in-process leaves placement alone by contract
+        if transport_name == "in_process":
+            pytest.skip("in-process never moves rows")
+        t = TRANSPORTS[transport_name]()
+        target = mesh_target()
+        mesh_devs = set(target.scheduler.mesh.devices.flat)
+        h = make_handoff()
+        t.deliver(h, target)
+        for leaf in jax.tree.leaves(h.rows):
+            assert isinstance(leaf, jax.Array)
+            assert set(leaf.devices()) <= mesh_devs
+
+    def test_in_process_is_passthrough(self):
+        t = InProcessTransport()
+        h = make_handoff()
+        before = h.rows
+        t.deliver(h, plain_target())
+        assert h.rows is before
+
+    def test_done_handoff_moves_nothing(self, transport_name):
+        t = TRANSPORTS[transport_name]()
+        h = make_handoff(rows=None, done=True)
+        rec = t.deliver(h, plain_target())
+        assert h.rows is None
+        assert rec.legs == {}
+        assert rec.nbytes == 0
+        assert rec.total_s == 0.0
+
+
+class TestOrdering:
+    def test_records_and_hook_in_delivery_order(self, transport_name):
+        seen = []
+        t = TRANSPORTS[transport_name](on_transfer=seen.append)
+        for rid in range(5):
+            t.deliver(make_handoff(rid=rid), plain_target())
+        assert [r.rid for r in t.records] == list(range(5))
+        assert [r.rid for r in seen] == list(range(5))
+        assert seen == t.records
+
+    def test_record_ring_is_bounded(self, transport_name):
+        t = TRANSPORTS[transport_name](keep_records=3)
+        for rid in range(7):
+            t.deliver(make_handoff(rid=rid), plain_target())
+        assert [r.rid for r in t.records] == [4, 5, 6]
+
+
+class TestTiming:
+    def test_declared_legs_recorded(self, transport_name):
+        t = TRANSPORTS[transport_name]()
+        rec = t.deliver(make_handoff(), plain_target())
+        assert tuple(rec.legs) == t.LEGS
+        assert all(s >= 0.0 for s in rec.legs.values())
+        assert rec.total_s == pytest.approx(sum(rec.legs.values()))
+
+    def test_legs_measure_the_injected_clock(self, transport_name):
+        # a clock that advances exactly 1s per reading pins each leg to
+        # 1.0 — the timing hook is the clock, not wall time
+        ticks = iter(range(100))
+
+        def clock():
+            return float(next(ticks))
+
+        t = TRANSPORTS[transport_name](clock=clock)
+        rec = t.deliver(make_handoff(), plain_target())
+        assert rec.legs == {leg: 1.0 for leg in t.LEGS}
+        assert rec.total_s == pytest.approx(float(len(t.LEGS)))
+
+
+class TestClose:
+    def test_close_is_idempotent_and_fatal_to_deliver(self, transport_name):
+        t = TRANSPORTS[transport_name]()
+        t.deliver(make_handoff(), plain_target())
+        t.close()
+        t.close()                     # idempotent: second close is a no-op
+        assert t.closed
+        with pytest.raises(TransportError):
+            t.deliver(make_handoff(rid=1), plain_target())
+        assert [r.rid for r in t.records] == [0]   # failed delivery unrecorded
+
+    def test_make_transport_names(self, transport_name):
+        assert type(make_transport(transport_name)) \
+            is TRANSPORTS[transport_name]
+        with pytest.raises(ValueError):
+            make_transport("carrier_pigeon")
+
+
+class TestEndToEndToyDisagg:
+    """Full front-end tick loop, no real prefill: the toy decode engine
+    re-derives every expected rows leaf from the handoff identity and
+    raises on any transit corruption, so completions arriving at all IS
+    the exactness assertion."""
+
+    def make_engine(self, transport_name, n_decode=2):
+        return DisaggregatedEngine(
+            ToyPrefillEngine(capacity=2),
+            [ToyDecodeEngine(capacity=2) for _ in range(n_decode)],
+            transport=make_transport(transport_name))
+
+    def test_served_exactly_with_per_leg_stats(self, transport_name):
+        eng = self.make_engine(transport_name)
+        for i in range(5):
+            eng.submit(ToyRequest(steps=1 + i % 3, stream=bool(i % 2)))
+        comps = eng.run_until_idle()
+        assert sorted(c.rid for c in comps) == list(range(5))
+        assert all(isinstance(c, ToyCompletion) for c in comps)
+        st = eng.stats()
+        assert st.completed == 5
+        assert st.transfer["handoff"].count == 5
+        assert st.transfer[f"{transport_name}/total"].count == 5
+        for leg in eng.transport.LEGS:
+            assert st.transfer[f"{transport_name}/{leg}"].count == 5
+
+    def test_stream_events_ordered_across_boundary(self, transport_name):
+        eng = self.make_engine(transport_name)
+        rids = [eng.submit(ToyRequest(steps=3, stream=True))
+                for _ in range(4)]
+        eng.run_until_idle()
+        seqs = {}
+        for ev in eng.poll(stream=True):
+            assert ev.seq == seqs.get(ev.rid, -1) + 1
+            seqs[ev.rid] = ev.seq
+        assert set(seqs) == set(rids)
+
+    def test_overlap_scheduler_serves_exactly(self, transport_name):
+        """DisaggScheduler(overlap=True) answers "mixed" while handoffs
+        are queued, so transfers drain alongside decode ticks — the
+        intended pairing for the async d2d transport; results must not
+        change under any transport."""
+        from repro.serving import DisaggScheduler
+
+        eng = DisaggregatedEngine(
+            ToyPrefillEngine(capacity=2),
+            [ToyDecodeEngine(capacity=2) for _ in range(2)],
+            scheduler=DisaggScheduler(overlap=True),
+            transport=make_transport(transport_name))
+        comps = eng.serve([ToyRequest(steps=2, rid=i) for i in range(4)])
+        assert sorted(c.rid for c in comps) == list(range(4))
+        assert eng.stats().transfer[f"{transport_name}/total"].count == 4
+
+    def test_transport_records_one_per_handoff(self, transport_name):
+        eng = self.make_engine(transport_name)
+        for _ in range(3):
+            eng.submit(ToyRequest(steps=2))
+        eng.run_until_idle()
+        recs = eng.transport.records
+        assert len(recs) == 3
+        assert all(r.nbytes > 0 for r in recs)
