@@ -132,6 +132,140 @@ def run_transport(tiny: bool = False) -> dict:
     return out
 
 
+def run_paged(tiny: bool = False) -> dict:
+    """Paged-KV capacity benchmark: dense slot cache vs the block-paged
+    pool of ``repro.serving.pages`` at the **same cache memory** (equal
+    KV rows).  A dense engine must reserve ``max_len`` rows per slot, so
+    its resident capacity is fixed at ``n_slots``; the paged engine
+    allocates per 16-token page as sequences grow, so the same rows hold
+    several times more concurrent requests (the ``capacity_ratio``
+    headline).  Both engines serve the identical request mix and the
+    paged tokens are asserted bit-identical to dense.
+
+    A second paged run with a shared system prompt measures the
+    content-addressed prefix cache: the shared span is prefilled once
+    and every later request pins the cached pages, so
+    ``prefill_tokens_shared`` drops below the no-reuse total by
+    ``prefix_tokens_saved`` (asserted > 0, with ``prefix_hits`` /
+    ``prefix_pages_hit`` from the engine's page counters).
+    """
+    import jax
+
+    from repro.models import lm
+    from repro.models.common import LMConfig
+    from repro.serving import Request, ServeEngine
+
+    if tiny:
+        cfg = LMConfig(arch_id="paged-tiny", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                       vocab=64, remat=False, compute_dtype="float32",
+                       param_dtype="float32")
+        dense_slots, max_len, page_size, max_new = 2, 64, 8, 4
+    else:
+        cfg = LMConfig(arch_id="paged-bench", family="dense", n_layers=4,
+                       d_model=64, n_heads=8, n_kv_heads=4, d_ff=128,
+                       vocab=128, remat=False, compute_dtype="float32",
+                       param_dtype="float32")
+        dense_slots, max_len, page_size, max_new = 4, 128, 16, 8
+    params = lm.init(cfg, jax.random.key(0))
+    cache_rows = dense_slots * max_len        # the fixed memory budget
+    n_pages = cache_rows // page_size
+
+    rng = np.random.RandomState(0)
+    prompts = []
+    # short conversational requests: the dense layout strands most of
+    # each slot's max_len reservation; paged allocates only used pages
+    plen = (6, 12)
+
+    def pages_for(n_tokens: int) -> int:
+        return -(-n_tokens // page_size)
+
+    worst_pages = pages_for(plen[1] + max_new)
+    paged_slots = n_pages // worst_pages
+    prompts = [[int(t) for t in rng.randint(1, cfg.vocab // 2,
+                                            size=rng.randint(*plen))]
+               for _ in range(paged_slots)]
+
+    def drive(engine) -> tuple:
+        """Serve every prompt; returns ({rid: tokens}, peak_resident)."""
+        for i, p in enumerate(prompts):
+            engine.submit(Request(prompt=p, max_new_tokens=max_new, rid=i))
+        peak, done = 0, []
+        while True:
+            busy = engine.tick()
+            peak = max(peak, engine.n_pending - engine.n_queued)
+            done.extend(engine.poll())
+            if not busy and engine.n_pending == 0:
+                break
+        return {c.rid: list(c.tokens) for c in done}, peak
+
+    dense = ServeEngine(cfg, params, n_slots=dense_slots, max_len=max_len)
+    dense_out, dense_peak = drive(dense)
+    dense_stats = dense.stats()
+
+    paged = ServeEngine(cfg, params, n_slots=paged_slots, max_len=max_len,
+                        page_size=page_size, n_pages=n_pages)
+    paged_out, paged_peak = drive(paged)
+    paged_stats = paged.stats()
+    assert paged_out == dense_out, "paged tokens diverged from dense"
+    assert paged_peak > dense_peak, (
+        f"paged resident peak {paged_peak} <= dense {dense_peak} at "
+        f"equal cache memory")
+
+    # prefix reuse: every request shares a system preamble; sequential
+    # waves so later requests find the registered pages
+    shared = [int(t) for t in rng.randint(1, cfg.vocab // 2,
+                                          size=4 * page_size)]
+    tails = [[int(t) for t in rng.randint(1, cfg.vocab // 2, size=4)]
+             for _ in range(min(paged_slots, 4))]
+    reuse = ServeEngine(cfg, params, n_slots=2, max_len=max_len,
+                        page_size=page_size, n_pages=n_pages)
+    for i, tail in enumerate(tails):
+        reuse.serve([Request(prompt=shared + tail, max_new_tokens=max_new,
+                             rid=100 + i)])
+    rp = reuse.stats().pages
+    full_tokens = sum(len(shared) + len(t) for t in tails)
+    saved = full_tokens - int(rp.get("prefill_tokens", 0))
+    assert rp.get("prefix_hits", 0) >= len(tails) - 1, rp
+    assert saved > 0, (full_tokens, rp)
+
+    out = {
+        "page_size": page_size,
+        "cache_rows": cache_rows,
+        "n_pages": n_pages,
+        "dense_slots": dense_slots,
+        "paged_slots": paged_slots,
+        "requests": len(prompts),
+        "dense_resident_peak": int(dense_peak),
+        "paged_resident_peak": int(paged_peak),
+        "capacity_ratio": paged_peak / max(dense_peak, 1),
+        "dense_ticks": int(dense_stats.ticks),
+        "paged_ticks": int(paged_stats.ticks),
+        "dense_tok_s": dense_stats.throughput,
+        "paged_tok_s": paged_stats.throughput,
+        "prefix_requests": len(tails),
+        "prefill_tokens_no_share": full_tokens,
+        "prefill_tokens_shared": int(rp.get("prefill_tokens", 0)),
+        "prefix_tokens_saved": saved,
+        "prefix_hits": int(rp.get("prefix_hits", 0)),
+        "prefix_pages_hit": int(rp.get("prefix_pages_hit", 0)),
+    }
+    bc.print_table(
+        f"Fig.1 (paged): resident capacity at equal cache memory "
+        f"({cache_rows} KV rows, page_size={page_size})",
+        ["layout", "slots", "resident peak", "ticks", "tok/s"],
+        [["dense", f"{dense_slots}", f"{dense_peak}",
+          f"{dense_stats.ticks}", f"{dense_stats.throughput:.1f}"],
+         ["paged", f"{paged_slots}", f"{paged_peak}",
+          f"{paged_stats.ticks}", f"{paged_stats.throughput:.1f}"]])
+    print(f"[bench] paged holds {paged_peak}/{dense_peak} = "
+          f"{out['capacity_ratio']:.1f}x residents at equal memory; "
+          f"prefix cache saved {saved}/{full_tokens} prefill tokens "
+          f"({rp.get('prefix_hits', 0)} hits, "
+          f"{rp.get('prefix_pages_hit', 0)} pages)")
+    return out
+
+
 def _make_engine(deployed, batch: int, slo_ms: float, scheduler: str):
     """``slo``: the single SLO-scheduled CapsuleEngine.  ``disagg``: a
     DisaggregatedEngine front-end dispatching over a 2-engine pool (the
@@ -262,6 +396,12 @@ if __name__ == "__main__":
                     help="serving topology: one SLO-scheduled engine, or a "
                          "disaggregated front-end over an engine pool "
                          "(adds per-phase depth/transfer histograms)")
+    ap.add_argument("--paged", action="store_true",
+                    help="benchmark the paged KV cache instead of the "
+                         "CapsNet sweep: resident capacity vs the dense "
+                         "slot layout at equal cache memory, plus "
+                         "prefix-cache prefill savings (emits a "
+                         "fig1_paged record via --json)")
     ap.add_argument("--transport", action="store_true",
                     help="with --scheduler disagg: compare handoff "
                          "Transport kinds over the multihost LM topology "
@@ -271,7 +411,12 @@ if __name__ == "__main__":
                     help="write a BENCH_fig1.json perf-trajectory record")
     args = ap.parse_args()
     mode = "tiny" if args.tiny else ("full" if args.full else "quick")
-    if args.transport:
+    if args.paged:
+        results = run_paged(tiny=args.tiny)
+        if args.json:
+            bc.write_bench_json(args.json, "fig1_paged", results,
+                                mode=mode)
+    elif args.transport:
         if args.scheduler != "disagg":
             ap.error("--transport requires --scheduler disagg")
         results = run_transport(tiny=args.tiny)

@@ -23,6 +23,10 @@ candidate the tuner could ever propose
 * **unstable-legalize** — legalization is idempotent (re-legalizing a
   legal config is the identity; a drifting legalizer would make cached
   tuner winners resolve differently than they measured);
+* **divisor-violation** — every ``spec.block_divisors`` pair ``(a, b)``
+  holds after legalization: ``config[a]`` divides ``config[b]`` (e.g.
+  the paged dequant kernel's ``page_size`` must divide ``kv_block`` so
+  a KV block's per-row scales never straddle a cache page);
 * **over-budget** — the per-block working set (every array's block
   footprint, with block dims substituted) fits the per-backend budget;
 * **unverifiable** (warning) — a spec without ``block_dims`` cannot be
@@ -148,6 +152,8 @@ class KernelLegalityChecker:
         "non-divisor": "legalized block does not divide its dimension",
         "unstable-legalize": "legalize is not idempotent on its own "
                              "output",
+        "divisor-violation": "a block_divisors pair does not hold after "
+                             "legalization",
         "over-budget": "per-block working set exceeds a backend budget",
         "unverifiable": "spec declares no block_dims; legality cannot "
                         "be proven",
@@ -247,6 +253,20 @@ class KernelLegalityChecker:
                              f"{dim} on shapes {shapes}"),
                     hint="derive legalize from block_dims via "
                          "_legalize_blocks so largest_divisor is applied")
+        for a, b in getattr(spec, "block_divisors", ()) or ():
+            va, vb = config.get(a), config.get(b)
+            if (isinstance(va, int) and isinstance(vb, int)
+                    and va >= 1 and vb % va != 0):
+                yield Finding(
+                    rule=self.name, code="divisor-violation", path=path,
+                    line=line, symbol=spec.name,
+                    message=(f"kernel `{spec.name}`: legalized "
+                             f"`{a}`={va} does not divide `{b}`={vb} on "
+                             f"shapes {shapes} (declared in "
+                             f"block_divisors)"),
+                    hint="pass the pair to _legalize_blocks(..., "
+                         "divisors=...) so both knobs are clamped "
+                         "together")
         relegalized = spec.legalize(dict(config), *args, **kwargs)
         if relegalized != config:
             yield Finding(

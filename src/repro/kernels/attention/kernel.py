@@ -145,3 +145,121 @@ def flash_attention_pallas(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Dequantizing flash attention (int8 KV pages + per-row fp32 scales)
+# ---------------------------------------------------------------------------
+
+
+def _flash_dequant_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *,
+                          causal: bool, q_offset: int, q_block: int,
+                          kv_block: int, n_kv_blocks: int,
+                          softmax_mode: str, scale: float):
+    """The flash body of :func:`_flash_kernel` with int8 KV blocks
+    dequantized on read (guide: "Dequantization" pattern): each KV block
+    streams in as int8 plus its per-row fp32 scales, and the fp32
+    k/v used by the MXU dots exist only block-at-a-time in VMEM — the
+    resident cache stays int8 end to end."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_block + q_offset
+    k_start = ki * kv_block
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale              # (Qb, D)
+        k = kq_ref[0].astype(jnp.float32) * ks_ref[0][:, None]   # (Kb, D)
+        v = vq_ref[0].astype(jnp.float32) * vs_ref[0][:, None]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                  # (Qb, Kb)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1)
+            mask = kpos <= qpos
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = _exp(m_prev - m_new, softmax_mode)
+        p = _exp(s - m_new[:, None], softmax_mode)
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        pl.when(k_start <= q_start + q_block - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_dequant_pallas(
+    q: jax.Array, kq: jax.Array, ks: jax.Array,
+    vq: jax.Array, vs: jax.Array,
+    causal: bool = True, q_offset: int = 0,
+    q_block: int = 512, kv_block: int = 512, page_size: int = 1,
+    softmax_mode: str = "exact",
+    interpret: bool = True,
+) -> jax.Array:
+    """q (BK, G, S, D); kq/vq (BK, T, D) int8; ks/vs (BK, T) fp32.
+
+    ``page_size`` is the paged-cache page length the KV axis was written
+    in: KV blocks are kept page-aligned (``kv_block`` a multiple of
+    ``page_size`` whenever the sequence allows it), so a block's scale
+    rows never straddle a partially-resident page.
+    """
+    bk, g, s, d = q.shape
+    t = kq.shape[1]
+    qb = min(q_block, s)
+    while s % qb:
+        qb //= 2
+    ps = max(int(page_size), 1)
+    while t % ps:                      # degrade like the block sizes do
+        ps = max(ps // 2, 1)
+    kb = max(min(kv_block, t) // ps * ps, ps)
+    while t % kb:
+        kb -= ps
+    n_kv = t // kb
+    grid = (bk, g, s // qb, n_kv)
+    kernel = functools.partial(
+        _flash_dequant_kernel, causal=causal, q_offset=q_offset, q_block=qb,
+        kv_block=kb, n_kv_blocks=n_kv, softmax_mode=softmax_mode,
+        scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, d), lambda b, g_, i, j: (b, g_, i, 0)),
+            pl.BlockSpec((1, kb, d), lambda b, g_, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb), lambda b, g_, i, j: (b, j)),
+            pl.BlockSpec((1, kb, d), lambda b, g_, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb), lambda b, g_, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, d),
+                               lambda b, g_, i, j: (b, g_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bk, g, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kq, ks, vq, vs)

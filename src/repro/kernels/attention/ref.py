@@ -28,3 +28,16 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
     return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attention_dequant_ref(q: jax.Array, kq: jax.Array, ks: jax.Array,
+                          vq: jax.Array, vs: jax.Array,
+                          causal: bool = True, q_offset: int = 0
+                          ) -> jax.Array:
+    """Oracle for the dequantizing kernel: dequantize the int8 KV rows
+    (``kq``/``vq`` (B, T, K, D) with per-row scales ``ks``/``vs``
+    (B, T) — ``repro.models.attention.quantize_kv_rows`` layout), then
+    exact fp32 attention."""
+    k = kq.astype(jnp.float32) * ks[..., None, None]
+    v = vq.astype(jnp.float32) * vs[..., None, None]
+    return attention_ref(q, k, v, causal=causal, q_offset=q_offset)

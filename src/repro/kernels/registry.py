@@ -67,6 +67,13 @@ class KernelSpec:
     #: :func:`_legalize_blocks`, so the capslint kernel-legality checker
     #: verifies the *same* dimension mapping dispatch uses.
     block_dims: Optional[Callable[..., Dict[str, int]]] = None
+    #: cross-knob divisibility constraints: each ``(a, b)`` pair declares
+    #: that the legalized ``config[a]`` must divide ``config[b]`` (e.g. a
+    #: paged-cache ``page_size`` dividing the ``kv_block`` so KV blocks
+    #: stay page-aligned).  ``_legalize_blocks`` enforces the pairs and
+    #: the capslint kernel-legality checker proves them on every tuner
+    #: candidate.
+    block_divisors: Tuple[Tuple[str, str], ...] = ()
 
     def ref_call(self, *args, **kwargs):
         """Invoke the jnp oracle, filtering kwargs it does not accept."""
@@ -168,17 +175,40 @@ def _pallas_available() -> bool:
     return True
 
 
-def _legalize_blocks(dims_fn: Callable[..., Dict[str, int]]
+def _legalize_blocks(dims_fn: Callable[..., Dict[str, int]],
+                     divisors: Tuple[Tuple[str, str], ...] = ()
                      ) -> Callable[..., Dict[str, Any]]:
     """Build a spec ``legalize`` from its ``block_dims`` mapping: every
     block-size key becomes ``largest_divisor(dim, requested)``.  Keeping
     legalization derived from the dimension map (rather than hand-written
     per kernel) is what lets ``repro.analysis``'s kernel-legality rule
-    *prove* divisibility — the checker evaluates the same ``dims_fn``."""
+    *prove* divisibility — the checker evaluates the same ``dims_fn``.
+
+    ``divisors`` pairs (the spec's ``block_divisors``) are enforced
+    after the divisor pass: for each ``(a, b)``, ``config[a]`` is first
+    clamped to divide ``b``'s dimension, then ``config[b]`` is walked
+    down in ``config[a]``-sized steps until it both divides the
+    dimension and is a multiple of ``config[a]`` — so e.g. a KV block
+    never straddles a cache-page boundary.  The procedure is idempotent
+    (a requirement the legality checker's ``unstable-legalize`` rule
+    enforces)."""
 
     def legalize(config: Dict[str, Any], *args, **kwargs) -> Dict[str, Any]:
-        for key, dim in dims_fn(*args, **kwargs).items():
+        dims = dims_fn(*args, **kwargs)
+        for key, dim in dims.items():
             config[key] = largest_divisor(dim, config[key])
+        for a, b in divisors:
+            dim = dims.get(b)
+            va = int(config[a])
+            if dim is not None:
+                va = largest_divisor(dim, va)
+                config[a] = va
+            vb = max(int(config[b]), va)
+            vb = vb // va * va
+            if dim is not None:
+                while vb > va and dim % vb:
+                    vb -= va
+            config[b] = vb
         return config
 
     return legalize
@@ -403,6 +433,112 @@ registry.register(KernelSpec(
 ))
 
 
+# -- flash_attention_dequant ------------------------------------------------
+# Dequant-on-read attention over int8 KV pages (repro.serving.pages):
+# k/v arrive quantized with per-row fp32 scales and are dequantized
+# block-at-a-time inside the kernel, so the resident cache stays int8.
+# ``page_size`` is a structural knob (the pool's page length, not
+# tuned); ``block_divisors`` keeps the KV block a multiple of it, so a
+# block's scale rows never straddle a page boundary.
+
+
+@functools.lru_cache(maxsize=None)
+def _build_flash_attention_dequant():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.attention.kernel import flash_attention_dequant_pallas
+
+    @functools.partial(jax.jit, static_argnames=(
+        "causal", "q_offset", "q_block", "kv_block", "page_size",
+        "softmax_mode", "interpret"))
+    def flash_attention_dequant_entry(q, kq, ks, vq, vs, causal=True,
+                                      q_offset=0, softmax_mode="exact",
+                                      q_block=512, kv_block=512,
+                                      page_size=64, interpret=True):
+        """(B, S, H, D) GQA API over the int8-KV flash kernel; scales
+        (B, T) are shared by the KV heads (per-row quantization)."""
+        b, s, h, d = q.shape
+        t, nkv = kq.shape[1], kq.shape[2]
+        g = h // nkv
+        qr = (q.reshape(b, s, nkv, g, d).transpose(0, 2, 3, 1, 4)
+              .reshape(b * nkv, g, s, d))
+        kr = kq.transpose(0, 2, 1, 3).reshape(b * nkv, t, d)
+        vr = vq.transpose(0, 2, 1, 3).reshape(b * nkv, t, d)
+        ksr = jnp.repeat(ks.astype(jnp.float32), nkv, axis=0)
+        vsr = jnp.repeat(vs.astype(jnp.float32), nkv, axis=0)
+        o = flash_attention_dequant_pallas(
+            qr, kr, ksr, vr, vsr, causal=causal, q_offset=q_offset,
+            q_block=q_block, kv_block=kv_block, page_size=page_size,
+            softmax_mode=softmax_mode, interpret=interpret)
+        return (o.reshape(b, nkv, g, s, d).transpose(0, 3, 1, 2, 4)
+                .reshape(b, s, h, d))
+
+    return flash_attention_dequant_entry
+
+
+def _attention_dequant_reference():
+    from repro.kernels.attention.ref import attention_dequant_ref
+
+    return attention_dequant_ref
+
+
+def _attention_dequant_block_dims(q, kq=None, ks=None, vq=None, vs=None,
+                                  **kwargs):
+    s = q.shape[1]
+    t = kq.shape[1] if kq is not None else s
+    return {"q_block": s, "kv_block": t}
+
+
+def _attention_dequant_example(case):
+    import jax.numpy as jnp
+
+    from repro.models.attention import quantize_kv_rows
+
+    b, s, t, h, k, d = case.get("dims", (2, 128, 128, 4, 2, 32))
+    q = _rand(case.get("seed", 0), (b, s, h, d), "float32")
+    kk = _rand(case.get("seed", 0) + 1, (b, t, k, d), "float32")
+    v = _rand(case.get("seed", 0) + 2, (b, t, k, d), "float32")
+    kq, ks = quantize_kv_rows(kk)
+    vq, vs = quantize_kv_rows(v)
+    return ((q, kq.astype(jnp.int8), ks, vq.astype(jnp.int8), vs),
+            {"causal": case.get("causal", True),
+             "q_offset": case.get("q_offset", 0),
+             "softmax_mode": case.get("softmax_mode", "exact")})
+
+
+registry.register(KernelSpec(
+    name="flash_attention_dequant",
+    build=_build_flash_attention_dequant,
+    reference=_attention_dequant_reference,
+    space={"q_block": (64, 128, 256, 512),
+           "kv_block": (64, 128, 256, 512),
+           "page_size": (8, 16, 32, 64, 128),
+           "softmax_mode": ("exact", "taylor")},
+    tuned=("q_block", "kv_block"),
+    base_config={"q_block": 512, "kv_block": 512, "page_size": 64},
+    legalize=_legalize_blocks(_attention_dequant_block_dims,
+                              divisors=(("page_size", "kv_block"),)),
+    block_dims=_attention_dequant_block_dims,
+    block_divisors=(("page_size", "kv_block"),),
+    make_example=_attention_dequant_example,
+    example_cases=(
+        # parity vs the dequantizing oracle is tight: both read the same
+        # int8 rows, so quantization error cancels and only the online
+        # softmax differs.  (The *quantization* tolerance vs an
+        # unquantized cache is asserted end-to-end in the serving tests.)
+        {"dims": (2, 128, 128, 8, 4, 32), "causal": True, "atol": 2e-5},
+        {"dims": (2, 64, 256, 8, 2, 32), "causal": False, "atol": 2e-5},
+        {"dims": (1, 64, 256, 4, 2, 32), "causal": True, "q_offset": 192,
+         "atol": 2e-5},                               # decode window
+        {"dims": (1, 192, 192, 2, 1, 64), "causal": True,
+         "atol": 2e-5},                               # non-pow2 seq
+    ),
+    ref_accepts=("causal", "q_offset"),
+    is_available=_pallas_available,
+))
+
+
 # ---------------------------------------------------------------------------
 # Public dispatch wrappers (ergonomic signatures over registry.call)
 # ---------------------------------------------------------------------------
@@ -438,4 +574,23 @@ def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
         "flash_attention", q, k, v, causal=causal, q_offset=q_offset,
         softmax_mode=softmax_mode,
         config={"q_block": q_block, "kv_block": kv_block},
+        interpret=interpret, tune=tune)
+
+
+def flash_attention_dequant(q, kq, ks, vq, vs, causal: bool = True,
+                            q_offset: int = 0, softmax_mode: str = "exact",
+                            q_block: Optional[int] = None,
+                            kv_block: Optional[int] = None,
+                            page_size: Optional[int] = None,
+                            interpret: Optional[bool] = None,
+                            tune: Optional[bool] = None):
+    """q (B, S, H, D); kq, vq (B, T, K, D) int8 with per-row fp32
+    scales ks, vs (B, T) (``quantize_kv_rows`` layout) -> (B, S, H, D).
+    ``page_size`` (the cache pool's page length) keeps the legalized KV
+    block page-aligned so dequant scales never straddle a page."""
+    return registry.call(
+        "flash_attention_dequant", q, kq, ks, vq, vs, causal=causal,
+        q_offset=q_offset, softmax_mode=softmax_mode,
+        config={"q_block": q_block, "kv_block": kv_block,
+                "page_size": page_size},
         interpret=interpret, tune=tune)

@@ -14,6 +14,11 @@ through the unified ``repro.serving`` engine API
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --scheduler sharded --slots 4
 
+    # LM, paged KV cache: global page pool + per-slot page tables,
+    # content-addressed prefix reuse, optional int8 cache pages
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --paged --page-size 16 --pages 64 --quantize-pages
+
     # LM, disaggregated: prefill engine + 2 decode engines, cache handoffs
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --scheduler disagg --decode-engines 2
@@ -66,6 +71,21 @@ def _make_scheduler(args):
     return FIFOScheduler()
 
 
+def _paged_kwargs(args) -> dict:
+    """Page-pool constructor kwargs for --paged runs ({} otherwise)."""
+    if not args.paged:
+        return {}
+    return dict(page_size=args.page_size, n_pages=args.pages,
+                quantize_pages=args.quantize_pages)
+
+
+def _print_pages(stats) -> None:
+    if getattr(stats, "pages", None):
+        summary = " ".join(f"{k}={v}" for k, v in
+                           sorted(stats.pages.items()))
+        print(f"  pages: {summary}")
+
+
 def _print_latency(stats) -> None:
     for cls, (n, p50, p95) in stats.latency_summary().items():
         print(f"  latency[{cls}]: n={n} p50={p50:.1f} ms p95={p95:.1f} ms")
@@ -113,16 +133,17 @@ def serve_traffic(args) -> None:
                               horizon=args.trace_horizon,
                               seed=args.trace_seed)
 
+    pk = _paged_kwargs(args)
     controller = None
     if args.autoscale:
         def mk():
             return DecodeEngine(cfg, params, n_slots=args.slots,
-                                max_len=args.max_len)
+                                max_len=args.max_len, **pk)
         engine = disaggregated_lm_engine(
             cfg, params, n_slots=args.slots, max_len=args.max_len,
             n_decode=1, transport=args.transport,
             decode_schedulers=[PriorityScheduler()] if args.priority
-            else None)
+            else None, **pk)
         controller = AutoscaleController(mk, min_engines=1,
                                          max_engines=args.decode_engines)
     elif args.scheduler == "disagg":
@@ -131,11 +152,11 @@ def serve_traffic(args) -> None:
             n_decode=args.decode_engines, transport=args.transport,
             decode_schedulers=[PriorityScheduler()
                                for _ in range(args.decode_engines)]
-            if args.priority else None)
+            if args.priority else None, **pk)
     else:
         engine = ServeEngine(cfg, params, n_slots=args.slots,
                              max_len=args.max_len,
-                             scheduler=_make_scheduler(args))
+                             scheduler=_make_scheduler(args), **pk)
     admission = SLOAdmission() if args.admission else None
 
     rep = replay(engine, trace,
@@ -154,6 +175,7 @@ def serve_traffic(args) -> None:
           f"({stats.throughput:.1f} tok/s, {stats.ms_per_tick:.1f} "
           f"ms/tick)")
     _print_latency(stats)
+    _print_pages(stats)
     if controller is not None:
         _print_scale_events(rep.scale_events)
         if rep.mean_live_engines is not None:
@@ -180,12 +202,13 @@ def serve_lm(args) -> None:
             cfg, params, n_slots=args.slots, max_len=args.max_len,
             n_decode=args.decode_engines,
             kernel_tune=args.kernel_tune or None,
-            transport=args.transport)
+            transport=args.transport, **_paged_kwargs(args))
     else:
         engine = ServeEngine(cfg, params, n_slots=args.slots,
                              max_len=args.max_len,
                              scheduler=_make_scheduler(args),
-                             kernel_tune=args.kernel_tune or None)
+                             kernel_tune=args.kernel_tune or None,
+                             **_paged_kwargs(args))
     if args.kernel_tune:
         engine.warmup()
     rng = np.random.RandomState(0)
@@ -218,6 +241,7 @@ def serve_lm(args) -> None:
           f"({stats.throughput:.1f} tok/s, "
           f"{stats.ms_per_tick:.1f} ms/tick)")
     _print_latency(stats)
+    _print_pages(stats)
     for c in sorted(completions, key=lambda c: c.rid):
         print(f"  rid={c.rid}: latency={c.latency_s * 1e3:.0f} ms "
               f"{c.tokens}")
@@ -306,6 +330,18 @@ def main():
                          "device boundary")
     # LM options
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--paged", action="store_true",
+                    help="LM: block-paged KV cache (global page pool + "
+                         "per-slot page tables) with content-addressed "
+                         "prefix reuse across requests")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per cache page")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged: total pool pages (default sizes the "
+                         "pool to n_slots * max_len tokens)")
+    ap.add_argument("--quantize-pages", action="store_true",
+                    help="paged: store KV pages as int8 with per-row "
+                         "scales, dequantized on read in-kernel")
     ap.add_argument("--kernel-tune", action="store_true",
                     help="autotune kernel block sizes at warm-up and bind "
                          "the winners into the tick executables")
@@ -347,6 +383,8 @@ def main():
     args = ap.parse_args()
     if args.multihost and args.scheduler != "disagg":
         ap.error("--multihost requires --scheduler disagg")
+    if args.paged and args.arch.startswith("capsnet"):
+        ap.error("--paged applies to LM serving only")
     if args.arch.startswith("capsnet"):
         serve_capsnet(args)
     elif args.trace != "none":

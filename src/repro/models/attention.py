@@ -27,6 +27,28 @@ from repro.models.common import LMConfig, ParamDef, fanin_init, zeros_init, ones
 
 NEG_INF = -1e30
 
+# int8 cache-page quantization (repro.serving.pages): symmetric per-row
+# scales — one fp32 scale per (layer, position) row of K and of V.  Rows
+# are quantized once at cache write (prefill page write or decode row
+# write) and dequantized at every read, so serving memory holds int8.
+KV_QUANT_MAX = 127.0
+KV_QUANT_EPS = 1e-8
+
+
+def quantize_kv_rows(x: jax.Array):
+    """(..., H, D) rows -> (int8 rows, fp32 per-row scales (...,))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = jnp.maximum(amax / KV_QUANT_MAX, KV_QUANT_EPS)
+    q = jnp.clip(jnp.round(xf / scale[..., None, None]),
+                 -KV_QUANT_MAX, KV_QUANT_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Invert :func:`quantize_kv_rows`; broadcasts (..., ) scales."""
+    return (q.astype(jnp.float32) * scale[..., None, None]).astype(dtype)
+
 
 # ---------------------------------------------------------------------------
 # Param defs
@@ -221,14 +243,24 @@ def _inner_attention(q, k, v, cfg: LMConfig, causal: bool, q_offset: int = 0,
 def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
                    cache: Optional[Dict[str, jax.Array]] = None,
                    cache_index: Optional[jax.Array] = None,
+                   prefill_offset: int = 0,
                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self-attention with optional KV cache.
 
     Modes:
       * cache=None                      — training / encoder forward.
-      * cache given, x.shape[1] > 1     — prefill: writes cache[0:S].
+      * cache given, x.shape[1] > 1     — prefill: writes cache[off:off+S]
+                                          (``off = prefill_offset``, static;
+                                          off > 0 = continuation prefill
+                                          attending the cached prefix).
       * cache given, x.shape[1] == 1    — decode: writes cache[idx], attends
                                           to cache[0:idx+1].
+
+    Quantized cache pages (repro.serving.pages): a cache dict carrying
+    ``k_scale``/``v_scale`` leaves holds int8 rows with per-row fp32
+    scales.  Reads dequantize (`dequantize_kv`); writes quantize the
+    fresh rows (`quantize_kv_rows`) and update the scale leaves, so the
+    resident cache stays int8 end to end.
 
     Sharding contract (serving): a vector ``cache_index`` (B,) addresses
     each batch row's own cache row, and both the row-aligned scatter
@@ -246,14 +278,43 @@ def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
         out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
         return _out_proj(params, cfg, out), None
 
+    quant = "k_scale" in cache
     s = x.shape[1]
-    if s > 1:  # prefill
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
-        out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
-        new_cache = {"k": ck, "v": cv}
+    off = int(prefill_offset)
+    if s > 1:  # prefill (off > 0: continuation against a cached prefix)
+        if off and not cfg.causal:
+            raise ValueError("continuation prefill requires a causal model")
+        if quant:
+            kq, ks = quantize_kv_rows(k)
+            vq, vs = quantize_kv_rows(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, off, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, off, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks.astype(cache["k_scale"].dtype), (0, off))
+            vsc = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs.astype(cache["v_scale"].dtype), (0, off))
+            new_cache = {"k": ck, "v": cv, "k_scale": ksc, "v_scale": vsc}
+            if off:
+                t = off + s
+                kk = dequantize_kv(ck[:, :t], ksc[:, :t], q.dtype)
+                vv = dequantize_kv(cv[:, :t], vsc[:, :t], q.dtype)
+                out = _inner_attention(q, kk, vv, cfg, causal=True,
+                                       q_offset=off)
+            else:
+                out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, off, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, off, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            if off:
+                t = off + s
+                out = _inner_attention(q, ck[:, :t].astype(q.dtype),
+                                       cv[:, :t].astype(q.dtype), cfg,
+                                       causal=True, q_offset=off)
+            else:
+                out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
     else:  # decode one token
         idx = cache_index if cache_index is not None else positions[:, 0].max()
         if getattr(idx, "ndim", 0) == 1:
@@ -261,20 +322,39 @@ def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
             # each slot writes its own row and attends its own prefix
             b = x.shape[0]
             rows = jnp.arange(b)
-            ck = cache["k"].at[rows, idx].set(
-                k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[rows, idx].set(
-                v[:, 0].astype(cache["v"].dtype))
+            if quant:
+                kq, ks = quantize_kv_rows(k[:, 0])
+                vq, vs = quantize_kv_rows(v[:, 0])
+                ck = cache["k"].at[rows, idx].set(kq)
+                cv = cache["v"].at[rows, idx].set(vq)
+                ksc = cache["k_scale"].at[rows, idx].set(
+                    ks.astype(cache["k_scale"].dtype))
+                vsc = cache["v_scale"].at[rows, idx].set(
+                    vs.astype(cache["v_scale"].dtype))
+            else:
+                ck = cache["k"].at[rows, idx].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, idx].set(
+                    v[:, 0].astype(cache["v"].dtype))
             valid = idx.astype(jnp.int32) + 1
         else:
+            if quant:
+                raise ValueError(
+                    "quantized cache decode requires vector cache_index")
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
             cv = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
             valid = jnp.full((x.shape[0],), idx + 1, jnp.int32)
-        out = _inner_attention(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
-                               causal=False, kv_valid_len=valid)
-        new_cache = {"k": ck, "v": cv}
+        if quant:
+            kk = dequantize_kv(ck, ksc, q.dtype)
+            vv = dequantize_kv(cv, vsc, q.dtype)
+            new_cache = {"k": ck, "v": cv, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kk, vv = ck.astype(q.dtype), cv.astype(q.dtype)
+            new_cache = {"k": ck, "v": cv}
+        out = _inner_attention(q, kk, vv, cfg, causal=False,
+                               kv_valid_len=valid)
     return _out_proj(params, cfg, out), new_cache
 
 

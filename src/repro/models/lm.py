@@ -149,10 +149,11 @@ def param_structs(cfg: LMConfig) -> Any:
 
 
 def _apply_self_block(p, cfg: LMConfig, x, positions, kv_cache, cache_index,
-                      rules, token_mask=None):
+                      rules, token_mask=None, prefill_offset=0):
     h = common.apply_norm(p["ln1"], x, cfg)
     a, new_kv = attn_lib.self_attention(p["attn"], cfg, h, positions,
-                                        kv_cache, cache_index)
+                                        kv_cache, cache_index,
+                                        prefill_offset=prefill_offset)
     x = x + a
     h = common.apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None and "router" in p["ffn"]:
@@ -236,8 +237,16 @@ def _nones(n):
 def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
             caches: Optional[Dict[str, Any]] = None,
             cache_index: Optional[jax.Array] = None,
+            prefill_offset: int = 0,
             ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
-    """Returns (final hidden states (B,S,d), new caches, aux loss)."""
+    """Returns (final hidden states (B,S,d), new caches, aux loss).
+
+    ``prefill_offset`` (static int): continuation prefill — the cache
+    already holds rows ``[0, prefill_offset)`` (a shared prompt prefix
+    restored from the paged prefix cache) and this forward writes rows
+    ``[prefill_offset, prefill_offset + S)``, attending the cached prefix
+    plus the fresh span.  Attention families only (dense/moe/vlm).
+    """
     rules = rules_for_arch(cfg.arch_id)
     fam = cfg.family
     x = common.embed_inputs(params["embed"], cfg, batch)
@@ -262,17 +271,23 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
             kv = None if caches is None else c
             return _apply_self_block(p["block"], cfg, x, positions, kv,
                                      cache_index, rules,
-                                     token_mask=token_mask)
+                                     token_mask=token_mask,
+                                     prefill_offset=prefill_offset)
         kv = caches["kv"] if caches is not None else None
         x, new_kv, aux = _scan_units(cfg, x, params["units"], kv, body)
         new_caches = {"kv": new_kv} if caches is not None else None
 
     elif fam == "hybrid":
+        if prefill_offset:
+            raise ValueError("prefill_offset: attention families only")
         x, new_caches, aux = _hybrid_forward(params, cfg, x, positions,
                                              batch, caches, cache_index,
                                              rules)
 
     elif fam == "ssm":
+        if prefill_offset:
+            raise ValueError("prefill_offset: attention families only")
+
         def body(x, p, c):
             k = cfg.xlstm.slstm_every
             new_m = []
@@ -315,7 +330,8 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
                 x, kv_n, a = _apply_self_block(pi, cfg, x, positions, kv,
                                                cache_index, rules,
                                                token_mask=batch.get(
-                                                   "token_mask"))
+                                                   "token_mask"),
+                                               prefill_offset=prefill_offset)
                 aux += a
                 new_kv.append(kv_n)
             cross_c = None if caches is None else c["cross"]
@@ -494,6 +510,45 @@ def ragged_prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
     return logits[:, 0], new_caches
 
 
+def continuation_prefill_step(params, cfg: LMConfig,
+                              batch: Dict[str, jax.Array],
+                              caches: Dict[str, Any], offset: int
+                              ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Ragged prefill of prompt *suffixes* against a cached shared prefix.
+
+    The caches already hold KV rows ``[0, offset)`` — a prefix-cache hit
+    restored at page granularity by ``repro.serving.pages``.  ``tokens``
+    (B, S) are the left-aligned suffix tokens (zero pad suffix) and
+    ``lengths`` (B,) the real suffix lengths.  Positions run
+    ``offset .. offset+S-1`` and attention covers the cached prefix plus
+    the fresh span, so the shared span is never recomputed.
+
+    moe caveat: GShard expert capacity derives from the *suffix* token
+    count, while per-request ``generate()`` derives it from the full
+    prompt — routing-drop behaviour can differ when capacity binds.
+    Dense/vlm suffix logits are the exact continuation of the full
+    prefill.  ``offset == 0`` reduces to :func:`ragged_prefill_step`.
+    """
+    if offset == 0:
+        return ragged_prefill_step(params, cfg, batch, caches)
+    tokens, lengths = batch["tokens"], batch["lengths"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(offset, offset + s, dtype=jnp.int32)[None], (b, s))
+    fwd_batch = dict(batch, positions=positions)
+    fwd_batch.pop("lengths")
+    if cfg.moe is not None:
+        fwd_batch["token_mask"] = (
+            jnp.arange(s, dtype=jnp.int32)[None]
+            < lengths.astype(jnp.int32)[:, None])
+    x, new_caches, _ = forward(params, cfg, fwd_batch, caches,
+                               prefill_offset=offset)
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, s - 1)
+    last = x[jnp.arange(b), idx]                    # (B, d)
+    logits = common.unembed(params["embed"], cfg, last[:, None, :])
+    return logits[:, 0], new_caches
+
+
 # ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
@@ -638,6 +693,10 @@ def concat_cache_rows(cfg: LMConfig, rows_list: list) -> Any:
     k-row tree so a serving handoff group can be scattered with ONE
     :func:`scatter_cache_rows` call instead of k full-cache rewrites.
     """
+    if not rows_list:
+        raise ValueError(
+            "concat_cache_rows: empty rows_list — a handoff group must "
+            "contain at least one gathered row pytree")
     if len(rows_list) == 1:
         return rows_list[0]
     specs = cache_specs(cfg)

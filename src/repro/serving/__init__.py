@@ -12,6 +12,12 @@ poll() / run_until_idle() / stats()`` surface with true async admission.
 surface while splitting prefill and decode onto dedicated engines joined
 by typed :class:`CacheHandoff`\\ s.
 
+``ServeEngine(page_size=...)`` swaps the dense slot caches for the
+block-paged layout of ``repro.serving.pages`` (:class:`PagePool`):
+a global page pool with per-slot page tables, content-addressed prefix
+reuse across requests, optional int8 page quantization
+(``quantize_pages=True``), and page-reference handoffs/preemption.
+
 See ``docs/serving.md`` for the engine lifecycle and design notes.
 """
 
@@ -25,6 +31,7 @@ from repro.serving.disagg import (CacheHandoff, DecodeEngine,  # noqa: F401
                                   PrefillEngine, disaggregated_lm_engine,
                                   multihost_disaggregated_lm_engine)
 from repro.serving.engine import Completion, Request, ServeEngine  # noqa: F401
+from repro.serving.pages import PagePool, PagePoolExhausted  # noqa: F401
 from repro.serving.schedulers import (DisaggScheduler,  # noqa: F401
                                       FIFOScheduler, InterleavingScheduler,
                                       PriorityScheduler, Scheduler,

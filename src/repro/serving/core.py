@@ -213,6 +213,10 @@ class EngineStats:
     transfer: Dict[str, LatencyHistogram] = dataclasses.field(
         default_factory=dict)         # handoff stage / transport leg ->
     #                                   transfer latency
+    pages: Dict[str, int] = dataclasses.field(
+        default_factory=dict)         # paged-KV counters (allocations,
+    #                                   prefix hits, prefill savings —
+    #                                   see repro.serving.pages)
 
     @property
     def throughput(self) -> float:
@@ -396,6 +400,14 @@ class EngineCore:
         ``ServeEngine._evict``).  The default saves nothing, which is
         correct only for workloads whose ``_admit`` is already
         resume-aware (e.g. a countdown kept in ``task.state``)."""
+
+    def _release_slot(self, slot: int, task: SlotTask) -> None:
+        """Reclaim per-slot workload resources after ``task`` finished
+        and its slot was retired (called once per finished slot, state
+        lock released).  The dense cache needs nothing — the slot's
+        rows are simply overwritten by the next admission — but the
+        paged cache must drop the task's page references
+        (``ServeEngine._release_slot``)."""
 
     def _pretune(self) -> None:
         """Measured kernel autotuning with concrete inputs (workloads
@@ -617,6 +629,7 @@ class EngineCore:
                     items += i
             wall = max(self._clock() - t0 - self._tick_excluded, 0.0)
 
+            retired: List[Tuple[int, SlotTask]] = []
             with self._lock:
                 st = self._stats
                 st.ticks += 1
@@ -627,11 +640,14 @@ class EngineCore:
                 for s in finished:
                     task = self._slots[s]
                     self._slots[s] = None
+                    retired.append((s, task))
                     entry = self._requests[task.rid]
                     entry.left -= 1
                     if entry.left == 0:
                         del self._requests[task.rid]
                         self._complete_locked(entry, now)
+            for s, task in retired:
+                self._release_slot(s, task)   # hooks run lock-released
             self.scheduler.observe(
                 TickRecord(n_active=len(still), n_batch=n_batch, wall_s=wall))
             return True
@@ -681,7 +697,8 @@ class EngineCore:
                 depth={k: h.copy()
                        for k, h in self._stats.depth.items()},
                 transfer={k: h.copy()
-                          for k, h in self._stats.transfer.items()})
+                          for k, h in self._stats.transfer.items()},
+                pages=dict(self._stats.pages))
 
     @property
     def n_pending(self) -> int:

@@ -64,6 +64,7 @@ from repro.serving.core import (DepthHistogram, EngineCore, EngineStats,
                                 LatencyHistogram, SlotTask, StreamEvent,
                                 allocate_rid)
 from repro.serving.engine import ServeEngine
+from repro.serving.pages import PagePool
 from repro.serving.schedulers import (DisaggScheduler, Scheduler,
                                       ShardedScheduler)
 from repro.serving.transport import (InProcessTransport, TransferRecord,
@@ -99,6 +100,19 @@ class CacheHandoff:
     stream: bool = False              # original request opted into streaming
     cls: str = "default"              # request class (latency histograms)
     t_handoff: float = 0.0            # when the handoff entered the queue
+    # paged handoffs (repro.serving.pages): ``rows`` becomes
+    # ``{"pages": export_pages payload, "residual": residual rows}``.
+    # ``page_hashes`` advertises the prefix-index identity of each page
+    # (None = private) so the front-end can pin target-side hits and
+    # strip them from the payload — a handoff then moves only the pages
+    # the target doesn't already hold, plus an O(pages) table splice.
+    paged: bool = False
+    page_size: int = 0
+    quantized: bool = False
+    n_pages: int = 0                  # pages in the slot's table at export
+    page_hashes: Optional[List[Optional[bytes]]] = None
+    page_missing: Optional[List[int]] = None   # positions in rows["pages"]
+    page_pinned: Optional[Dict[int, int]] = None  # target pos -> pinned page
 
 
 @dataclasses.dataclass
@@ -167,7 +181,36 @@ class PrefillEngine(ServeEngine):
         # split of the already-gathered rows
         pending = [(s, task) for s, task in new
                    if not task.state["handoff"].done]
-        if pending:
+        if pending and self._pages is not None:
+            # paged export: one pool-wide page copy for the whole group,
+            # split per slot eagerly.  Slots retire right after this, so
+            # registered pages demote to *cached* on the prefill pool —
+            # a later request with the same prompt prefix still hits.
+            per_slot = [self._pages.slot_pages(s) for s, _ in pending]
+            flat = [p for ids in per_slot for p in ids]
+            payload = jax.block_until_ready(
+                self._pages.export_pages(self._pool, flat))
+            res_all = jax.block_until_ready(
+                self._pages.gather_residual_rows(
+                    self._residual, [s for s, _ in pending]))
+            base = 0
+            for i, (s, task) in enumerate(pending):
+                h = task.state["handoff"]
+                n = len(per_slot[i])
+                h.paged = True
+                h.page_size = self._pages.page_size
+                h.quantized = self._pages.quantize
+                h.n_pages = n
+                h.page_hashes = self._pages.slot_page_hashes(s)
+                h.page_missing = list(range(n))
+                h.rows = {
+                    "pages": self._pages.take_payload(
+                        payload, range(base, base + n)),
+                    "residual": self._pages.gather_residual_rows(
+                        res_all, [i]),
+                }
+                base += n
+        elif pending:
             rows_all = jax.block_until_ready(self._gather(
                 jnp.asarray([s for s, _ in pending], jnp.int32),
                 self._caches))
@@ -223,6 +266,15 @@ class DecodeEngine(ServeEngine):
                 f"max_len={self.max_len} — shapes cannot line up")
         if h.done:
             return                    # no rows travel with a done handoff
+        if h.paged != (self._pages is not None):
+            raise ValueError(
+                f"cache handoff rid={h.rid} is "
+                f"{'paged' if h.paged else 'dense'}; this decode engine's "
+                f"cache is {'paged' if self._pages is not None else 'dense'}"
+                f" — the layouts cannot splice")
+        if h.paged:
+            self._validate_paged(h)
+            return
         want_leaves, want_def = jax.tree.flatten(self._expected_rows)
         got_leaves, got_def = jax.tree.flatten(h.rows)
         if want_def != got_def:
@@ -239,6 +291,50 @@ class DecodeEngine(ServeEngine):
             if jnp.dtype(getattr(g, "dtype", None)) != jnp.dtype(w.dtype):
                 raise ValueError(
                     f"cache handoff rid={h.rid}: cache leaf dtype "
+                    f"{jnp.dtype(getattr(g, 'dtype', None))} != expected "
+                    f"{jnp.dtype(w.dtype)}")
+
+    def _validate_paged(self, h: CacheHandoff) -> None:
+        """Paged half of :meth:`validate_handoff`: the page geometry and
+        representation must agree exactly (hashes are only comparable
+        between pools with identical seeds), and the travelling payload
+        must match this pool's per-page leaf shapes/dtypes."""
+        if (h.page_size != self._pages.page_size
+                or h.quantized != self._pages.quantize):
+            raise ValueError(
+                f"cache handoff rid={h.rid} carries "
+                f"page_size={h.page_size} quantized={h.quantized} pages; "
+                f"this decode engine's pool is "
+                f"page_size={self._pages.page_size} "
+                f"quantized={self._pages.quantize} — page payloads and "
+                f"prefix hashes are not interchangeable")
+        missing = (h.page_missing if h.page_missing is not None
+                   else list(range(h.n_pages)))
+        covered = set(missing) | set(h.page_pinned or {})
+        if covered != set(range(h.n_pages)):
+            raise ValueError(
+                f"cache handoff rid={h.rid}: travelling + pinned pages "
+                f"cover positions {sorted(covered)}, need 0..{h.n_pages - 1}")
+        want = dict(self._pages.page_payload_struct(len(missing)))
+        want.update(self._pages.residual_rows_struct(1))
+        got = {}
+        if isinstance(h.rows, dict):
+            got.update(h.rows.get("pages") or {})
+            got.update(h.rows.get("residual") or {})
+        if sorted(got) != sorted(want):
+            raise ValueError(
+                f"cache handoff rid={h.rid}: paged payload leaves "
+                f"{sorted(got)} != expected {sorted(want)}")
+        for k, w in want.items():
+            g = got[k]
+            if tuple(getattr(g, "shape", ())) != tuple(w.shape):
+                raise ValueError(
+                    f"cache handoff rid={h.rid}: paged leaf {k} shape "
+                    f"{tuple(getattr(g, 'shape', ()))} != expected "
+                    f"{tuple(w.shape)}")
+            if jnp.dtype(getattr(g, "dtype", None)) != jnp.dtype(w.dtype):
+                raise ValueError(
+                    f"cache handoff rid={h.rid}: paged leaf {k} dtype "
                     f"{jnp.dtype(getattr(g, 'dtype', None))} != expected "
                     f"{jnp.dtype(w.dtype)}")
 
@@ -264,7 +360,9 @@ class DecodeEngine(ServeEngine):
         # injections would cost k whole-cache copies)
         live = [(s, t.payload.handoff) for s, t in hand
                 if not t.payload.handoff.done]
-        if live:
+        if live and self._pages is not None:
+            self._admit_paged_handoffs(live)
+        elif live:
             rows = lm.concat_cache_rows(self.cfg, [h.rows for _, h in live])
             self._caches = self._inject(
                 self._place_rows(rows),
@@ -282,6 +380,46 @@ class DecodeEngine(ServeEngine):
                 finished.append(s)
         return finished, items        # injected tokens were counted by
         #                               the prefill engine's stats
+
+    def _admit_paged_handoffs(self, live: List[Tuple[int, CacheHandoff]]
+                              ) -> None:
+        """Splice a group of paged handoffs into this engine's pool: one
+        batched ``import_pages`` for every travelling page in the group,
+        front-end-pinned pages reused in place (their reference transfers
+        to the slot binding), fresh pages registered under the hashes the
+        prefill side advertised so *later* handoffs dedup against them."""
+        all_ids: List[int] = []
+        all_payloads: List[Dict[str, Any]] = []
+        for s, h in live:
+            pinned = h.page_pinned or {}
+            missing = (h.page_missing if h.page_missing is not None
+                       else list(range(h.n_pages)))
+            fresh = self._alloc_pages(len(missing), s)
+            allp: List[int] = [-1] * h.n_pages
+            for pos, pg in pinned.items():
+                allp[pos] = pg
+            for j, pos in enumerate(missing):
+                allp[pos] = fresh[j]
+            hashes = h.page_hashes or []
+            for j, pos in enumerate(missing):
+                if pos < len(hashes) and hashes[pos] is not None:
+                    self._pages.register_hash(fresh[j], hashes[pos])
+            self._pages.bind_slot(s, allp)
+            if fresh:
+                all_ids.extend(fresh)
+                all_payloads.append(h.rows["pages"])
+        if all_ids:
+            payload = {k: jnp.concatenate(
+                           [jnp.asarray(p[k]) for p in all_payloads])
+                       for k in all_payloads[0]}
+            self._pool = self._pages.import_pages(self._pool, payload,
+                                                  all_ids)
+        res = [h.rows["residual"] for _, h in live]
+        if res and self._pages.residual_specs():
+            self._residual = self._pages.scatter_residual_rows(
+                self._residual,
+                self._pages.concat_residual_rows(res),
+                np.asarray([s for s, _ in live], np.int32))
 
     def _request_class(self, request: Any) -> str:
         if isinstance(request, HandoffRequest):
@@ -331,7 +469,13 @@ class DisaggregatedEngine:
     ``"device_to_device"``), or ``"auto"`` (device-to-device when the
     decode pool owns meshes distinct from prefill's, else in-process).
     Stateless dispatch-only handoffs carry no rows and bypass the
-    transport.
+    transport.  When both sides run a paged cache
+    (``repro.serving.pages``), the payload is the slot's *pages* rather
+    than dense rows, and before delivery the front-end pins the target
+    pool's prefix-index hits for the advertised page hashes and strips
+    them from the payload — only pages the target doesn't already hold
+    travel (``stats().pages`` counts ``handoff_pages_moved`` /
+    ``handoff_pages_dedup``).
 
     **Fault handling** — a decode engine whose transport delivery or
     ``submit`` raises during a handoff is marked dead and the handoff
@@ -533,6 +677,8 @@ class DisaggregatedEngine:
             agg.padded += s.padded
             agg.ticks += s.ticks
             agg.wall_s += s.wall_s
+            for k, v in s.pages.items():
+                agg.pages[k] = agg.pages.get(k, 0) + v
         with self._lock:
             agg.completed = self._stats.completed
             agg.latency = {k: h.copy()
@@ -540,6 +686,8 @@ class DisaggregatedEngine:
             agg.depth = {k: h.copy() for k, h in self._stats.depth.items()}
             agg.transfer = {k: h.copy()
                             for k, h in self._stats.transfer.items()}
+            for k, v in self._stats.pages.items():
+                agg.pages[k] = agg.pages.get(k, 0) + v
         return agg
 
     @property
@@ -691,6 +839,7 @@ class DisaggregatedEngine:
         n = len(cands)
         for k in range(n):
             eng = cands[(self._rr + k) % n]
+            pinned, full_rows = self._dedup_pages(h, eng)
             try:
                 if h.stateless:
                     rec = None        # dispatch-only: no rows to move
@@ -707,6 +856,7 @@ class DisaggregatedEngine:
                 # typed handoff rejection: a mis-built pair is a real bug
                 # and must surface — but the never-dropped invariant still
                 # holds, so the handoff goes back on the queue first
+                self._undedup_pages(h, eng, pinned, full_rows)
                 with self._lock:
                     self._handoffs.appendleft(h)
                 raise
@@ -717,6 +867,7 @@ class DisaggregatedEngine:
             # and a fully-dead pool raises RuntimeError there.
             # capslint: disable=exception-hygiene
             except Exception:
+                self._undedup_pages(h, eng, pinned, full_rows)
                 self._dead.add(eng)
                 continue
             self._rr = (self._rr + k + 1) % max(n, 1)
@@ -730,8 +881,55 @@ class DisaggregatedEngine:
                                       LatencyHistogram()).record(s)
                     tr.setdefault(f"{rec.transport}/total",
                                   LatencyHistogram()).record(rec.total_s)
+                if h.paged and not h.done:
+                    pg = self._stats.pages
+                    moved = len(h.page_missing
+                                if h.page_missing is not None
+                                else range(h.n_pages))
+                    pg["handoff_pages_moved"] = (
+                        pg.get("handoff_pages_moved", 0) + moved)
+                    pg["handoff_pages_dedup"] = (
+                        pg.get("handoff_pages_dedup", 0) + len(pinned))
             return True
         return False                  # caller requeues
+
+    def _dedup_pages(self, h: CacheHandoff, eng: EngineCore
+                     ) -> Tuple[Dict[int, int], Optional[Any]]:
+        """Before delivering a paged handoff, pin the target pool's
+        prefix-index hits for the advertised page hashes and strip those
+        pages from the travelling payload — the handoff then moves only
+        what the target doesn't already hold.  Returns the pins and the
+        saved full payload for the failure unwind."""
+        if (h.stateless or h.done or not h.paged or not h.page_hashes
+                or not isinstance(h.rows, dict)):
+            return {}, None
+        pin = getattr(eng, "pin_page_hashes", None)
+        if pin is None:
+            return {}, None
+        pinned = pin(h.page_hashes)
+        if not pinned:
+            return {}, None
+        full_rows = h.rows
+        missing = [i for i in range(h.n_pages) if i not in pinned]
+        h.page_pinned = dict(pinned)
+        h.page_missing = missing
+        h.rows = {"pages": PagePool.take_payload(full_rows["pages"],
+                                                 missing),
+                  "residual": full_rows["residual"]}
+        return pinned, full_rows
+
+    def _undedup_pages(self, h: CacheHandoff, eng: EngineCore,
+                       pinned: Dict[int, int], full_rows: Optional[Any]
+                       ) -> None:
+        """Failed delivery: restore the full payload and drop the pins
+        taken on the failed target, so the next candidate (with its own
+        prefix index) re-dedups from scratch."""
+        if full_rows is not None:
+            h.rows = full_rows
+            h.page_missing = list(range(h.n_pages))
+        h.page_pinned = None
+        if pinned:
+            eng.release_page_pins(list(pinned.values()))
 
 
 def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
@@ -744,7 +942,10 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
                             scheduler: Optional[Scheduler] = None,
                             clock: Callable[[], float] = time.perf_counter,
                             kernel_tune: Optional[bool] = None,
-                            transport: Optional[Any] = None
+                            transport: Optional[Any] = None,
+                            page_size: Optional[int] = None,
+                            n_pages: Optional[int] = None,
+                            quantize_pages: bool = False
                             ) -> DisaggregatedEngine:
     """The standard LM disaggregation: one :class:`PrefillEngine` feeding
     ``n_decode`` :class:`DecodeEngine`\\ s of ``n_slots`` slots each,
@@ -760,13 +961,15 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
     if len(decode_schedulers) != n_decode:
         raise ValueError(f"need one decode scheduler per engine "
                          f"({len(decode_schedulers)} != {n_decode})")
+    pk = dict(page_size=page_size, n_pages=n_pages,
+              quantize_pages=quantize_pages)
     pre = PrefillEngine(cfg, params, n_slots=prefill_slots or n_slots,
                         max_len=max_len, seed=seed,
                         scheduler=prefill_scheduler, clock=clock,
-                        kernel_tune=kernel_tune)
+                        kernel_tune=kernel_tune, **pk)
     dec = [DecodeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
                         seed=seed, scheduler=decode_schedulers[i],
-                        clock=clock, kernel_tune=kernel_tune)
+                        clock=clock, kernel_tune=kernel_tune, **pk)
            for i in range(n_decode)]
     return DisaggregatedEngine(pre, dec, scheduler=scheduler, clock=clock,
                                transport=transport)
@@ -781,7 +984,10 @@ def multihost_disaggregated_lm_engine(cfg, params, n_slots: int = 4,
                                       = time.perf_counter,
                                       kernel_tune: Optional[bool] = None,
                                       transport: Optional[Any] = "auto",
-                                      devices: Optional[List[Any]] = None
+                                      devices: Optional[List[Any]] = None,
+                                      page_size: Optional[int] = None,
+                                      n_pages: Optional[int] = None,
+                                      quantize_pages: bool = False
                                       ) -> DisaggregatedEngine:
     """Multi-host-shaped LM disaggregation: prefill and every decode
     engine own **distinct meshes** over disjoint device groups
@@ -804,13 +1010,15 @@ def multihost_disaggregated_lm_engine(cfg, params, n_slots: int = 4,
     from repro.parallel.sharding import disjoint_submeshes
 
     meshes = disjoint_submeshes(1 + n_decode, devices=devices)
+    pk = dict(page_size=page_size, n_pages=n_pages,
+              quantize_pages=quantize_pages)
     pre = PrefillEngine(cfg, params, n_slots=prefill_slots or n_slots,
                         max_len=max_len, seed=seed,
                         scheduler=ShardedScheduler(meshes[0]), clock=clock,
-                        kernel_tune=kernel_tune)
+                        kernel_tune=kernel_tune, **pk)
     dec = [DecodeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
                         seed=seed, scheduler=ShardedScheduler(meshes[1 + i]),
-                        clock=clock, kernel_tune=kernel_tune)
+                        clock=clock, kernel_tune=kernel_tune, **pk)
            for i in range(n_decode)]
     return DisaggregatedEngine(pre, dec, scheduler=scheduler, clock=clock,
                                transport=transport)

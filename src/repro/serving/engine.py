@@ -40,6 +40,16 @@ Streaming: requests submitted with ``stream=True`` additionally emit one
 :class:`repro.serving.StreamEvent` per generated token (prompt tokens are
 not echoed), drained via ``poll(stream=True)``; the final event carries
 the :class:`Completion`.  Plain ``poll()`` stays completion-level.
+
+Paged mode (``page_size=...``): the dense slot caches are replaced by a
+:class:`repro.serving.pages.PagePool` — a global page pool with
+per-slot page tables, a content-addressed prefix cache (shared prompt
+prefixes prefill once; later requests pin the shared read-only pages
+and prefill only their suffix via ``lm.continuation_prefill_step``),
+optional int8 page quantization, reference-splice preemption (O(1), no
+device traffic), and host-spill fallback when the pool runs dry.  The
+unquantized paged engine is bit-identical to the dense one
+(regression-tested); see ``docs/serving.md``.
 """
 
 from __future__ import annotations
@@ -93,7 +103,11 @@ class ServeEngine(EngineCore):
                  max_len: int = 512, seed: int = 0,
                  scheduler: Optional[Scheduler] = None,
                  clock=time.perf_counter,
-                 kernel_tune: Optional[bool] = None):
+                 kernel_tune: Optional[bool] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 quantize_pages: bool = False,
+                 prefix_cache: bool = True):
         assert cfg.family != "audio", "encoder models have no decode path"
         self.cfg = cfg
         self.params = params
@@ -103,6 +117,15 @@ class ServeEngine(EngineCore):
         # attention masks cache rows: admission is length-bucketed instead
         self._recurrent = cfg.family in ("ssm", "hybrid")
         self._rng = np.random.RandomState(seed)
+        self._prefix_cache = bool(prefix_cache)
+        if page_size is not None:
+            from repro.serving.pages import PagePool
+
+            self._pages: Optional[Any] = PagePool(
+                cfg, n_slots, max_len, page_size, n_pages=n_pages,
+                quantize=quantize_pages)
+        else:
+            self._pages = None
         self._decode = jax.jit(
             lambda p, t, pos, c: lm.decode_step(
                 p, cfg, {"tokens": t, "pos": pos}, c))
@@ -114,9 +137,26 @@ class ServeEngine(EngineCore):
             lambda idx, c: lm.gather_cache_rows(cfg, idx, c))
         self._inject = jax.jit(
             lambda rows, idx, c: lm.scatter_cache_rows(cfg, idx, rows, c))
+        if self._pages is not None:
+            self._decode_paged = jax.jit(
+                lambda p, t, pos, tb, pool, res: self._decode_paged_impl(
+                    p, t, pos, tb, pool, res))
+            self._prefill_paged = jax.jit(
+                lambda off, p, t, ln, pmap, pref, idx, pool, res:
+                self._prefill_paged_impl(off, p, t, ln, pmap, pref, idx,
+                                         pool, res),
+                static_argnums=(0,))
         super().__init__(capacity=n_slots, scheduler=scheduler, clock=clock,
                          kernel_tune=kernel_tune)
-        self._caches = lm.make_caches(cfg, n_slots, max_len)
+        if self._pages is not None:
+            # paged mode never allocates the dense slot caches — that is
+            # the whole point (resident capacity bounded by pages, not
+            # slots x max_len); generate() builds its own fresh caches
+            self._caches = None
+            self._pool = self._pages.init_pool_arrays()
+            self._residual = self._pages.init_residual_arrays()
+        else:
+            self._caches = lm.make_caches(cfg, n_slots, max_len)
         self._tok = np.zeros((n_slots,), np.int32)   # pending token per slot
         self._pos = np.zeros((n_slots,), np.int32)   # its cache index
         if isinstance(self.scheduler, ShardedScheduler):
@@ -134,6 +174,23 @@ class ServeEngine(EngineCore):
 
         self.params = jax.device_put(
             self.params, NamedSharding(sched.mesh, PartitionSpec()))
+        if self._pages is not None:
+            # the pool's page axis keeps the logical name "batch", so the
+            # same shape-aware rules that shard slots shard pages; the
+            # pool's block-preferring allocator then keeps a slot's pages
+            # on the device that owns the slot's decode rows
+            from repro.parallel import sharding as sharding_lib
+
+            self._pool = jax.device_put(
+                self._pool, sharding_lib.shardings_for(
+                    self._pool, self._pages.pool_specs(),
+                    sched.rules, sched.mesh))
+            self._residual = jax.device_put(
+                self._residual, sharding_lib.shardings_for(
+                    self._residual, self._pages.residual_specs(),
+                    sched.rules, sched.mesh))
+            self._pages.set_device_blocks(sched.n_devices)
+            return
         self._caches = jax.device_put(
             self._caches, lm.cache_shardings(self.cfg, self._caches,
                                              sched.mesh, sched.rules))
@@ -146,6 +203,43 @@ class ServeEngine(EngineCore):
         logits, sub = lm.ragged_prefill_step(
             params, self.cfg, {"tokens": tokens, "lengths": lengths}, sub)
         return logits, lm.scatter_cache_rows(self.cfg, slot_idx, sub, caches)
+
+    def _decode_paged_impl(self, params, tok, pos, tables, pool, residual):
+        """One paged decode tick: gather the dense view through the page
+        tables, run the ordinary ``lm.decode_step``, scatter each slot's
+        new row back into its mapped page.  Residual (non-paged) leaves
+        are read-only during decode."""
+        view = self._pages.build_view(pool, residual, tables)
+        logits, new_view = lm.decode_step(
+            params, self.cfg, {"tokens": tok, "pos": pos}, view)
+        return logits, self._pages.scatter_decode_rows(
+            pool, new_view, tables, pos)
+
+    def _prefill_paged_impl(self, off, params, tokens, lengths, page_map,
+                            prefix_rows, slot_idx, pool, residual):
+        """Paged (possibly continuation) prefill: a fresh sub cache just
+        long enough for the written page span, prefilled from position
+        ``off`` (0 = ordinary ragged prefill; > 0 continues from the
+        dequantized shared-prefix pages in ``prefix_rows``), then
+        scattered into the pool at page granularity."""
+        pages = self._pages
+        nb = tokens.shape[0]
+        total = off + page_map.shape[1] * pages.page_size
+        if off == 0:
+            sub = lm.make_caches(self.cfg, nb, total)
+            logits, sub = lm.ragged_prefill_step(
+                params, self.cfg, {"tokens": tokens, "lengths": lengths},
+                sub)
+        else:
+            sub = pages.make_continuation_caches(pool, prefix_rows, nb,
+                                                 total)
+            logits, sub = lm.continuation_prefill_step(
+                params, self.cfg, {"tokens": tokens, "lengths": lengths},
+                sub, off)
+        new_pool = pages.write_prefill_pages(pool, sub, page_map, off)
+        new_res = pages.scatter_residual_rows(
+            residual, pages.residual_rows_from(sub), slot_idx)
+        return logits, new_pool, new_res
 
     # -- sampling ----------------------------------------------------------
 
@@ -251,6 +345,8 @@ class ServeEngine(EngineCore):
         continues from the saved token/position — the finished sequence
         is exactly what an un-preempted run produces.
         """
+        if self._pages is not None:
+            return self._admit_paged(new)
         resume = [(s, t) for s, t in new if "resume_rows" in t.state]
         new = [(s, t) for s, t in new if "resume_rows" not in t.state]
         pre_finished: List[int] = []
@@ -313,6 +409,217 @@ class ServeEngine(EngineCore):
                 finished.append(s)
         return finished
 
+    # -- paged-cache admission / lifecycle ---------------------------------
+
+    def _admit_paged(self, new: List[Tuple[int, SlotTask]]
+                     ) -> Tuple[List[int], int]:
+        """Paged admission.  Resumed tasks splice their saved table row
+        back (or re-import a host spill); fresh tasks look their prompt
+        up in the prefix index and prefill only past the longest hit.
+
+        Fresh tasks are processed in waves of equal prefix-hit length,
+        shortest first, and a wave defers any task whose *next* page
+        hash duplicates a groupmate's — that page registers when the
+        representative's group prefills, so the deferred task re-checks
+        and picks the hit up.  Two identical system prompts submitted in
+        the same tick therefore still prefill the shared span exactly
+        once."""
+        pages = self._pages
+        ps = pages.page_size
+        resume = [(s, t) for s, t in new
+                  if "resume_pages" in t.state or "resume_spill" in t.state]
+        resumed = {id(t) for _, t in resume}
+        fresh = [(s, t) for s, t in new if id(t) not in resumed]
+        pre_finished: List[int] = []
+        for s, task in resume:
+            if "resume_spill" in task.state:
+                payload, n = task.state.pop("resume_spill")
+                pgs = self._alloc_pages(n, s)
+                self._pool = pages.import_pages(self._pool, payload, pgs)
+            else:
+                pgs = task.state.pop("resume_pages")
+            pages.bind_slot(s, pgs)
+            self._tok[s] = task.state.pop("resume_tok")
+            self._pos[s] = task.state.pop("resume_pos")
+            if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
+                pre_finished.append(s)
+        if not fresh:
+            return pre_finished, 0
+        infos: List[List[Any]] = []
+        for s, task in fresh:
+            hashes = (pages.chain_hashes(task.payload.prompt)
+                      if self._prefix_cache else [])
+            hits = pages.acquire_prefix(hashes) if hashes else []
+            infos.append([s, task, hashes, hits])
+        finished = list(pre_finished)
+        while infos:
+            min_hit = min(len(info[3]) for info in infos)
+            group, defer, seen_next = [], [], set()
+            for info in infos:
+                if len(info[3]) != min_hit:
+                    defer.append(info)
+                    continue
+                nxt = info[2][min_hit] if min_hit < len(info[2]) else None
+                if nxt is not None and nxt in seen_next:
+                    defer.append(info)
+                    continue
+                if nxt is not None:
+                    seen_next.add(nxt)
+                group.append(info)
+            finished += self._prefill_paged_group(group, min_hit * ps)
+            for info in defer:   # hits can only grow as groups register
+                info[3] += pages.extend_prefix(info[2], len(info[3]))
+            infos = defer
+        return finished, len(fresh)
+
+    def _prefill_paged_group(self, group: List[List[Any]], off: int
+                             ) -> List[int]:
+        """Prefill one wave of tasks sharing prefix-hit length ``off``
+        (0 = full prefill).  Suffixes pad to the dense engine's pow2
+        bucket (so full prefills stay bit-identical to the dense path),
+        pages past each task's own span map to the drop sentinel, and
+        full suffix pages register into the prefix index."""
+        pages = self._pages
+        ps = pages.page_size
+        nb = pow2_bucket(len(group), self.capacity)
+        smax = max(len(info[1].payload.prompt) - off for info in group)
+        splen = pow2_bucket(smax, self.max_len - off)
+        npg = -(-splen // ps)
+        if off == 0:
+            self._maybe_tune_prefill(nb, splen)
+        tokens = np.zeros((nb, splen), np.int32)
+        lengths = np.ones((nb,), np.int32)
+        slot_idx = np.full((nb,), self.capacity, np.int32)  # pad rows: OOB
+        page_rows = np.full((nb, npg), pages.n_pages, np.int32)
+        prefix_rows = np.zeros((nb, off // ps), np.int32)
+        hit_reqs = hit_pages = 0
+        for i, (s, task, hashes, hits) in enumerate(group):
+            p = task.payload.prompt
+            suffix = p[off:]
+            tokens[i, :len(suffix)] = suffix
+            lengths[i] = len(suffix)
+            slot_idx[i] = s
+            # pages covering positions [0, len(p)] — the prompt plus the
+            # first decode write; later pages allocate lazily in _step
+            own = self._alloc_pages(len(p) // ps + 1 - len(hits), s)
+            allp = list(hits) + own
+            pages.bind_slot(s, allp)
+            for j in range(len(hits), len(hashes)):
+                pages.register_hash(allp[j], hashes[j])
+            base = off // ps
+            for j in range(min(npg, len(allp) - base)):
+                page_rows[i, j] = allp[base + j]
+            prefix_rows[i, :] = allp[:base]
+            if hits:
+                hit_reqs += 1
+                hit_pages += len(hits)
+        place = self.scheduler.place
+        logits, self._pool, self._residual = self._prefill_paged(
+            off, self.params, place(tokens), place(lengths),
+            jnp.asarray(page_rows), jnp.asarray(prefix_rows),
+            place(slot_idx), self._pool, self._residual)
+        logits = np.asarray(jax.block_until_ready(logits))
+        finished = []
+        for i, (s, task, hashes, hits) in enumerate(group):
+            req = task.payload
+            tok = self._sample_row(logits[i], req.temperature)
+            task.state = {"out": list(req.prompt) + [tok],
+                          "left": req.max_new_tokens - 1}
+            self._emit(task.rid, tok)
+            self._tok[s] = tok
+            self._pos[s] = len(req.prompt)
+            if task.state["left"] <= 0 or self._pos[s] >= self.max_len:
+                finished.append(s)
+        self._count_pages(
+            prefill_ticks=1, prefix_hits=hit_reqs,
+            prefix_pages_hit=hit_pages,
+            prefill_tokens=sum(len(info[1].payload.prompt) - off
+                               for info in group))
+        return finished
+
+    def _alloc_pages(self, n: int, slot: int) -> List[int]:
+        """Allocate with spill fallback: when the pool is dry, preempted
+        (queued) requests' pages move to host memory and free up —
+        admission pressure never crashes a losslessly preempted task."""
+        if n <= 0:
+            return []
+        from repro.serving.pages import PagePoolExhausted
+
+        try:
+            return self._pages.allocate(n, slot)
+        except PagePoolExhausted:
+            if not self._spill_preempted():
+                raise
+            return self._pages.allocate(n, slot)
+
+    def _spill_preempted(self) -> bool:
+        """Export every queued preempted task's pages to host numpy and
+        release them; resume re-imports into fresh pages.  Returns
+        whether anything was spilled."""
+        with self._lock:
+            targets = [t for t in self._queue if "resume_pages" in t.state]
+        spilled = 0
+        for task in targets:
+            pgs = task.state.pop("resume_pages")
+            payload = jax.tree.map(np.asarray, jax.block_until_ready(
+                self._pages.export_pages(self._pool, pgs)))
+            task.state["resume_spill"] = (payload, len(pgs))
+            self._pages.release(pgs)
+            spilled += len(pgs)
+        if spilled:
+            self._count_pages(spilled_pages=spilled)
+        return spilled > 0
+
+    def _ensure_decode_pages(self, active: List[Tuple[int, SlotTask]]
+                             ) -> None:
+        """Allocate the page under each active slot's write head when the
+        decode position crosses a page boundary."""
+        pages = self._pages
+        for s, _ in active:
+            idx = int(self._pos[s]) // pages.page_size
+            if pages.page_at(s, idx) < 0:
+                pages.set_slot_page(s, idx, self._alloc_pages(1, s)[0])
+
+    def _release_slot(self, slot: int, task: SlotTask) -> None:
+        if getattr(self, "_pages", None) is not None:
+            pgs = self._pages.unbind_slot(slot)
+            if pgs:
+                self._pages.release(pgs)
+
+    def _count_pages(self, **counts: int) -> None:
+        with self._lock:
+            d = self._stats.pages
+            for k, v in counts.items():
+                d[k] = d.get(k, 0) + int(v)
+
+    def pin_page_hashes(self, hashes: List[Optional[bytes]]
+                        ) -> Dict[int, int]:
+        """Pin prefix-index hits on this engine's pool (empty when not
+        paged) — the disaggregated front-end's handoff-dedup probe."""
+        if self._pages is None:
+            return {}
+        return self._pages.pin_hashes(hashes)
+
+    def release_page_pins(self, pages: List[int]) -> None:
+        """Drop references taken by :meth:`pin_page_hashes` — the
+        front-end's failed-delivery unwind."""
+        if self._pages is not None and pages:
+            self._pages.release(pages)
+
+    @property
+    def paged(self) -> bool:
+        return self._pages is not None
+
+    @property
+    def free_pages(self) -> Optional[int]:
+        """Allocatable pages right now (None when not paged) — the
+        admission-control backpressure gauge."""
+        return self._pages.free_pages if self._pages is not None else None
+
+    @property
+    def total_pages(self) -> Optional[int]:
+        return self._pages.total_pages if self._pages is not None else None
+
     def _batch_for(self, n_active: int) -> int:
         return self.capacity            # decode shape pinned by the caches
 
@@ -333,7 +640,18 @@ class ServeEngine(EngineCore):
         the pending token/position into ``task.state``; the generated
         tokens already live there (``state["out"]``).  ``_admit`` later
         re-injects the rows at whatever slot the task lands in and the
-        decode continues exactly where it stopped."""
+        decode continues exactly where it stopped.
+
+        Paged mode preempts by *reference*: the task keeps its page
+        ownership and only the table row is saved — O(1), no device
+        gather; resume splices the row into the new slot.  (If the pool
+        later runs dry, ``_spill_preempted`` demotes the references to a
+        host copy — still lossless.)"""
+        if self._pages is not None:
+            task.state["resume_pages"] = self._pages.unbind_slot(slot)
+            task.state["resume_tok"] = int(self._tok[slot])
+            task.state["resume_pos"] = int(self._pos[slot])
+            return
         task.state["resume_rows"] = jax.block_until_ready(
             self._gather(jnp.asarray([slot], jnp.int32), self._caches))
         task.state["resume_tok"] = int(self._tok[slot])
@@ -386,9 +704,16 @@ class ServeEngine(EngineCore):
     def _step(self, active: List[Tuple[int, SlotTask]], n_batch: int
               ) -> Tuple[List[int], int]:
         place = self.scheduler.place
-        logits, self._caches = self._decode(
-            self.params, place(self._tok[:, None]),
-            place(self._pos), self._caches)
+        if self._pages is not None:
+            self._ensure_decode_pages(active)
+            logits, self._pool = self._decode_paged(
+                self.params, place(self._tok[:, None]), place(self._pos),
+                jnp.asarray(self._pages.tables_snapshot()),
+                self._pool, self._residual)
+        else:
+            logits, self._caches = self._decode(
+                self.params, place(self._tok[:, None]),
+                place(self._pos), self._caches)
         logits = np.asarray(jax.block_until_ready(logits))
         finished = []
         for s, task in active:
@@ -413,3 +738,14 @@ class ServeEngine(EngineCore):
                   else list(entry.request.prompt))   # max_new_tokens <= 0
         return Completion(rid=entry.request.rid, tokens=tokens,
                           latency_s=latency_s)
+
+    def stats(self):
+        """Engine stats; paged engines additionally merge the pool's
+        allocation/eviction/pin counters into ``stats().pages`` next to
+        the engine-side prefill/prefix-hit counters."""
+        st = super().stats()
+        if self._pages is not None:
+            merged = self._pages.counters()
+            merged.update(st.pages)
+            st.pages = merged
+        return st

@@ -1,0 +1,708 @@
+"""Block-paged KV cache: global page pool, per-slot page tables, prefix
+reuse, and quantized pages.
+
+The dense serving cache (``lm.make_caches``) gives every slot a full
+``max_len`` KV allocation, so resident-request capacity is bounded by
+slot count and shared system prompts re-prefill per request.  This
+module replaces that layout with the paged one:
+
+  * **Page pool** — every cache leaf whose :func:`lm.cache_specs` axes
+    contain both ``batch`` and ``kv_seq`` is re-shaped so the slot axis
+    becomes a *page* axis (``n_pages``) and the sequence axis becomes
+    the *within-page* axis (``page_size``).  Leaves without a ``kv_seq``
+    axis (e.g. the vlm cross-attention cache) stay dense slot-axis
+    "residual" state.  The pool axes keep their logical names, so
+    ``parallel.sharding`` rules place pages across a mesh exactly the
+    way they place slots (the page axis is the ``batch`` axis).
+  * **Page tables** — host-side ``(n_slots, max_len // page_size)``
+    int32 maps from slot-local page index to pool page id (``-1`` =
+    unmapped).  The traced ops below consume a device copy per tick;
+    geometry is static so nothing retraces.
+  * **Traced ops** — :meth:`PagePool.build_view` gathers a dense
+    ``(n_slots, max_len)`` cache view for ``lm.decode_step``,
+    :meth:`PagePool.scatter_decode_rows` writes one decoded row per
+    slot back through the table, :meth:`PagePool.write_prefill_pages`
+    scatters freshly prefilled rows at page granularity, and
+    :meth:`PagePool.make_continuation_caches` materialises a
+    dequantized shared-prefix cache for
+    :func:`lm.continuation_prefill_step`.  All are pure functions of
+    ``(pool arrays, tables)`` reading only init-time metadata, so they
+    jit inside the engine tick.
+  * **Content-addressed prefix index** — full prompt pages hash as a
+    chain (``h_j = sha256(h_{j-1} || tokens_j)`` seeded with the model
+    arch, page size, and quantization flag), registered pages are
+    never written again (decode writes land at positions past the
+    prompt, i.e. in privately-owned pages, so copy-on-write is
+    structural rather than copied), and a later request whose chain
+    prefix matches pins the shared pages and prefills only its suffix.
+  * **Quantized pages** — with ``quantize=True`` KV pools store int8
+    with a per-row float32 scale pool alongside (``k`` → ``k_scale``,
+    amax/127 per ``(page, position)`` over heads x head_dim —
+    ``attention.quantize_kv_rows``).  Prefill computes bf16 and
+    quantizes at the page write; decode reads the int8 view and
+    dequantizes inside ``attention.self_attention``.
+
+Lifecycle: a page is *free*, *owned* (refcount > 0; each resident or
+preempted request holds one reference per page in its table), or
+*cached* (refcount 0 but still registered in the prefix index —
+evictable in LRU order when the free list runs dry).  Lossless
+preemption is a table-row save (pages stay owned, O(1), no device
+traffic); a disaggregated handoff exports page payloads and the decode
+side re-imports only the pages it doesn't already hold by hash.
+
+Thread-safety: the pool is shared across engine tick threads and the
+disaggregated front-end (which pins prefix hits on a *target* engine's
+pool while that engine ticks), so all host state is guarded by the
+pool's own lock; see the ``guarded-by`` annotations, enforced by
+capslint's lock-discipline rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention
+from repro.models import lm
+
+PAGEABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free or evictable page is left.  Raised by
+    :meth:`PagePool.allocate`; the serving engine responds by spilling
+    preempted requests' pages to host memory and retrying, so the error
+    only propagates when *resident* demand genuinely exceeds the pool."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _PagedLeaf:
+    """Init-time metadata for one paged pool leaf (KV or scale)."""
+
+    path: Tuple[str, ...]             # path in the make_caches tree
+    key: str                          # "/".join(path): flat pool-dict key
+    axes: Tuple[Optional[str], ...]   # logical axes (pool == view names)
+    bax: int                          # batch/page axis position
+    sax: int                          # kv_seq/within-page axis position
+    shape: Tuple[int, ...]            # pool array shape
+    dtype: Any                        # pool dtype (int8 when quantized)
+    view_dtype: Any                   # dense-view dtype (the model's)
+    scale_key: Optional[str] = None   # sibling scale leaf (KV leaves only)
+    scale_path: Optional[Tuple[str, ...]] = None
+    scale_shape: Optional[Tuple[int, ...]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _ResidualLeaf:
+    """A cache leaf that stays dense slot-axis (no ``kv_seq`` axis)."""
+
+    path: Tuple[str, ...]
+    key: str
+    axes: Tuple[Optional[str], ...]
+    bax: int                          # batch (slot) axis position
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+def _walk(tree: Any, prefix: Tuple[str, ...] = ()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def _get(tree: Any, path: Sequence[str]) -> Any:
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _set(tree: Dict[str, Any], path: Sequence[str], val: Any) -> None:
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = val
+
+
+class PagePool:
+    """Global page pool + per-slot page tables for one serving engine.
+
+    Splits into two halves that never mix:
+
+      * pure *traced* ops (``build_view`` / ``scatter_decode_rows`` /
+        ``write_prefill_pages`` / ``make_continuation_caches`` /
+        ``export_pages`` / ``import_pages`` and the residual-row
+        helpers) — functions of explicit array arguments plus
+        init-time metadata, safe under ``jax.jit``;
+      * host *bookkeeping* (allocation, refcounts, the prefix index,
+        page tables) — all under ``self._lock``.
+
+    The engine owns the actual pool/residual arrays (so its jitted tick
+    can thread them functionally) and calls back here for both halves.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, page_size: int,
+                 n_pages: Optional[int] = None, quantize: bool = False):
+        if cfg.family not in PAGEABLE_FAMILIES:
+            raise ValueError(
+                f"paged KV cache requires an attention family "
+                f"{PAGEABLE_FAMILIES}, not {cfg.family!r} (recurrent "
+                f"state has no kv_seq axis to page)")
+        if page_size <= 0 or max_len % page_size != 0:
+            raise ValueError(f"page_size={page_size} must be positive and "
+                             f"divide max_len={max_len}")
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.pages_per_slot = max_len // page_size
+        self.n_pages = int(n_pages) if n_pages is not None \
+            else self.n_slots * self.pages_per_slot
+        if self.n_pages < self.pages_per_slot:
+            raise ValueError(
+                f"n_pages={self.n_pages} cannot hold even one full slot "
+                f"({self.pages_per_slot} pages)")
+        self.quantize = bool(quantize)
+
+        specs = lm.cache_specs(cfg)
+        structs = lm.make_caches(cfg, n_slots, max_len, as_structs=True)
+        self._paged: List[_PagedLeaf] = []
+        self._residual: List[_ResidualLeaf] = []
+        for path, axes in _walk(specs):
+            st = _get(structs, path)
+            if "batch" in axes and "kv_seq" in axes:
+                bax, sax = axes.index("batch"), axes.index("kv_seq")
+                if not (bax < sax and len(axes) == sax + 3):
+                    raise ValueError(
+                        f"unsupported paged leaf layout {axes} at "
+                        f"{'/'.join(path)}")
+                shape = list(st.shape)
+                shape[bax], shape[sax] = self.n_pages, self.page_size
+                kw: Dict[str, Any] = {}
+                if self.quantize:
+                    kw["scale_path"] = path[:-1] + (path[-1] + "_scale",)
+                    kw["scale_key"] = "/".join(kw["scale_path"])
+                    kw["scale_shape"] = tuple(shape[:sax + 1])
+                self._paged.append(_PagedLeaf(
+                    path=path, key="/".join(path), axes=tuple(axes),
+                    bax=bax, sax=sax, shape=tuple(shape),
+                    dtype=jnp.int8 if self.quantize else st.dtype,
+                    view_dtype=st.dtype, **kw))
+            else:
+                if "batch" not in axes:
+                    raise ValueError(
+                        f"cache leaf {'/'.join(path)} has neither a "
+                        f"batch nor kv_seq axis; cannot page or slot it")
+                self._residual.append(_ResidualLeaf(
+                    path=path, key="/".join(path), axes=tuple(axes),
+                    bax=axes.index("batch"), shape=tuple(st.shape),
+                    dtype=st.dtype))
+        if not self._paged:
+            raise ValueError(f"{cfg.family} cache has no pageable leaves")
+
+        # chain-hash seed: two pools agree on page hashes iff they agree
+        # on the model, the page geometry, and the page representation
+        self._hash_seed = hashlib.sha256(
+            f"{cfg.arch_id}|{self.page_size}|{int(self.quantize)}"
+            .encode()).digest()
+
+        self._lock = threading.Lock()
+        self._free: List[int] = list(       # guarded-by: _lock
+            range(self.n_pages))
+        self._refs = np.zeros(              # guarded-by: _lock
+            (self.n_pages,), np.int32)
+        self._prefix_index: Dict[bytes, int] = {}   # guarded-by: _lock
+        self._page_hash: Dict[int, bytes] = {}      # guarded-by: _lock
+        self._evictable: "OrderedDict[int, None]" \
+            = OrderedDict()                 # guarded-by: _lock
+        self._tables = np.full(             # guarded-by: _lock
+            (self.n_slots, self.pages_per_slot), -1, np.int32)
+        self._counters: Dict[str, int] = {  # guarded-by: _lock
+            "allocated": 0, "freed": 0, "cache_evicted": 0,
+            "registered": 0, "pinned": 0}
+        self._n_blocks = 1                  # guarded-by: _lock
+
+    # -- geometry / array construction (no host state) ---------------------
+
+    def init_pool_arrays(self) -> Dict[str, jax.Array]:
+        """Zeroed pool arrays, one flat dict entry per paged leaf (plus
+        its scale sibling when quantized)."""
+        out: Dict[str, jax.Array] = {}
+        for lf in self._paged:
+            out[lf.key] = jnp.zeros(lf.shape, lf.dtype)
+            if lf.scale_key is not None:
+                out[lf.scale_key] = jnp.zeros(lf.scale_shape, jnp.float32)
+        return out
+
+    def init_residual_arrays(self) -> Dict[str, jax.Array]:
+        """Zeroed dense slot-axis arrays for the non-paged leaves."""
+        return {rl.key: jnp.zeros(rl.shape, rl.dtype)
+                for rl in self._residual}
+
+    def pool_specs(self) -> Dict[str, Tuple[Optional[str], ...]]:
+        """Logical-axis dict matching :meth:`init_pool_arrays` — the page
+        axis keeps the name ``batch``, so ``sharding.shardings_for``
+        places pages across a mesh the same way it places slots."""
+        out: Dict[str, Tuple[Optional[str], ...]] = {}
+        for lf in self._paged:
+            out[lf.key] = lf.axes
+            if lf.scale_key is not None:
+                out[lf.scale_key] = lf.axes[:lf.sax + 1]
+        return out
+
+    def residual_specs(self) -> Dict[str, Tuple[Optional[str], ...]]:
+        return {rl.key: rl.axes for rl in self._residual}
+
+    def _all_paged(self) -> List[Tuple[str, Tuple[str, ...], int, int]]:
+        """(key, view path, bax, sax) for every pool leaf, scales
+        included — the leaves traced gathers/scatters iterate."""
+        out = []
+        for lf in self._paged:
+            out.append((lf.key, lf.path, lf.bax, lf.sax))
+            if lf.scale_key is not None:
+                out.append((lf.scale_key, lf.scale_path, lf.bax, lf.sax))
+        return out
+
+    def page_payload_struct(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Expected :meth:`export_pages` payload geometry for ``n`` pages
+        (page axis leading) — what a decode engine validates a paged
+        handoff against."""
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        for lf in self._paged:
+            moved = [lf.shape[lf.bax]] + [s for i, s in enumerate(lf.shape)
+                                          if i != lf.bax]
+            out[lf.key] = jax.ShapeDtypeStruct((n,) + tuple(moved[1:]),
+                                               lf.dtype)
+            if lf.scale_key is not None:
+                smoved = [s for i, s in enumerate(lf.scale_shape)
+                          if i != lf.bax]
+                out[lf.scale_key] = jax.ShapeDtypeStruct(
+                    (n,) + tuple(smoved), jnp.float32)
+        return out
+
+    # -- traced ops (pure; safe under jit) ---------------------------------
+
+    def _gather_pages(self, arr: jax.Array, tv: jax.Array, bax: int,
+                      sax: int) -> jax.Array:
+        """Gather table rows ``tv`` (B, P) of pool leaf ``arr`` into a
+        dense (B, P * page_size) sequence at the leaf's own axis
+        positions.  ``tv`` must be pre-clipped to valid page ids."""
+        pm = jnp.moveaxis(arr, (bax, sax), (0, 1))
+        g = pm[tv]
+        g = g.reshape((tv.shape[0], tv.shape[1] * self.page_size)
+                      + pm.shape[2:])
+        return jnp.moveaxis(g, (0, 1), (bax, sax))
+
+    def build_view(self, pool: Dict[str, jax.Array],
+                   residual: Dict[str, jax.Array], tables: jax.Array,
+                   dequant: bool = False) -> Dict[str, Any]:
+        """Assemble the dense ``(n_slots, max_len)`` cache-view pytree
+        ``lm.decode_step`` consumes.  Unmapped table entries clip to
+        page 0 — their rows are garbage, masked by the attention
+        ``kv_valid_len`` (positions past a slot's write head contribute
+        exact zeros).  With ``dequant=True`` a quantized pool yields a
+        bf16 view without scale leaves; by default the int8 + scale
+        leaves pass through for dequant-on-read in the attention."""
+        tv = jnp.clip(jnp.asarray(tables, jnp.int32), 0, self.n_pages - 1)
+        view: Dict[str, Any] = {}
+        for lf in self._paged:
+            g = self._gather_pages(pool[lf.key], tv, lf.bax, lf.sax)
+            if lf.scale_key is not None:
+                gs = self._gather_pages(pool[lf.scale_key], tv, lf.bax,
+                                        lf.sax)
+                if dequant:
+                    g = attention.dequantize_kv(g, gs, lf.view_dtype)
+                else:
+                    _set(view, lf.scale_path, gs)
+            _set(view, lf.path, g)
+        for rl in self._residual:
+            _set(view, rl.path, residual[rl.key])
+        return view
+
+    def scatter_decode_rows(self, pool: Dict[str, jax.Array],
+                            new_view: Dict[str, Any], tables: jax.Array,
+                            pos: jax.Array) -> Dict[str, jax.Array]:
+        """Write each slot's decoded row (position ``pos[b]``) from the
+        updated view back into its mapped page.  Slots whose page is
+        unmapped (table ``-1`` — idle slots) route to an out-of-bounds
+        sentinel and drop: negative indices would *wrap* in jax scatter,
+        so the sentinel mapping is load-bearing."""
+        tables = jnp.asarray(tables, jnp.int32)
+        b = tables.shape[0]
+        pidx = pos // self.page_size
+        off_in = pos % self.page_size
+        pid = tables[jnp.arange(b), pidx]
+        pid = jnp.where(pid < 0, self.n_pages, pid)
+        new_pool = dict(pool)
+        for key, path, bax, sax in self._all_paged():
+            vm = jnp.moveaxis(_get(new_view, path), (bax, sax), (0, 1))
+            row = vm[jnp.arange(b), pos]
+            pm = jnp.moveaxis(new_pool[key], (bax, sax), (0, 1))
+            pm = pm.at[pid, off_in].set(row.astype(pm.dtype), mode="drop")
+            new_pool[key] = jnp.moveaxis(pm, (0, 1), (bax, sax))
+        return new_pool
+
+    def write_prefill_pages(self, pool: Dict[str, jax.Array],
+                            sub_caches: Dict[str, Any],
+                            page_map: jax.Array, off: int
+                            ) -> Dict[str, jax.Array]:
+        """Scatter freshly prefilled rows into the pool at page
+        granularity.  ``sub_caches`` is the (bf16) cache tree a prefill
+        step just wrote (kv_seq length >= ``off + npg * page_size``);
+        ``page_map`` (nb, npg) maps each batch row's page-aligned span
+        starting at ``off`` to pool page ids, with the out-of-bounds
+        sentinel ``n_pages`` marking pad rows / unallocated tail pages
+        (dropped).  Quantized pools quantize per row here — the one
+        place prefilled state crosses from bf16 into int8."""
+        nb, npg = page_map.shape
+        ps = self.page_size
+        flat = jnp.asarray(page_map, jnp.int32).reshape(-1)
+        new_pool = dict(pool)
+        for lf in self._paged:
+            sm = jnp.moveaxis(_get(sub_caches, lf.path), (lf.bax, lf.sax),
+                              (0, 1))
+            span = jax.lax.slice_in_dim(sm, off, off + npg * ps, axis=1)
+            rows = span.reshape((nb * npg, ps) + sm.shape[2:])
+            pm = jnp.moveaxis(new_pool[lf.key], (lf.bax, lf.sax), (0, 1))
+            if lf.scale_key is not None:
+                q, sc = attention.quantize_kv_rows(rows)
+                pm = pm.at[flat].set(q, mode="drop")
+                sp = jnp.moveaxis(new_pool[lf.scale_key],
+                                  (lf.bax, lf.sax), (0, 1))
+                sp = sp.at[flat].set(sc, mode="drop")
+                new_pool[lf.scale_key] = jnp.moveaxis(sp, (0, 1),
+                                                      (lf.bax, lf.sax))
+            else:
+                pm = pm.at[flat].set(rows.astype(pm.dtype), mode="drop")
+            new_pool[lf.key] = jnp.moveaxis(pm, (0, 1), (lf.bax, lf.sax))
+        return new_pool
+
+    def make_continuation_caches(self, pool: Dict[str, jax.Array],
+                                 prefix_tables: jax.Array, nb: int,
+                                 total_len: int) -> Dict[str, Any]:
+        """A fresh ``lm.make_caches(cfg, nb, total_len)`` tree whose
+        first ``prefix_tables.shape[1] * page_size`` rows hold the
+        (dequantized) shared-prefix pages — the cache
+        :func:`lm.continuation_prefill_step` continues from."""
+        ps = self.page_size
+        off = prefix_tables.shape[1] * ps
+        fresh = lm.make_caches(self.cfg, nb, total_len)
+        tv = jnp.clip(jnp.asarray(prefix_tables, jnp.int32), 0,
+                      self.n_pages - 1)
+        out: Dict[str, Any] = {}
+        for lf in self._paged:
+            g = self._gather_pages(pool[lf.key], tv, lf.bax, lf.sax)
+            if lf.scale_key is not None:
+                gs = self._gather_pages(pool[lf.scale_key], tv, lf.bax,
+                                        lf.sax)
+                g = attention.dequantize_kv(g, gs, lf.view_dtype)
+            base = jnp.moveaxis(_get(fresh, lf.path), (lf.bax, lf.sax),
+                                (0, 1))
+            gm = jnp.moveaxis(g, (lf.bax, lf.sax), (0, 1))
+            base = base.at[:, :off].set(gm.astype(base.dtype))
+            _set(out, lf.path, jnp.moveaxis(base, (0, 1), (lf.bax, lf.sax)))
+        for rl in self._residual:
+            # serving prompts carry no image features: the residual
+            # (vlm cross) cache is zeros, matching the unified engine
+            _set(out, rl.path, _get(fresh, rl.path))
+        return out
+
+    def residual_rows_from(self, sub_caches: Dict[str, Any]
+                           ) -> Dict[str, jax.Array]:
+        """Flat residual-leaf dict extracted from a full cache tree."""
+        return {rl.key: _get(sub_caches, rl.path) for rl in self._residual}
+
+    def gather_residual_rows(self, residual: Dict[str, jax.Array],
+                             slot_idx: jax.Array) -> Dict[str, jax.Array]:
+        return {rl.key: jnp.take(residual[rl.key],
+                                 jnp.asarray(slot_idx, jnp.int32),
+                                 axis=rl.bax)
+                for rl in self._residual}
+
+    def concat_residual_rows(self, rows_list: Sequence[Dict[str, Any]]
+                             ) -> Dict[str, jax.Array]:
+        """Concatenate per-slot residual-row dicts along the slot axis —
+        one batched scatter for a whole handoff group."""
+        return {rl.key: jnp.concatenate(
+                    [jnp.asarray(r[rl.key]) for r in rows_list],
+                    axis=rl.bax)
+                for rl in self._residual}
+
+    def residual_rows_struct(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Expected residual-row geometry for ``n`` slots — the other
+        half of a paged handoff's validation signature."""
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        for rl in self._residual:
+            shape = list(rl.shape)
+            shape[rl.bax] = n
+            out[rl.key] = jax.ShapeDtypeStruct(tuple(shape), rl.dtype)
+        return out
+
+    def scatter_residual_rows(self, residual: Dict[str, jax.Array],
+                              rows: Dict[str, jax.Array],
+                              slot_idx: jax.Array) -> Dict[str, jax.Array]:
+        """Write per-slot residual rows; out-of-range ``slot_idx``
+        (pad entries = ``n_slots``) drop."""
+        new = dict(residual)
+        idx = jnp.asarray(slot_idx, jnp.int32)
+        for rl in self._residual:
+            pm = jnp.moveaxis(new[rl.key], rl.bax, 0)
+            rm = jnp.moveaxis(rows[rl.key], rl.bax, 0)
+            pm = pm.at[idx].set(rm.astype(pm.dtype), mode="drop")
+            new[rl.key] = jnp.moveaxis(pm, 0, rl.bax)
+        return new
+
+    def export_pages(self, pool: Dict[str, jax.Array],
+                     page_ids: Sequence[int]) -> Dict[str, jax.Array]:
+        """Copy the given pages out (page axis leading per leaf) — the
+        transferable payload of a handoff or a preemption spill."""
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+        return {key: jnp.take(jnp.moveaxis(pool[key], bax, 0), ids, axis=0)
+                for key, _, bax, _ in self._all_paged()}
+
+    def import_pages(self, pool: Dict[str, jax.Array],
+                     payload: Dict[str, Any], page_ids: Sequence[int]
+                     ) -> Dict[str, jax.Array]:
+        """Write an :meth:`export_pages` payload into the given pages."""
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+        new = dict(pool)
+        for key, _, bax, _ in self._all_paged():
+            pm = jnp.moveaxis(new[key], bax, 0)
+            pm = pm.at[ids].set(jnp.asarray(payload[key]).astype(pm.dtype))
+            new[key] = jnp.moveaxis(pm, 0, bax)
+        return new
+
+    @staticmethod
+    def take_payload(payload: Dict[str, Any], idx: Sequence[int]
+                     ) -> Dict[str, Any]:
+        """Subset an :meth:`export_pages` payload by page position —
+        how a handoff sheds pages its target already holds."""
+        ii = np.asarray(idx, np.int32)
+        return {k: jnp.take(jnp.asarray(v), ii, axis=0)
+                for k, v in payload.items()}
+
+    # -- content-addressed prefix hashing (pure) ---------------------------
+
+    def chain_hashes(self, prompt: Sequence[int]) -> List[bytes]:
+        """Chained page hashes of the prompt's *full* pages, capped so at
+        least one suffix token always remains to prefill (the request
+        must still produce its own first-token logits)."""
+        n = (len(prompt) - 1) // self.page_size
+        out: List[bytes] = []
+        h = self._hash_seed
+        for j in range(n):
+            m = hashlib.sha256(h)
+            m.update(np.asarray(
+                prompt[j * self.page_size:(j + 1) * self.page_size],
+                np.int64).tobytes())
+            h = m.digest()
+            out.append(h)
+        return out
+
+    # -- host bookkeeping (guarded) ----------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        """Pages allocatable right now (free + evictable cached)."""
+        with self._lock:
+            return len(self._free) + len(self._evictable)
+
+    @property
+    def total_pages(self) -> int:
+        return self.n_pages
+
+    def counters(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._counters)
+
+    def set_device_blocks(self, n: int) -> None:
+        """Partition pages into ``n`` contiguous blocks matching the
+        sharded page-axis layout; allocation then prefers a slot's own
+        block so slot-local decode gather/scatter stays device-local."""
+        with self._lock:
+            self._n_blocks = max(1, int(n))
+
+    def _block_of_locked(self, page: int) -> int:
+        return page * self._n_blocks // self.n_pages
+
+    def _slot_block_locked(self, slot: int) -> int:
+        return slot * self._n_blocks // self.n_slots
+
+    def _take_one_locked(self, block: int) -> int:
+        if self._free:
+            if self._n_blocks > 1:
+                for i, p in enumerate(self._free):
+                    if self._block_of_locked(p) == block:
+                        return self._free.pop(i)
+            return self._free.pop()
+        if self._evictable:
+            pick = None
+            if self._n_blocks > 1:
+                for p in self._evictable:
+                    if self._block_of_locked(p) == block:
+                        pick = p
+                        break
+            if pick is None:
+                pick = next(iter(self._evictable))   # LRU head
+            del self._evictable[pick]
+            h = self._page_hash.pop(pick, None)
+            if h is not None:
+                self._prefix_index.pop(h, None)
+            self._counters["cache_evicted"] += 1
+            return pick
+        raise PagePoolExhausted(
+            f"page pool exhausted: {self.n_pages} pages all owned "
+            f"(resident + preempted demand exceeds the pool; raise "
+            f"n_pages or admit less)")
+
+    def allocate(self, n: int, slot: int = 0) -> List[int]:
+        """Take ``n`` pages (refcount 1 each), evicting cached pages LRU
+        when the free list is dry.  Raises :class:`PagePoolExhausted`
+        atomically — on failure nothing is taken."""
+        with self._lock:
+            block = self._slot_block_locked(slot % max(self.n_slots, 1))
+            if n > len(self._free) + len(self._evictable):
+                raise PagePoolExhausted(
+                    f"page pool exhausted: need {n} pages, "
+                    f"{len(self._free) + len(self._evictable)} available "
+                    f"of {self.n_pages}")
+            out = [self._take_one_locked(block) for _ in range(n)]
+            for p in out:
+                self._refs[p] = 1
+            self._counters["allocated"] += n
+            return out
+
+    def retain(self, pages: Sequence[int]) -> None:
+        with self._lock:
+            for p in pages:
+                self._retain_one_locked(p)
+
+    def _retain_one_locked(self, p: int) -> None:
+        if self._refs[p] == 0:
+            # cached -> owned again
+            self._evictable.pop(p, None)
+        self._refs[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page.  A page reaching refcount 0
+        stays *cached* (evictable, still a prefix-index hit) when it is
+        registered, else returns to the free list."""
+        with self._lock:
+            for p in pages:
+                if self._refs[p] <= 0:
+                    raise ValueError(f"release of unowned page {p}")
+                self._refs[p] -= 1
+                if self._refs[p] == 0:
+                    if p in self._page_hash:
+                        self._evictable[p] = None
+                        self._evictable.move_to_end(p)
+                    else:
+                        self._free.append(p)
+                    self._counters["freed"] += 1
+
+    def register_hash(self, page: int, h: bytes) -> None:
+        """Publish a full, never-again-written page into the prefix
+        index.  First writer wins; a duplicate hash keeps the existing
+        entry (the new page simply stays private)."""
+        with self._lock:
+            if h in self._prefix_index or page in self._page_hash:
+                return
+            self._prefix_index[h] = page
+            self._page_hash[page] = h
+            self._counters["registered"] += 1
+
+    def acquire_prefix(self, hashes: Sequence[bytes]) -> List[int]:
+        """Pin the longest indexed chain prefix; returns the pinned page
+        ids (one reference each, in page order)."""
+        return self.extend_prefix(hashes, 0)
+
+    def extend_prefix(self, hashes: Sequence[bytes], start: int
+                      ) -> List[int]:
+        """Continue :meth:`acquire_prefix` from chain position ``start``
+        — used when a same-tick sibling registered more pages since the
+        first lookup."""
+        with self._lock:
+            out: List[int] = []
+            for h in hashes[start:] if start else hashes:
+                p = self._prefix_index.get(h)
+                if p is None:
+                    break
+                self._retain_one_locked(p)
+                self._counters["pinned"] += 1
+                out.append(p)
+            return out
+
+    def pin_hashes(self, hashes: Sequence[Optional[bytes]]
+                   ) -> Dict[int, int]:
+        """Pin every individually indexed hash (no chain-prefix rule):
+        ``{position: page}`` for the hits, each retained.  The
+        disaggregated front-end calls this on the *target* pool to
+        compute which handoff pages need not travel; a failed delivery
+        must :meth:`release` the returned pages."""
+        with self._lock:
+            out: Dict[int, int] = {}
+            for i, h in enumerate(hashes):
+                if h is None:
+                    continue
+                p = self._prefix_index.get(h)
+                if p is None:
+                    continue
+                self._retain_one_locked(p)
+                self._counters["pinned"] += 1
+                out[i] = p
+            return out
+
+    # -- page tables (guarded) ---------------------------------------------
+
+    def bind_slot(self, slot: int, pages: Sequence[int]) -> None:
+        """Map a slot's table row to ``pages`` (slot-local order,
+        contiguous from page index 0); the rest unmapped."""
+        if len(pages) > self.pages_per_slot:
+            raise ValueError(f"{len(pages)} pages exceed the "
+                             f"{self.pages_per_slot}-page slot table")
+        with self._lock:
+            self._tables[slot, :] = -1
+            self._tables[slot, :len(pages)] = np.asarray(pages, np.int32) \
+                if pages else np.empty((0,), np.int32)
+
+    def set_slot_page(self, slot: int, idx: int, page: int) -> None:
+        with self._lock:
+            self._tables[slot, idx] = page
+
+    def page_at(self, slot: int, idx: int) -> int:
+        with self._lock:
+            return int(self._tables[slot, idx])
+
+    def slot_pages(self, slot: int) -> List[int]:
+        """The slot's mapped pages in slot-local order."""
+        with self._lock:
+            row = self._tables[slot]
+            return [int(p) for p in row[row >= 0]]
+
+    def slot_page_hashes(self, slot: int) -> List[Optional[bytes]]:
+        """Per mapped page, its prefix-index hash (None for private
+        pages) — what a handoff advertises for dedup."""
+        with self._lock:
+            row = self._tables[slot]
+            return [self._page_hash.get(int(p)) for p in row[row >= 0]]
+
+    def unbind_slot(self, slot: int) -> List[int]:
+        """Clear the slot's table row, returning its pages *without*
+        releasing them (preemption keeps ownership; retirement follows
+        with :meth:`release`)."""
+        with self._lock:
+            row = self._tables[slot]
+            pages = [int(p) for p in row[row >= 0]]
+            self._tables[slot, :] = -1
+            return pages
+
+    def tables_snapshot(self) -> np.ndarray:
+        with self._lock:
+            return self._tables.copy()

@@ -20,6 +20,14 @@ classes without an SLO (``slo_p95_ms=None``) are always admitted —
 best-effort traffic is shed by priority scheduling, not at the door.
 An optional hard ``max_backlog`` rejects any SLO-bearing class beyond
 that queue depth even before latency evidence accumulates.
+
+Paged engines (``repro.serving.pages``) add a memory signal: when the
+engine exposes ``free_pages`` / ``total_pages`` (non-None only for a
+paged cache), the effective capacity in the projection is scaled by the
+pool's free-page headroom — a nearly-full pool means admitted requests
+will wait on page churn (prefix-cache eviction, preemption spills)
+beyond what queue depth shows, and a pool with *no* allocatable page
+sheds SLO-bearing arrivals outright.
 """
 
 from __future__ import annotations
@@ -60,6 +68,15 @@ class SLOAdmission:
         if self.max_backlog is not None and backlog > self.max_backlog:
             self.rejected += 1
             return False
+        free = getattr(engine, "free_pages", None)
+        total = getattr(engine, "total_pages", None)
+        headroom = 1.0
+        if free is not None and total:
+            if free <= 0:
+                # page pool exhausted: nothing can even prefill
+                self.rejected += 1
+                return False
+            headroom = max(min(free / total, 1.0), 1e-6)
         st = engine.stats()
         # engines key latency by workload request class (e.g. "lm/p8");
         # pool all observed classes — the queue ahead of a new arrival
@@ -69,7 +86,7 @@ class SLOAdmission:
             self.admitted += 1
             return True
         p95 = max(h.p95_ms for h in st.latency.values())
-        projected = p95 * (1.0 + backlog / capacity)
+        projected = p95 * (1.0 + backlog / (capacity * headroom))
         if projected > float(slo) * self.slack:
             self.rejected += 1
             return False

@@ -145,6 +145,43 @@ class TestLockDiscipline:
             in locations(kept)
         assert len([f for f in kept if f.code == "unguarded-mutation"]) == 2
 
+    def test_page_pool_shaped_violation_exact_location(self, tmp_path):
+        """The page pool's free list and prefix index are
+        ``# guarded-by:`` annotated shared state (the shape of
+        ``repro.serving.pages.PagePool``): an allocate() popping the
+        free list or a hash registration writing the index outside the
+        lock is a planted error at an exact location."""
+        src = """\
+        import threading
+
+
+        class PagePool:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._free = [2, 1, 0]            # guarded-by: _lock
+                self._prefix_index = {}           # guarded-by: _lock
+
+            def allocate(self):
+                return self._free.pop()           # line 11: unguarded
+
+            def register_hash(self, digest, page):
+                self._prefix_index[digest] = page  # line 14: unguarded
+
+            def allocate_ok(self):
+                with self._lock:
+                    return self._free.pop()
+
+            def register_hash_ok(self, digest, page):
+                with self._lock:
+                    self._prefix_index[digest] = page
+        """
+        kept, _ = lint(tmp_path, src, LockDisciplineChecker())
+        assert ("lock-discipline", "unguarded-mutation", "mod.py", 11) \
+            in locations(kept)
+        assert ("lock-discipline", "unguarded-mutation", "mod.py", 14) \
+            in locations(kept)
+        assert len(kept) == 2             # the _ok paths stay clean
+
     def test_unannotated_field_is_not_policed(self, tmp_path):
         src = """\
         class Engine:
@@ -407,6 +444,48 @@ class TestKernelLegality:
         kept = list(KernelLegalityChecker(reg).run(project))
         assert [(f.code, f.severity) for f in kept] == [
             ("unverifiable", "warning")]
+
+    def test_divisor_violation(self, tmp_path, bad_kernel_mod):
+        """A spec declaring ``block_divisors`` pairs (e.g. the paged
+        dequant kernel's page_size | kv_block) but legalizing the two
+        knobs independently is flagged; deriving legalize with the same
+        ``divisors=`` is clean."""
+        ns, _ = bad_kernel_mod
+        KernelRegistry = ns["KernelRegistry"]
+        KernelSpec = ns["KernelSpec"]
+
+        def build(legalize):
+            reg = KernelRegistry()
+            reg.register(KernelSpec(
+                name="pagedkernel",
+                build=lambda: None,
+                reference=lambda: None,
+                space={"page": (8, 12), "blk": (4, 8, 64)},
+                tuned=("page", "blk"),
+                base_config={"page": 8, "blk": 64},
+                legalize=legalize,
+                make_example=ns["make_example"],
+                example_cases=({"shape": (96, 4)},),
+                block_dims=lambda x, **kw: {"blk": x.shape[0]},
+                block_divisors=(("page", "blk"),),
+            ))
+            return reg
+
+        # blk legalized alone: page=12 with blk=8 never re-aligned
+        reg = build(ns["_legalize_blocks"](
+            lambda x, **kw: {"blk": x.shape[0]}))
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        hits = [f for f in kept if f.code == "divisor-violation"]
+        assert hits, f"expected divisor-violation, got {locations(kept)}"
+        assert hits[0].symbol == "pagedkernel"
+
+        reg = build(ns["_legalize_blocks"](
+            lambda x, **kw: {"blk": x.shape[0]},
+            divisors=(("page", "blk"),)))
+        kept = list(KernelLegalityChecker(reg).run(project))
+        assert [f for f in kept if f.severity == "error"] == [], \
+            [f.render() for f in kept]
 
     def test_real_registry_is_clean(self, tmp_path):
         """The shipped kernel registry must satisfy its own invariant."""

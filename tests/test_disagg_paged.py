@@ -1,0 +1,244 @@
+"""Disaggregated serving over the paged KV cache (``repro.serving.pages``).
+
+The paged handoff is a page-table splice, not a row copy: prefill
+exports page-granular payloads, the front-end pins whatever pages the
+*target* pool already holds (content-addressed dedup — only missing
+pages travel), and decode imports the misses and binds its own slot
+table.  The contract here:
+
+* bit-exactness: paged disaggregated serving matches per-request
+  ``generate()`` for every pageable family, across all three
+  :class:`Transport` kinds, quantized pages within the documented
+  tolerance (token-identical on this fixture);
+* dedup: a second request sharing a system prompt moves only its tail
+  pages (``handoff_pages_moved`` / ``handoff_pages_dedup`` counters);
+* validation: a decode engine refuses paged/dense mismatches and any
+  page-geometry (page_size / quantized) disagreement — hashes and
+  payloads from a different layout are never interchangeable;
+* the forced-2-device subprocess acceptance run: paged disagg with a
+  sharded decode mesh stays exact (the CI serving-conformance lane).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.models import lm
+from repro.models.common import LMConfig, MoEConfig
+from repro.serving import (CacheHandoff, DecodeEngine, HandoffRequest,
+                           PrefillEngine, Request, ServeEngine,
+                           disaggregated_lm_engine,
+                           multihost_disaggregated_lm_engine)
+
+TRANSPORTS = ["in_process", "host_staged", "device_to_device"]
+PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+PAGE = 8
+
+
+def tiny(family="dense", **kw):
+    base = dict(arch_id="tiny-" + family, family=family, n_layers=2,
+                d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                remat=False, compute_dtype="float32",
+                param_dtype="float32")
+    base.update(kw)
+    return LMConfig(**base)
+
+
+def cfg_for(family):
+    if family == "dense":
+        return tiny()
+    if family == "vlm":
+        return tiny("vlm", n_layers=3, cross_attn_every=2,
+                    n_image_tokens=8)
+    if family == "moe":
+        return tiny("moe", moe=MoEConfig(n_experts=4, top_k=2,
+                                         d_expert=32))
+    raise ValueError(family)
+
+
+class TestPagedDisaggExactness:
+    @pytest.mark.parametrize("family", ["dense", "vlm", "moe"])
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_matches_generate_under_every_transport(self, family,
+                                                    transport):
+        cfg = cfg_for(family)
+        params = lm.init(cfg, jax.random.key(0))
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+        eng = disaggregated_lm_engine(cfg, params, n_slots=2, max_len=32,
+                                      n_decode=2, transport=transport,
+                                      page_size=PAGE)
+        comps = {c.rid: c for c in eng.serve(
+            [Request(prompt=p, max_new_tokens=4, rid=i)
+             for i, p in enumerate(PROMPTS)])}
+        for i, p in enumerate(PROMPTS):
+            want = ref.generate([p], max_new_tokens=4)[0]
+            assert comps[i].tokens == want, (family, transport, i)
+        st = eng.stats().pages
+        assert st.get("handoff_pages_moved", 0) > 0
+
+    def test_multihost_paged_exact(self):
+        cfg = tiny()
+        params = lm.init(cfg, jax.random.key(0))
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+        eng = multihost_disaggregated_lm_engine(
+            cfg, params, n_slots=2, max_len=32, n_decode=1,
+            page_size=PAGE)
+        comps = {c.rid: c for c in eng.serve(
+            [Request(prompt=p, max_new_tokens=4, rid=i)
+             for i, p in enumerate(PROMPTS)])}
+        for i, p in enumerate(PROMPTS):
+            assert comps[i].tokens == ref.generate(
+                [p], max_new_tokens=4)[0], i
+
+    def test_quantized_paged_within_tolerance(self):
+        """Quantized page payloads travel as int8 + per-row scales and
+        decode through the dequantizing attention path: greedy tokens
+        match the unquantized reference on this fixture (the documented
+        tolerance — docs/serving.md)."""
+        cfg = tiny()
+        params = lm.init(cfg, jax.random.key(0))
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+        eng = disaggregated_lm_engine(cfg, params, n_slots=2, max_len=32,
+                                      n_decode=2, page_size=PAGE,
+                                      quantize_pages=True)
+        comps = {c.rid: c for c in eng.serve(
+            [Request(prompt=p, max_new_tokens=4, rid=i)
+             for i, p in enumerate(PROMPTS)])}
+        for i, p in enumerate(PROMPTS):
+            assert comps[i].tokens == ref.generate(
+                [p], max_new_tokens=4)[0], i
+
+
+class TestHandoffPageDedup:
+    def test_shared_prefix_pages_do_not_travel_twice(self):
+        """Two sequential requests share a 16-token (2-page) system
+        prompt.  The first handoff moves every page; by the second, the
+        target pool already caches the shared pages (registered on
+        import), so the front-end pins them and ships only the tail."""
+        cfg = tiny()
+        params = lm.init(cfg, jax.random.key(0))
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=64)
+        shared = list(range(1, 17))
+        eng = disaggregated_lm_engine(cfg, params, n_slots=2, max_len=64,
+                                      n_decode=1, page_size=PAGE)
+        for i, t in enumerate([20, 21]):
+            [c] = eng.serve([Request(prompt=shared + [t],
+                                     max_new_tokens=4, rid=i)])
+            assert c.tokens == ref.generate([shared + [t]],
+                                            max_new_tokens=4)[0], i
+        st = eng.stats().pages
+        assert st["handoff_pages_dedup"] == 2
+        # first handoff moved its 3 pages; the second only the tail page
+        assert st["handoff_pages_moved"] == 4
+
+
+def _paged_handoff(cfg, params, prompt=(1, 2, 3), max_new=4, **pool_kw):
+    pre = PrefillEngine(cfg, params, n_slots=2, max_len=32,
+                        page_size=PAGE, **pool_kw)
+    pre.submit(Request(prompt=list(prompt), max_new_tokens=max_new))
+    (h,) = pre.run_until_idle()
+    assert isinstance(h, CacheHandoff) and h.paged
+    return h
+
+
+class TestPagedHandoffValidation:
+    """A decode engine must refuse a paged handoff whose page geometry
+    it cannot decode exactly — no silent garbage decode."""
+
+    def setup_method(self, method):
+        self.cfg = cfg_for("dense")
+        self.params = lm.init(self.cfg, jax.random.key(0))
+
+    def test_paged_handoff_to_dense_engine_rejected(self):
+        h = _paged_handoff(self.cfg, self.params)
+        dec = DecodeEngine(self.cfg, self.params, n_slots=2, max_len=32)
+        with pytest.raises(ValueError, match="paged"):
+            dec.submit(HandoffRequest(handoff=h))
+
+    def test_dense_handoff_to_paged_engine_rejected(self):
+        pre = PrefillEngine(self.cfg, self.params, n_slots=2, max_len=32)
+        pre.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+        (h,) = pre.run_until_idle()
+        dec = DecodeEngine(self.cfg, self.params, n_slots=2, max_len=32,
+                           page_size=PAGE)
+        with pytest.raises(ValueError, match="paged"):
+            dec.submit(HandoffRequest(handoff=h))
+
+    def test_page_size_mismatch_rejected(self):
+        h = _paged_handoff(self.cfg, self.params)
+        dec = DecodeEngine(self.cfg, self.params, n_slots=2, max_len=32,
+                           page_size=16)
+        with pytest.raises(ValueError, match="page_size"):
+            dec.submit(HandoffRequest(handoff=h))
+
+    def test_quantization_mismatch_rejected(self):
+        h = _paged_handoff(self.cfg, self.params)
+        dec = DecodeEngine(self.cfg, self.params, n_slots=2, max_len=32,
+                           page_size=PAGE, quantize_pages=True)
+        with pytest.raises(ValueError, match="quantized"):
+            dec.submit(HandoffRequest(handoff=h))
+
+    def test_rejection_leaves_engine_clean(self):
+        good = _paged_handoff(self.cfg, self.params)
+        bad = _paged_handoff(self.cfg, self.params, prompt=(7, 8))
+        bad.page_size = 16                # tamper: wrong geometry
+        dec = DecodeEngine(self.cfg, self.params, n_slots=2, max_len=32,
+                           page_size=PAGE)
+        with pytest.raises(ValueError):
+            dec.submit(HandoffRequest(handoff=bad))
+        assert dec.n_pending == 0
+        dec.submit(HandoffRequest(handoff=good, rid=good.rid))
+        (comp,) = dec.run_until_idle()
+        ref = ServeEngine(self.cfg, self.params, n_slots=2, max_len=32)
+        assert comp.tokens == ref.generate([[1, 2, 3]],
+                                           max_new_tokens=4)[0]
+
+
+def test_paged_disagg_sharded_decode_on_2device_cpu_mesh():
+    """Acceptance regression on a forced 2-device host: paged
+    disaggregated serving with the decode pool's page axis sharded by a
+    ShardedScheduler mesh stays bit-exact (subprocess: the test process
+    is pinned to one device)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+from repro.models import lm
+from repro.models.common import LMConfig
+from repro.launch.mesh import make_mesh
+from repro.serving import (Request, ServeEngine, ShardedScheduler,
+                           disaggregated_lm_engine)
+
+cfg = LMConfig(arch_id="tiny-dense", family="dense", n_layers=2,
+               d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+               remat=False, compute_dtype="float32",
+               param_dtype="float32")
+params = lm.init(cfg, jax.random.key(0))
+PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [2, 4]]
+sched = ShardedScheduler(make_mesh((2,), ("data",)))
+eng = disaggregated_lm_engine(cfg, params, n_slots=2, max_len=32,
+                              n_decode=1, decode_schedulers=[sched],
+                              page_size=8)
+ref = ServeEngine(cfg, params, n_slots=2, max_len=32)
+comps = {c.rid: c for c in eng.serve(
+    [Request(prompt=p, max_new_tokens=3, rid=i)
+     for i, p in enumerate(PROMPTS)])}
+for i, p in enumerate(PROMPTS):
+    want = ref.generate([p], max_new_tokens=3)[0]
+    assert comps[i].tokens == want, (i, comps[i].tokens, want)
+assert eng.stats().pages.get("handoff_pages_moved", 0) > 0
+print("PAGED_DISAGG_SHARDED_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "PAGED_DISAGG_SHARDED_OK" in r.stdout, r.stdout + r.stderr
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

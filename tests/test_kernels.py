@@ -52,9 +52,10 @@ class TestRegistryParity:
         for k in spec.tuned:
             assert k in c1
 
-    def test_all_three_kernels_registered(self):
-        assert registry.names() == ["flash_attention", "fused_routing",
-                                    "taylor_softmax"]
+    def test_kernel_inventory_pinned(self):
+        assert registry.names() == ["flash_attention",
+                                    "flash_attention_dequant",
+                                    "fused_routing", "taylor_softmax"]
 
 
 class TestDefaultBlockSelection:
