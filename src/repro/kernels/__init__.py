@@ -13,8 +13,8 @@ the interpreter) is probed in exactly one place: ``needs_interpret``.
 """
 
 from repro.kernels.registry import (KernelRegistry, KernelSpec,  # noqa: F401
-                                    flash_attention,
+                                    decode_attention, flash_attention,
                                     flash_attention_dequant, fused_routing,
-                                    needs_interpret, registry,
+                                    fused_sampling, needs_interpret, registry,
                                     taylor_softmax)
 from repro.kernels import tuning  # noqa: F401

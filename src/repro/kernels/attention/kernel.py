@@ -263,3 +263,269 @@ def flash_attention_dequant_pallas(
         ],
         interpret=interpret,
     )(q, kq, ks, vq, vs)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (q_len = 1, ragged kv_valid_len, dense or paged cache)
+# ---------------------------------------------------------------------------
+#
+# Layout: q (B, K, G, D) — one query token per slot, grouped heads.
+#   dense cache   k/v (B, T, K, D);  grid (B/slot_block, K, T/kv_block)
+#   paged cache   k/v are pool leaves (n_pages, page, K, D); the per-slot
+#                 page tables ride in as a scalar-prefetch operand and the
+#                 kv BlockSpec index_map reads ``tables[slot, page_idx]``
+#                 directly, so blocks stream straight out of the pool with
+#                 no gather-to-dense materialization; grid (B, K, P)
+#
+# The kv axis stays minor-most/sequential; m/l/acc scratch persists across
+# kv steps exactly like the flash kernels above.  ``kv_valid_len`` masks
+# ragged tails (and, paged, any sentinel page past the write head); blocks
+# entirely past every slot's valid length are skipped with ``pl.when`` —
+# for the paged grid (slot_block=1) that means a slot only ever touches
+# its own resident pages.  NEG_INF is finite, so fully-masked rows keep
+# m = NEG_INF, l = 0 without NaNs and finish as zeros.
+
+
+def _decode_update(q, k, v, valid, k_start, m_scr, l_scr, acc_scr, *,
+                   slot_block: int, kv_block: int, softmax_mode: str):
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)             # (Sb, G, Kb)
+    kpos = k_start + jax.lax.broadcasted_iota(
+        jnp.int32, (slot_block, kv_block), 1)
+    mask = (kpos < valid[:, None])[:, None, :]          # (Sb, 1, Kb)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]                                 # (Sb, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = _exp(m_prev - m_new, softmax_mode)
+    p = jnp.where(mask, _exp(s - m_new[..., None], softmax_mode), 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + jax.lax.dot_general(
+        p, v, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)             # (Sb, G, D)
+    m_scr[...] = m_new
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   slot_block: int, kv_block: int, n_kv_blocks: int,
+                   softmax_mode: str, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * kv_block
+    valid = valid_ref[:, 0]                             # (Sb,) int32
+
+    def _body():
+        q = q_ref[:, 0].astype(jnp.float32) * scale     # (Sb, G, D)
+        k = k_ref[:, :, 0].astype(jnp.float32)          # (Sb, Kb, D)
+        v = v_ref[:, :, 0].astype(jnp.float32)
+        _decode_update(q, k, v, valid, k_start, m_scr, l_scr, acc_scr,
+                       slot_block=slot_block, kv_block=kv_block,
+                       softmax_mode=softmax_mode)
+
+    pl.when(k_start < jnp.max(valid))(_body)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[:, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def _decode_dequant_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, valid_ref,
+                           o_ref, m_scr, l_scr, acc_scr, *,
+                           slot_block: int, kv_block: int, n_kv_blocks: int,
+                           softmax_mode: str, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * kv_block
+    valid = valid_ref[:, 0]
+
+    def _body():
+        q = q_ref[:, 0].astype(jnp.float32) * scale
+        k = kq_ref[:, :, 0].astype(jnp.float32) * ks_ref[...][:, :, None]
+        v = vq_ref[:, :, 0].astype(jnp.float32) * vs_ref[...][:, :, None]
+        _decode_update(q, k, v, valid, k_start, m_scr, l_scr, acc_scr,
+                       slot_block=slot_block, kv_block=kv_block,
+                       softmax_mode=softmax_mode)
+
+    pl.when(k_start < jnp.max(valid))(_body)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[:, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def _decode_blocks(b: int, t: int, kv_block: int, slot_block: int):
+    sb = max(min(int(slot_block), b), 1)
+    while b % sb:
+        sb -= 1
+    kb = max(min(int(kv_block), t), 1)
+    while t % kb:
+        kb //= 2
+    return sb, kb
+
+
+def _decode_scratch(sb: int, g: int, d: int):
+    return [pltpu.VMEM((sb, g), jnp.float32),
+            pltpu.VMEM((sb, g), jnp.float32),
+            pltpu.VMEM((sb, g, d), jnp.float32)]
+
+
+def decode_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len: jax.Array,
+    kv_block: int = 512, slot_block: int = 1,
+    softmax_mode: str = "exact", interpret: bool = True,
+) -> jax.Array:
+    """q (B, K, G, D); k/v (B, T, K, D); kv_valid_len (B,) -> (B, K, G, D)."""
+    b, nkv, g, d = q.shape
+    t = k.shape[1]
+    sb, kb = _decode_blocks(b, t, kv_block, slot_block)
+    n_kv = t // kb
+    kernel = functools.partial(
+        _decode_kernel, slot_block=sb, kv_block=kb, n_kv_blocks=n_kv,
+        softmax_mode=softmax_mode, scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kernel,
+        grid=(b // sb, nkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((sb, 1, g, d), lambda si, ki, ji: (si, ki, 0, 0)),
+            pl.BlockSpec((sb, kb, 1, d), lambda si, ki, ji: (si, ji, ki, 0)),
+            pl.BlockSpec((sb, kb, 1, d), lambda si, ki, ji: (si, ji, ki, 0)),
+            pl.BlockSpec((sb, 1), lambda si, ki, ji: (si, 0)),
+        ],
+        out_specs=pl.BlockSpec((sb, 1, g, d),
+                               lambda si, ki, ji: (si, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        scratch_shapes=_decode_scratch(sb, g, d),
+        interpret=interpret,
+    )(q, k, v, kv_valid_len.astype(jnp.int32).reshape(b, 1))
+
+
+def decode_attention_dequant_pallas(
+    q: jax.Array, kq: jax.Array, ks: jax.Array,
+    vq: jax.Array, vs: jax.Array, kv_valid_len: jax.Array,
+    kv_block: int = 512, slot_block: int = 1,
+    softmax_mode: str = "exact", interpret: bool = True,
+) -> jax.Array:
+    """q (B, K, G, D); kq/vq (B, T, K, D) int8; ks/vs (B, T) fp32."""
+    b, nkv, g, d = q.shape
+    t = kq.shape[1]
+    sb, kb = _decode_blocks(b, t, kv_block, slot_block)
+    n_kv = t // kb
+    kernel = functools.partial(
+        _decode_dequant_kernel, slot_block=sb, kv_block=kb, n_kv_blocks=n_kv,
+        softmax_mode=softmax_mode, scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kernel,
+        grid=(b // sb, nkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((sb, 1, g, d), lambda si, ki, ji: (si, ki, 0, 0)),
+            pl.BlockSpec((sb, kb, 1, d), lambda si, ki, ji: (si, ji, ki, 0)),
+            pl.BlockSpec((sb, kb), lambda si, ki, ji: (si, ji)),
+            pl.BlockSpec((sb, kb, 1, d), lambda si, ki, ji: (si, ji, ki, 0)),
+            pl.BlockSpec((sb, kb), lambda si, ki, ji: (si, ji)),
+            pl.BlockSpec((sb, 1), lambda si, ki, ji: (si, 0)),
+        ],
+        out_specs=pl.BlockSpec((sb, 1, g, d),
+                               lambda si, ki, ji: (si, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        scratch_shapes=_decode_scratch(sb, g, d),
+        interpret=interpret,
+    )(q, kq, ks, vq, vs, kv_valid_len.astype(jnp.int32).reshape(b, 1))
+
+
+def decode_attention_paged_pallas(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    kv_valid_len: jax.Array, tables: jax.Array,
+    softmax_mode: str = "exact", interpret: bool = True,
+) -> jax.Array:
+    """q (B, K, G, D); k/v pool leaves (n_pages, page, K, D); ``tables``
+    (B, P) pre-clipped page ids (scalar-prefetch operand, read inside the
+    kv index_maps); kv_valid_len (B,) slot-local lengths."""
+    b, nkv, g, d = q.shape
+    ps = k_pages.shape[1]
+    p_per = tables.shape[1]
+    kernel = functools.partial(
+        _decode_kernel, slot_block=1, kv_block=ps, n_kv_blocks=p_per,
+        softmax_mode=softmax_mode, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nkv, p_per),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, pi, tb: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, ki, pi, tb: (tb[bi, pi], 0, ki, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, ki, pi, tb: (tb[bi, pi], 0, ki, 0)),
+            pl.BlockSpec((1, 1), lambda bi, ki, pi, tb: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, ki, pi, tb: (bi, ki, 0, 0)),
+        scratch_shapes=_decode_scratch(1, g, d),
+    )
+    def kernel_with_tables(tables_ref, *refs):
+        del tables_ref                       # consumed by the index_maps
+        kernel(*refs)
+    return pl.pallas_call(
+        kernel_with_tables,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), q, k_pages, v_pages,
+      kv_valid_len.astype(jnp.int32).reshape(b, 1))
+
+
+def decode_attention_paged_dequant_pallas(
+    q: jax.Array, k_pages: jax.Array, ks_pages: jax.Array,
+    v_pages: jax.Array, vs_pages: jax.Array,
+    kv_valid_len: jax.Array, tables: jax.Array,
+    softmax_mode: str = "exact", interpret: bool = True,
+) -> jax.Array:
+    """Paged decode over int8 pool leaves with per-row fp32 scale leaves
+    (n_pages, page) — dequantized block-at-a-time on read."""
+    b, nkv, g, d = q.shape
+    ps = k_pages.shape[1]
+    p_per = tables.shape[1]
+    kernel = functools.partial(
+        _decode_dequant_kernel, slot_block=1, kv_block=ps, n_kv_blocks=p_per,
+        softmax_mode=softmax_mode, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nkv, p_per),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, pi, tb: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, ki, pi, tb: (tb[bi, pi], 0, ki, 0)),
+            pl.BlockSpec((1, ps), lambda bi, ki, pi, tb: (tb[bi, pi], 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda bi, ki, pi, tb: (tb[bi, pi], 0, ki, 0)),
+            pl.BlockSpec((1, ps), lambda bi, ki, pi, tb: (tb[bi, pi], 0)),
+            pl.BlockSpec((1, 1), lambda bi, ki, pi, tb: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, ki, pi, tb: (bi, ki, 0, 0)),
+        scratch_shapes=_decode_scratch(1, g, d),
+    )
+    def kernel_with_tables(tables_ref, *refs):
+        del tables_ref
+        kernel(*refs)
+    return pl.pallas_call(
+        kernel_with_tables,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), q, k_pages, ks_pages, v_pages, vs_pages,
+      kv_valid_len.astype(jnp.int32).reshape(b, 1))

@@ -41,3 +41,49 @@ def attention_dequant_ref(q: jax.Array, kq: jax.Array, ks: jax.Array,
     k = kq.astype(jnp.float32) * ks[..., None, None]
     v = vq.astype(jnp.float32) * vs[..., None, None]
     return attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_valid_len: jax.Array, tables=None,
+                         ks=None, vs=None) -> jax.Array:
+    """Oracle for the q_len=1 decode kernel.
+
+    Dense cache:  q (B, 1, H, D); k/v (B, T, K, D); optional ``ks``/``vs``
+    (B, T) per-row scales when k/v are int8.
+
+    Paged cache:  k/v are pool leaves (n_pages, page, K, D) and ``tables``
+    (B, P) maps each slot's page index to a pool page; optional scales are
+    the pool scale leaves (n_pages, page).  Sentinel (negative) table
+    entries address page 0 after clipping and rely on ``kv_valid_len``
+    masking, mirroring the kernel.
+
+    Rows with ``kv_valid_len <= 0`` return zeros (the kernel's init state
+    is never overwritten for them).
+    """
+    b, s, h, d = q.shape
+    if tables is not None:
+        n_pages, page = k.shape[0], k.shape[1]
+        tv = jnp.clip(tables.astype(jnp.int32), 0, n_pages - 1)
+        per_slot = tv.shape[1] * page
+        k = k[tv].reshape(b, per_slot, k.shape[2], k.shape[3])
+        v = v[tv].reshape(b, per_slot, v.shape[2], v.shape[3])
+        if ks is not None:
+            ks = ks[tv].reshape(b, per_slot)
+            vs = vs[tv].reshape(b, per_slot)
+    if ks is not None:
+        k = k.astype(jnp.float32) * ks[..., None, None]
+        v = v.astype(jnp.float32) * vs[..., None, None]
+    t, nkv = k.shape[1], k.shape[2]
+    g = h // nkv
+    qg = q.reshape(b, s, nkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    valid = kv_valid_len.astype(jnp.int32)
+    mask = (jnp.arange(t)[None, :] < valid[:, None])[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    out = jnp.einsum("bkgst,btkd->bskgd", e, v.astype(jnp.float32))
+    l = jnp.maximum(jnp.sum(e, axis=-1), 1e-30)        # (b, k, g, s)
+    out = out / l.transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(b, s, h, d).astype(q.dtype)

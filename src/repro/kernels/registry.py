@@ -539,6 +539,235 @@ registry.register(KernelSpec(
 ))
 
 
+# -- decode_attention -------------------------------------------------------
+# q_len=1 serving decode: one query token per slot against a ragged KV
+# cache (``kv_valid_len`` masks each slot's tail).  The cache arrives
+# either dense (B, T, K, D) — optionally int8 with (B, T) row scales —
+# or as the paged pool's native (n_pages, page, K, D) leaves plus the
+# per-slot page ``tables`` (B, P): the kernel reads pages through the
+# table as a scalar-prefetch operand, so serving skips the
+# gather-to-dense materialization entirely.  ``page_size`` is structural
+# (the pool's page length); ``block_divisors`` keeps the dense-path KV
+# block page-aligned exactly like ``flash_attention_dequant``.
+
+
+@functools.lru_cache(maxsize=None)
+def _build_decode_attention():
+    import jax
+
+    from repro.kernels.attention.kernel import (
+        decode_attention_dequant_pallas,
+        decode_attention_paged_dequant_pallas, decode_attention_paged_pallas,
+        decode_attention_pallas)
+
+    @functools.partial(jax.jit, static_argnames=(
+        "softmax_mode", "kv_block", "slot_block", "page_size", "interpret"))
+    def decode_attention_entry(q, k, v, kv_valid_len, tables=None, ks=None,
+                               vs=None, softmax_mode="exact", kv_block=512,
+                               slot_block=1, page_size=64, interpret=True):
+        """(B, 1, H, D) GQA decode API over the (B, K, G, D) kernels.
+
+        Dense cache: k/v (B, T, K, D) (+ optional int8 scales ks/vs
+        (B, T)).  Paged cache: k/v are pool leaves (n_pages, page, K, D)
+        (+ optional pool scale leaves (n_pages, page)) and ``tables``
+        (B, P) holds pre-clipped page ids.
+        """
+        b, s, h, d = q.shape
+        nkv = k.shape[-2]
+        g = h // nkv
+        qr = q.reshape(b, nkv, g, d)
+        # `tables`/`ks` being None is pytree *structure*, fixed at trace
+        # time (jit retraces when an optional cache input appears) — the
+        # branches below never inspect a tracer's value.
+        # capslint: disable=jit-purity — None-vs-array is static structure
+        if tables is not None:
+            # capslint: disable=jit-purity — None-vs-array is static
+            if ks is not None:
+                o = decode_attention_paged_dequant_pallas(
+                    qr, k, ks, v, vs, kv_valid_len, tables,
+                    softmax_mode=softmax_mode, interpret=interpret)
+            else:
+                o = decode_attention_paged_pallas(
+                    qr, k, v, kv_valid_len, tables,
+                    softmax_mode=softmax_mode, interpret=interpret)
+        # capslint: disable=jit-purity — None-vs-array is static
+        elif ks is not None:
+            o = decode_attention_dequant_pallas(
+                qr, k, ks, v, vs, kv_valid_len, kv_block=kv_block,
+                slot_block=slot_block, softmax_mode=softmax_mode,
+                interpret=interpret)
+        else:
+            o = decode_attention_pallas(
+                qr, k, v, kv_valid_len, kv_block=kv_block,
+                slot_block=slot_block, softmax_mode=softmax_mode,
+                interpret=interpret)
+        return o.reshape(b, 1, h, d)
+
+    return decode_attention_entry
+
+
+def _decode_attention_reference():
+    from repro.kernels.attention.ref import decode_attention_ref
+
+    return decode_attention_ref
+
+
+def _decode_attention_block_dims(q, k=None, v=None, kv_valid_len=None,
+                                 tables=None, **kwargs):
+    if tables is not None and k is not None:
+        t = int(tables.shape[1]) * int(k.shape[1])   # pages x page length
+    elif k is not None:
+        t = k.shape[1]
+    else:
+        t = q.shape[1]
+    return {"kv_block": t, "slot_block": q.shape[0]}
+
+
+def _decode_attention_example(case):
+    import jax.numpy as jnp
+
+    from repro.models.attention import quantize_kv_rows
+
+    b, t, h, nkv, d = case.get("dims", (4, 128, 8, 4, 32))
+    seed = case.get("seed", 0)
+    q = _rand(seed, (b, 1, h, d), "float32")
+    valid = jnp.asarray(case["valid"], jnp.int32)
+    kwargs = {"softmax_mode": case.get("softmax_mode", "exact")}
+    paged = case.get("paged")
+    if paged:
+        n_pages, page, p_per = paged
+        kk = _rand(seed + 1, (n_pages, page, nkv, d), "float32")
+        v = _rand(seed + 2, (n_pages, page, nkv, d), "float32")
+        kwargs["tables"] = ((jnp.arange(b * p_per, dtype=jnp.int32)
+                             .reshape(b, p_per)) * 7 + 3) % n_pages
+    else:
+        kk = _rand(seed + 1, (b, t, nkv, d), "float32")
+        v = _rand(seed + 2, (b, t, nkv, d), "float32")
+    if case.get("quant"):
+        kq, ks = quantize_kv_rows(kk)
+        vq, vs = quantize_kv_rows(v)
+        kk, v = kq.astype(jnp.int8), vq.astype(jnp.int8)
+        kwargs["ks"] = ks
+        kwargs["vs"] = vs
+    return (q, kk, v, valid), kwargs
+
+
+registry.register(KernelSpec(
+    name="decode_attention",
+    build=_build_decode_attention,
+    reference=_decode_attention_reference,
+    space={"kv_block": (64, 128, 256, 512),
+           "slot_block": (1, 2, 4, 8),
+           "page_size": (8, 16, 32, 64, 128),
+           "softmax_mode": ("exact", "taylor")},
+    tuned=("kv_block", "slot_block"),
+    base_config={"kv_block": 512, "slot_block": 1, "page_size": 64},
+    legalize=_legalize_blocks(_decode_attention_block_dims,
+                              divisors=(("page_size", "kv_block"),)),
+    block_dims=_decode_attention_block_dims,
+    block_divisors=(("page_size", "kv_block"),),
+    make_example=_decode_attention_example,
+    example_cases=(
+        # NB: the batch axis value is kept distinct from every other
+        # axis in each case — the legality checker's bucket scaling
+        # rewrites *all* axes equal to a block dimension's value, so a
+        # batch that collides with e.g. the KV-head count would scale
+        # the head axis to serving-bucket size unblocked.
+        {"dims": (4, 128, 8, 2, 32), "valid": (128, 64, 1, 97),
+         "atol": 2e-5},
+        # ragged odd lengths + a fully-masked slot (valid=0 -> zeros)
+        {"dims": (3, 96, 4, 2, 16), "valid": (5, 96, 0), "atol": 2e-5},
+        {"dims": (6, 128, 4, 2, 32), "valid": (128, 31, 77, 1, 64, 9),
+         "quant": True, "atol": 2e-5},
+        # paged: (n_pages, page, pages_per_slot) pool, table indirection
+        {"dims": (3, 64, 4, 2, 32), "valid": (64, 17, 1),
+         "paged": (12, 16, 4), "atol": 2e-5},
+        {"dims": (3, 64, 4, 2, 32), "valid": (49, 64, 8),
+         "paged": (12, 16, 4), "quant": True, "atol": 2e-5},
+        {"dims": (5, 128, 4, 2, 32), "valid": (100, 128, 64, 1, 27),
+         "softmax_mode": "taylor", "atol": 5e-2},
+    ),
+    ref_accepts=("tables", "ks", "vs"),
+    is_available=_pallas_available,
+))
+
+
+# -- fused_sampling ---------------------------------------------------------
+# Temperature / top-k / top-p masking + the categorical draw fused into
+# one launch over the serving tick's logits, with counter-based
+# randomness (request seed x sequence position x vocab lane), so a
+# sampled token is a pure function of (seed, pos, logits) — independent
+# of slot order, batch composition, preemption and handoff.  Greedy
+# (temperature <= 0) is an exact raw-logits argmax.
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fused_sampling():
+    import jax
+
+    from repro.kernels.sampling.kernel import fused_sampling_pallas
+
+    @functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+    def fused_sampling_entry(logits, temperature, seeds, pos, top_k, top_p,
+                             row_block=8, interpret=True):
+        return fused_sampling_pallas(
+            logits, temperature, seeds, pos, top_k, top_p,
+            row_block=row_block, interpret=interpret)
+
+    return fused_sampling_entry
+
+
+def _sampling_reference():
+    from repro.kernels.sampling.ref import fused_sampling_ref
+
+    return fused_sampling_ref
+
+
+def _sampling_block_dims(logits, *args, **kwargs):
+    return {"row_block": logits.shape[0]}
+
+
+def _sampling_example(case):
+    import jax.numpy as jnp
+
+    b, v = case.get("dims", (8, 64))
+    logits = _rand(case.get("seed", 0), (b, v), "float32", scale=3.0)
+    temperature = jnp.asarray(case.get("temperature", (1.0,) * b),
+                              jnp.float32)
+    seeds = jnp.asarray([(i * 0x9E3779B1 + 17) & 0x7FFFFFFF
+                         for i in range(b)], jnp.int32)
+    pos = jnp.asarray([i * 5 + case.get("pos0", 1) for i in range(b)],
+                      jnp.int32)
+    top_k = jnp.asarray(case.get("top_k", (0,) * b), jnp.int32)
+    top_p = jnp.asarray(case.get("top_p", (1.0,) * b), jnp.float32)
+    return (logits, temperature, seeds, pos, top_k, top_p), {}
+
+
+registry.register(KernelSpec(
+    name="fused_sampling",
+    build=_build_fused_sampling,
+    reference=_sampling_reference,
+    space={"row_block": (1, 2, 4, 8, 16)},
+    tuned=("row_block",),
+    base_config={"row_block": 8},
+    legalize=_legalize_blocks(_sampling_block_dims),
+    block_dims=_sampling_block_dims,
+    make_example=_sampling_example,
+    example_cases=(
+        # tokens are int32 — the parity harness's allclose means *equal*
+        {"dims": (8, 64), "temperature": (0.0,) * 8},          # greedy
+        {"dims": (8, 64)},                                     # temp 1.0
+        {"dims": (6, 50), "temperature": (0.0, 0.7, 1.0, 1.3, 0.0, 2.0)},
+        {"dims": (4, 64), "top_k": (5, 1, 64, 0)},
+        {"dims": (4, 64), "top_p": (0.1, 0.5, 0.9, 1.0)},
+        {"dims": (3, 33), "temperature": (0.8, 0.9, 1.1),
+         "top_k": (7, 0, 3), "top_p": (0.9, 0.3, 1.0), "pos0": 11},
+    ),
+    ref_accepts=(),
+    is_available=_pallas_available,
+))
+
+
 # ---------------------------------------------------------------------------
 # Public dispatch wrappers (ergonomic signatures over registry.call)
 # ---------------------------------------------------------------------------
@@ -594,3 +823,54 @@ def flash_attention_dequant(q, kq, ks, vq, vs, causal: bool = True,
         config={"q_block": q_block, "kv_block": kv_block,
                 "page_size": page_size},
         interpret=interpret, tune=tune)
+
+
+def decode_attention(q, k, v, kv_valid_len, tables=None, ks=None, vs=None,
+                     softmax_mode: str = "exact",
+                     kv_block: Optional[int] = None,
+                     slot_block: Optional[int] = None,
+                     page_size: Optional[int] = None,
+                     interpret: Optional[bool] = None,
+                     tune: Optional[bool] = None):
+    """q_len=1 decode attention: q (B, 1, H, D) -> (B, 1, H, D).
+
+    Dense cache: k/v (B, T, K, D), optionally int8 with per-row fp32
+    scales ks/vs (B, T); ``kv_valid_len`` (B,) masks each slot's ragged
+    tail.  Paged cache: k/v are the pool's (n_pages, page, K, D) leaves
+    (scales (n_pages, page)) and ``tables`` (B, P) holds each slot's
+    page ids, pre-clipped to valid pool pages (sentinel entries rely on
+    ``kv_valid_len`` masking).
+    """
+    return registry.call(
+        "decode_attention", q, k, v, kv_valid_len, tables=tables,
+        ks=ks, vs=vs, softmax_mode=softmax_mode,
+        config={"kv_block": kv_block, "slot_block": slot_block,
+                "page_size": page_size},
+        interpret=interpret, tune=tune)
+
+
+def fused_sampling(logits, temperature, seeds, pos, top_k=None, top_p=None,
+                   row_block: Optional[int] = None,
+                   interpret: Optional[bool] = None,
+                   tune: Optional[bool] = None):
+    """Fused device sampling: logits (B, V) + per-row temperature /
+    seed / position / top_k / top_p -> (B,) int32 tokens.  Scalars are
+    broadcast; ``top_k=None``/``0`` and ``top_p=None``/``1.0`` disable
+    the respective restriction."""
+    import jax.numpy as jnp
+
+    b = logits.shape[0]
+
+    def _row(x, dtype, default):
+        if x is None:
+            x = default
+        return jnp.broadcast_to(jnp.asarray(x, dtype), (b,))
+
+    return registry.call(
+        "fused_sampling", logits,
+        _row(temperature, jnp.float32, 0.0),
+        _row(seeds, jnp.int32, 0),
+        _row(pos, jnp.int32, 0),
+        _row(top_k, jnp.int32, 0),
+        _row(top_p, jnp.float32, 1.0),
+        config={"row_block": row_block}, interpret=interpret, tune=tune)

@@ -1,0 +1,6 @@
+from repro.kernels.sampling.kernel import fused_sampling_pallas
+from repro.kernels.sampling.ref import (fused_sampling_ref, sample_token_host,
+                                        sample_tokens)
+
+__all__ = ["fused_sampling_pallas", "fused_sampling_ref",
+           "sample_token_host", "sample_tokens"]

@@ -72,11 +72,12 @@ def _make_scheduler(args):
 
 
 def _paged_kwargs(args) -> dict:
-    """Page-pool constructor kwargs for --paged runs ({} otherwise)."""
-    if not args.paged:
-        return {}
-    return dict(page_size=args.page_size, n_pages=args.pages,
-                quantize_pages=args.quantize_pages)
+    """Page-pool / decode-kernel engine kwargs from the CLI flags."""
+    kw = dict(decode_kernel=args.decode_kernel)
+    if args.paged:
+        kw.update(page_size=args.page_size, n_pages=args.pages,
+                  quantize_pages=args.quantize_pages)
+    return kw
 
 
 def _print_pages(stats) -> None:
@@ -342,6 +343,11 @@ def main():
     ap.add_argument("--quantize-pages", action="store_true",
                     help="paged: store KV pages as int8 with per-row "
                          "scales, dequantized on read in-kernel")
+    ap.add_argument("--decode-kernel", action="store_true",
+                    help="decode through the Pallas decode_attention "
+                         "kernel (paged caches read in place through the "
+                         "page tables; int8 pages dequantize in-kernel) "
+                         "and draw tokens on device via fused_sampling")
     ap.add_argument("--kernel-tune", action="store_true",
                     help="autotune kernel block sizes at warm-up and bind "
                          "the winners into the tick executables")

@@ -240,10 +240,56 @@ def _inner_attention(q, k, v, cfg: LMConfig, causal: bool, q_offset: int = 0,
 # ---------------------------------------------------------------------------
 
 
+def _paged_decode(params, cfg: LMConfig, q, k, v, cache, idx, tables):
+    """Decode one token against *pool-shaped* cache leaves.
+
+    ``cache`` leaves are PagePool pool slices — k/v (n_pages, page, K, D)
+    (int8 plus ``k_scale``/``v_scale`` (n_pages, page) when quantized) —
+    and ``tables`` (B, P) maps each slot's logical page index to a pool
+    page (negative = sentinel / unmapped).  The fresh row is written
+    straight into its page (sentinel writes dropped), then the
+    ``decode_attention`` kernel reads the pages through the table via
+    scalar prefetch — no gather-to-dense materialization.
+    """
+    from repro import kernels
+
+    b = q.shape[0]
+    n_pages, page = cache["k"].shape[0], cache["k"].shape[1]
+    quant = "k_scale" in cache
+    rows = jnp.arange(b)
+    pid = tables[rows, idx // page]
+    pid = jnp.where(pid < 0, n_pages, pid)  # sentinel -> out-of-range drop
+    off = idx % page
+    if quant:
+        kq, ks = quantize_kv_rows(k[:, 0])
+        vq, vs = quantize_kv_rows(v[:, 0])
+        ck = cache["k"].at[pid, off].set(kq, mode="drop")
+        cv = cache["v"].at[pid, off].set(vq, mode="drop")
+        ksc = cache["k_scale"].at[pid, off].set(
+            ks.astype(cache["k_scale"].dtype), mode="drop")
+        vsc = cache["v_scale"].at[pid, off].set(
+            vs.astype(cache["v_scale"].dtype), mode="drop")
+        new_cache = {"k": ck, "v": cv, "k_scale": ksc, "v_scale": vsc}
+        ks_arg, vs_arg = ksc, vsc
+    else:
+        ck = cache["k"].at[pid, off].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[pid, off].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop")
+        new_cache = {"k": ck, "v": cv}
+        ks_arg = vs_arg = None
+    valid = idx.astype(jnp.int32) + 1
+    out = kernels.decode_attention(
+        q, ck, cv, valid, tables=jnp.clip(tables, 0, n_pages - 1),
+        ks=ks_arg, vs=vs_arg, softmax_mode=cfg.softmax_mode)
+    return _out_proj(params, cfg, out), new_cache
+
+
 def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
                    cache: Optional[Dict[str, jax.Array]] = None,
                    cache_index: Optional[jax.Array] = None,
                    prefill_offset: int = 0,
+                   paged_tables=None,
                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self-attention with optional KV cache.
 
@@ -317,6 +363,11 @@ def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
                 out = _inner_attention(q, k, v, cfg, causal=cfg.causal)
     else:  # decode one token
         idx = cache_index if cache_index is not None else positions[:, 0].max()
+        if paged_tables is not None:
+            if getattr(idx, "ndim", 0) != 1:
+                raise ValueError("paged decode requires vector cache_index")
+            return _paged_decode(params, cfg, q, k, v, cache, idx,
+                                 paged_tables)
         if getattr(idx, "ndim", 0) == 1:
             # per-slot cache indices (B,): ragged continuous batching —
             # each slot writes its own row and attends its own prefix
@@ -347,14 +398,30 @@ def self_attention(params, cfg: LMConfig, x: jax.Array, positions: jax.Array,
                 cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
             valid = jnp.full((x.shape[0],), idx + 1, jnp.int32)
         if quant:
-            kk = dequantize_kv(ck, ksc, q.dtype)
-            vv = dequantize_kv(cv, vsc, q.dtype)
             new_cache = {"k": ck, "v": cv, "k_scale": ksc, "v_scale": vsc}
         else:
-            kk, vv = ck.astype(q.dtype), cv.astype(q.dtype)
             new_cache = {"k": ck, "v": cv}
-        out = _inner_attention(q, kk, vv, cfg, causal=False,
-                               kv_valid_len=valid)
+        if cfg.decode_impl == "pallas":
+            # dense-cache decode kernel: the cache stays resident (int8
+            # stays int8 — dequantized per kv-block in-kernel) instead of
+            # materializing a dequantized/cast full-cache copy per step
+            from repro import kernels
+
+            if quant:
+                out = kernels.decode_attention(
+                    q, ck, cv, valid, ks=ksc, vs=vsc,
+                    softmax_mode=cfg.softmax_mode)
+            else:
+                out = kernels.decode_attention(
+                    q, ck, cv, valid, softmax_mode=cfg.softmax_mode)
+        else:
+            if quant:
+                kk = dequantize_kv(ck, ksc, q.dtype)
+                vv = dequantize_kv(cv, vsc, q.dtype)
+            else:
+                kk, vv = ck.astype(q.dtype), cv.astype(q.dtype)
+            out = _inner_attention(q, kk, vv, cfg, causal=False,
+                                   kv_valid_len=valid)
     return _out_proj(params, cfg, out), new_cache
 
 

@@ -110,6 +110,8 @@ class LMConfig:
     attn_q_block: int = 512       # chunked-attention query block
     attn_kv_block: int = 1024
     attn_impl: str = "chunked"    # chunked | reference | pallas
+    decode_impl: str = "chunked"  # chunked | pallas — q_len=1 cache-read
+    #                                path (the decode_attention kernel)
     attn_scan_remat: bool = True  # checkpoint kv-block scan body (flash
     #                                bwd: recompute p instead of saving it)
     #                                §Perf H1 — baseline variant sets False

@@ -149,11 +149,13 @@ def param_structs(cfg: LMConfig) -> Any:
 
 
 def _apply_self_block(p, cfg: LMConfig, x, positions, kv_cache, cache_index,
-                      rules, token_mask=None, prefill_offset=0):
+                      rules, token_mask=None, prefill_offset=0,
+                      paged_tables=None):
     h = common.apply_norm(p["ln1"], x, cfg)
     a, new_kv = attn_lib.self_attention(p["attn"], cfg, h, positions,
                                         kv_cache, cache_index,
-                                        prefill_offset=prefill_offset)
+                                        prefill_offset=prefill_offset,
+                                        paged_tables=paged_tables)
     x = x + a
     h = common.apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None and "router" in p["ffn"]:
@@ -238,6 +240,7 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
             caches: Optional[Dict[str, Any]] = None,
             cache_index: Optional[jax.Array] = None,
             prefill_offset: int = 0,
+            paged_tables=None,
             ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
     """Returns (final hidden states (B,S,d), new caches, aux loss).
 
@@ -246,6 +249,11 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
     restored from the paged prefix cache) and this forward writes rows
     ``[prefill_offset, prefill_offset + S)``, attending the cached prefix
     plus the fresh span.  Attention families only (dense/moe/vlm).
+
+    ``paged_tables`` (B, P) int32: paged decode — ``caches["kv"]`` leaves
+    are PagePool pool arrays (L, n_pages, page, K, D) instead of dense
+    per-slot caches, and attention reads/writes pages through the per-slot
+    tables (dense/moe decode only; see ``attention._paged_decode``).
     """
     rules = rules_for_arch(cfg.arch_id)
     fam = cfg.family
@@ -264,6 +272,9 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
                                      (x.shape[0], s))
 
+    if paged_tables is not None and fam not in ("dense", "moe"):
+        raise ValueError("paged_tables: dense/moe decode only")
+
     if fam in ("dense", "moe", "audio"):
         token_mask = batch.get("token_mask")   # ragged moe exactness
 
@@ -272,7 +283,8 @@ def forward(params: Dict[str, Any], cfg: LMConfig, batch: Dict[str, jax.Array],
             return _apply_self_block(p["block"], cfg, x, positions, kv,
                                      cache_index, rules,
                                      token_mask=token_mask,
-                                     prefill_offset=prefill_offset)
+                                     prefill_offset=prefill_offset,
+                                     paged_tables=paged_tables)
         kv = caches["kv"] if caches is not None else None
         x, new_kv, aux = _scan_units(cfg, x, params["units"], kv, body)
         new_caches = {"kv": new_kv} if caches is not None else None
@@ -460,15 +472,18 @@ def prefill_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
 
 
 def decode_step(params, cfg: LMConfig, batch: Dict[str, jax.Array],
-                caches: Dict[str, Any]
+                caches: Dict[str, Any], paged_tables=None
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One-token decode.  batch: tokens (B,1), pos scalar or (B,) int32.
 
     A vector ``pos`` gives every slot its own cache index (ragged
     continuous batching); a scalar keeps the uniform-tick behaviour.
+    With ``paged_tables`` (B, P), ``caches`` carries pool-shaped leaves
+    and decode addresses pages through the tables (no gather-to-dense).
     """
     x, new_caches, _ = forward(params, cfg, batch, caches,
-                               cache_index=batch["pos"])
+                               cache_index=batch["pos"],
+                               paged_tables=paged_tables)
     logits = common.unembed(params["embed"], cfg, x[:, -1:, :])
     return logits[:, 0], new_caches
 

@@ -100,6 +100,14 @@ class CacheHandoff:
     stream: bool = False              # original request opted into streaming
     cls: str = "default"              # request class (latency histograms)
     t_handoff: float = 0.0            # when the handoff entered the queue
+    # sampling state travels typed with the handoff: the seed was
+    # materialized at prefill admission (engine._bind_seed), so the
+    # decode side draws the exact same counter-based sequence a unified
+    # engine would — temperature>0 is reproducible across the boundary
+    seed: int = 0
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
     # paged handoffs (repro.serving.pages): ``rows`` becomes
     # ``{"pages": export_pages payload, "residual": residual rows}``.
     # ``page_hashes`` advertises the prefix-index identity of each page
@@ -128,8 +136,21 @@ class HandoffRequest:
 
     @property
     def temperature(self) -> float:
-        """Sampling temperature travels with the original request."""
-        return float(getattr(self.handoff.request, "temperature", 0.0))
+        """Sampling temperature travels typed on the handoff."""
+        return float(self.handoff.temperature)
+
+    @property
+    def seed(self) -> int:
+        """Materialized sampling seed — never None past prefill."""
+        return int(self.handoff.seed)
+
+    @property
+    def top_k(self) -> int:
+        return int(self.handoff.top_k)
+
+    @property
+    def top_p(self) -> float:
+        return float(self.handoff.top_p)
 
     @property
     def priority(self) -> int:
@@ -175,7 +196,11 @@ class PrefillEngine(ServeEngine):
                 out=list(task.state["out"]), left=int(task.state["left"]),
                 done=(s in done),
                 stream=bool(getattr(req, "stream", False)),
-                cls=self._request_class(req))
+                cls=self._request_class(req),
+                seed=int(getattr(req, "seed", None) or 0),
+                temperature=float(getattr(req, "temperature", 0.0)),
+                top_k=int(getattr(req, "top_k", 0) or 0),
+                top_p=float(getattr(req, "top_p", 1.0)))
         # one batched slot-axis gather + one device sync for the whole
         # admission (not one per request), then an eager per-request
         # split of the already-gathered rows
@@ -945,7 +970,8 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
                             transport: Optional[Any] = None,
                             page_size: Optional[int] = None,
                             n_pages: Optional[int] = None,
-                            quantize_pages: bool = False
+                            quantize_pages: bool = False,
+                            decode_kernel: bool = False
                             ) -> DisaggregatedEngine:
     """The standard LM disaggregation: one :class:`PrefillEngine` feeding
     ``n_decode`` :class:`DecodeEngine`\\ s of ``n_slots`` slots each,
@@ -962,7 +988,7 @@ def disaggregated_lm_engine(cfg, params, n_slots: int = 4,
         raise ValueError(f"need one decode scheduler per engine "
                          f"({len(decode_schedulers)} != {n_decode})")
     pk = dict(page_size=page_size, n_pages=n_pages,
-              quantize_pages=quantize_pages)
+              quantize_pages=quantize_pages, decode_kernel=decode_kernel)
     pre = PrefillEngine(cfg, params, n_slots=prefill_slots or n_slots,
                         max_len=max_len, seed=seed,
                         scheduler=prefill_scheduler, clock=clock,
@@ -987,7 +1013,8 @@ def multihost_disaggregated_lm_engine(cfg, params, n_slots: int = 4,
                                       devices: Optional[List[Any]] = None,
                                       page_size: Optional[int] = None,
                                       n_pages: Optional[int] = None,
-                                      quantize_pages: bool = False
+                                      quantize_pages: bool = False,
+                                      decode_kernel: bool = False
                                       ) -> DisaggregatedEngine:
     """Multi-host-shaped LM disaggregation: prefill and every decode
     engine own **distinct meshes** over disjoint device groups
@@ -1011,7 +1038,7 @@ def multihost_disaggregated_lm_engine(cfg, params, n_slots: int = 4,
 
     meshes = disjoint_submeshes(1 + n_decode, devices=devices)
     pk = dict(page_size=page_size, n_pages=n_pages,
-              quantize_pages=quantize_pages)
+              quantize_pages=quantize_pages, decode_kernel=decode_kernel)
     pre = PrefillEngine(cfg, params, n_slots=prefill_slots or n_slots,
                         max_len=max_len, seed=seed,
                         scheduler=ShardedScheduler(meshes[0]), clock=clock,

@@ -76,6 +76,12 @@ class Request:
     rid: Optional[int] = None     # None -> engine-assigned
     stream: bool = False          # emit per-token StreamEvents
     priority: int = 0             # 0 = most urgent (PriorityScheduler)
+    seed: Optional[int] = None    # None -> engine-derived at admission;
+    #                               counter-based sampling makes temp>0
+    #                               decode reproducible and slot-order
+    #                               independent (see kernels.sampling)
+    top_k: int = 0                # 0 -> no top-k restriction
+    top_p: float = 1.0            # 1.0 -> no nucleus restriction
 
 
 @dataclasses.dataclass
@@ -107,8 +113,17 @@ class ServeEngine(EngineCore):
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  quantize_pages: bool = False,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 decode_kernel: bool = False):
         assert cfg.family != "audio", "encoder models have no decode path"
+        self._decode_kernel = bool(decode_kernel)
+        if self._decode_kernel:
+            # decode through the Pallas decode_attention kernel: dense
+            # caches stay resident (int8 stays int8), and paged dense/moe
+            # decode reads pages through the tables via scalar prefetch
+            # instead of gathering a dense view (see _decode_paged_impl);
+            # tokens are drawn on device by the fused_sampling kernel
+            cfg = dataclasses.replace(cfg, decode_impl="pallas")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -116,7 +131,7 @@ class ServeEngine(EngineCore):
         # recurrent state (ssm/hybrid) cannot mask a pad suffix the way
         # attention masks cache rows: admission is length-bucketed instead
         self._recurrent = cfg.family in ("ssm", "hybrid")
-        self._rng = np.random.RandomState(seed)
+        self._seed0 = int(seed)       # base of engine-derived request seeds
         self._prefix_cache = bool(prefix_cache)
         if page_size is not None:
             from repro.serving.pages import PagePool
@@ -137,6 +152,12 @@ class ServeEngine(EngineCore):
             lambda idx, c: lm.gather_cache_rows(cfg, idx, c))
         self._inject = jax.jit(
             lambda rows, idx, c: lm.scatter_cache_rows(cfg, idx, rows, c))
+        # paged kernel decode needs per-slot tables threaded into the
+        # model; vlm keeps the gather-to-dense fallback (its per-site kv
+        # slicing predates pool-shaped leaves)
+        self._paged_kernel = (self._decode_kernel
+                              and self._pages is not None
+                              and cfg.family in ("dense", "moe"))
         if self._pages is not None:
             self._decode_paged = jax.jit(
                 lambda p, t, pos, tb, pool, res: self._decode_paged_impl(
@@ -205,10 +226,26 @@ class ServeEngine(EngineCore):
         return logits, lm.scatter_cache_rows(self.cfg, slot_idx, sub, caches)
 
     def _decode_paged_impl(self, params, tok, pos, tables, pool, residual):
-        """One paged decode tick: gather the dense view through the page
-        tables, run the ordinary ``lm.decode_step``, scatter each slot's
-        new row back into its mapped page.  Residual (non-paged) leaves
-        are read-only during decode."""
+        """One paged decode tick.
+
+        Kernel path (``decode_kernel=True``, dense/moe): the pool leaves
+        pass straight through (:meth:`PagePool.pool_tree`, no gather) and
+        the decode_attention kernel reads each slot's resident pages
+        through its table row via scalar prefetch, writing the fresh row
+        in place — a slot touches only its own pages instead of the full
+        gathered ``(n_slots, max_len)`` view.
+
+        Fallback: gather the dense view through the page tables, run the
+        ordinary ``lm.decode_step``, scatter each slot's new row back
+        into its mapped page.  Residual (non-paged) leaves are read-only
+        during decode."""
+        if self._paged_kernel:
+            tree = self._pages.pool_tree(pool, residual)
+            logits, new_tree = lm.decode_step(
+                params, self.cfg, {"tokens": tok, "pos": pos}, tree,
+                paged_tables=tables)
+            new_pool, _ = self._pages.pool_untree(new_tree)
+            return logits, new_pool
         view = self._pages.build_view(pool, residual, tables)
         logits, new_view = lm.decode_step(
             params, self.cfg, {"tokens": tok, "pos": pos}, view)
@@ -242,22 +279,78 @@ class ServeEngine(EngineCore):
         return logits, new_pool, new_res
 
     # -- sampling ----------------------------------------------------------
+    #
+    # Counter-based (see repro.kernels.sampling): every draw is a pure
+    # function of (request seed, sequence position of the drawn token),
+    # so temperature>0 decode is reproducible and independent of batch
+    # composition, slot assignment, preemption, and disagg handoffs.
+    # Greedy stays an exact raw-logits argmax on every path.
 
-    def _sample_row(self, logits_row: np.ndarray, temperature: float) -> int:
-        if temperature <= 0.0:
-            return int(np.argmax(logits_row))
-        z = logits_row.astype(np.float64) / temperature
-        z -= z.max()
-        p = np.exp(z)
-        return int(self._rng.choice(p.shape[0], p=p / p.sum()))
+    def _bind_seed(self, task: SlotTask) -> int:
+        """The request's sampling seed, materialized at admission: a
+        request without an explicit seed gets one derived from the
+        engine seed and its rid, written back onto the request so it
+        survives preemption and travels with a disagg handoff."""
+        req = task.payload
+        seed = getattr(req, "seed", None)
+        if seed is None:
+            seed = (self._seed0 ^ ((task.rid + 1) * 0x9E3779B1)) & 0x7FFFFFFF
+            req.seed = seed             # guarded-by: single ticker thread
+        return int(seed)
+
+    def _sample_row(self, logits_row: np.ndarray, temperature: float,
+                    seed: int, pos: int, top_k: int = 0,
+                    top_p: float = 1.0) -> int:
+        from repro.kernels.sampling import sample_token_host
+
+        return sample_token_host(logits_row, temperature, seed, pos,
+                                 top_k=top_k, top_p=top_p)
+
+    def _sample_task_row(self, logits_row: np.ndarray, task: SlotTask,
+                         pos: int) -> int:
+        req = task.payload
+        return self._sample_row(
+            logits_row, float(getattr(req, "temperature", 0.0)),
+            self._bind_seed(task), pos,
+            top_k=int(getattr(req, "top_k", 0) or 0),
+            top_p=float(getattr(req, "top_p", 1.0)))
+
+    def _sample_batch_device(self, logits, active, pos_of) -> np.ndarray:
+        """Kernel-path sampling: one fused_sampling launch draws every
+        active slot's token on device; the only host transfer of the
+        tick is the (n_slots,) int32 token vector — the full (B, V)
+        logits never leave the device."""
+        from repro import kernels
+
+        n = self._tok.shape[0]
+        temp = np.zeros((n,), np.float32)
+        seeds = np.zeros((n,), np.uint32)
+        poss = np.zeros((n,), np.int32)
+        tks = np.zeros((n,), np.int32)
+        tps = np.ones((n,), np.float32)
+        for s, task in active:
+            req = task.payload
+            temp[s] = float(getattr(req, "temperature", 0.0))
+            seeds[s] = self._bind_seed(task)
+            poss[s] = pos_of(s)
+            tks[s] = int(getattr(req, "top_k", 0) or 0)
+            tps[s] = float(getattr(req, "top_p", 1.0))
+        return np.asarray(jax.block_until_ready(kernels.fused_sampling(
+            logits, temp, seeds, poss, top_k=tks, top_p=tps, tune=False)))
 
     # -- single-batch convenience ------------------------------------------
 
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
-                 temperature: float = 0.0) -> List[List[int]]:
+                 temperature: float = 0.0, seed: Optional[int] = None,
+                 top_k: int = 0, top_p: float = 1.0) -> List[List[int]]:
         """Batched prefill + greedy/temperature decode — ragged-correct:
         each prompt keeps its own length and position ids, so the result
-        matches per-request generation (attention-cached families)."""
+        matches per-request generation (attention-cached families).
+
+        Temperature>0 draws are counter-based: row ``i`` samples with
+        seed ``(base ^ ((i + 1) * 0x9E3779B1)) & 0x7FFFFFFF`` (base =
+        ``seed`` or the engine seed) and counter = the token's sequence
+        position, so repeated calls are reproducible."""
         b = len(prompts)
         for p in prompts:
             self._check_prompt(p)
@@ -286,12 +379,17 @@ class ServeEngine(EngineCore):
             jnp.arange(b), caches)
         logits = np.asarray(jax.block_until_ready(logits))
         out = [list(p) for p in prompts]
+        base = self._seed0 if seed is None else int(seed)
+        row_seed = [(base ^ ((i + 1) * 0x9E3779B1)) & 0x7FFFFFFF
+                    for i in range(b)]
         pos = lengths.copy()
         alive = np.ones((b,), bool)           # slots still within max_len
         for k in range(max_new_tokens):
             for i in range(b):
                 if alive[i]:
-                    out[i].append(self._sample_row(logits[i], temperature))
+                    out[i].append(self._sample_row(
+                        logits[i], temperature, row_seed[i], int(pos[i]),
+                        top_k=top_k, top_p=top_p))
             if k == max_new_tokens - 1:
                 break
             alive &= pos < self.max_len       # per-slot stop (cache full)
@@ -399,7 +497,7 @@ class ServeEngine(EngineCore):
         finished = []
         for i, (s, task) in enumerate(new):
             req = task.payload
-            tok = self._sample_row(logits[i], req.temperature)
+            tok = self._sample_task_row(logits[i], task, int(lengths[i]))
             task.state = {"out": list(req.prompt) + [tok],
                           "left": req.max_new_tokens - 1}
             self._emit(task.rid, tok)
@@ -522,7 +620,7 @@ class ServeEngine(EngineCore):
         finished = []
         for i, (s, task, hashes, hits) in enumerate(group):
             req = task.payload
-            tok = self._sample_row(logits[i], req.temperature)
+            tok = self._sample_task_row(logits[i], task, len(req.prompt))
             task.state = {"out": list(req.prompt) + [tok],
                           "left": req.max_new_tokens - 1}
             self._emit(task.rid, tok)
@@ -714,10 +812,21 @@ class ServeEngine(EngineCore):
             logits, self._caches = self._decode(
                 self.params, place(self._tok[:, None]),
                 place(self._pos), self._caches)
-        logits = np.asarray(jax.block_until_ready(logits))
+        if self._decode_kernel:
+            # fused on-device sampling: only the (n_slots,) token vector
+            # crosses to host; each sampled token's counter is the
+            # position it will occupy (pos + 1)
+            toks = self._sample_batch_device(
+                logits, active, lambda s: int(self._pos[s]) + 1)
+        else:
+            logits = np.asarray(jax.block_until_ready(logits))
         finished = []
         for s, task in active:
-            nxt = self._sample_row(logits[s], task.payload.temperature)
+            if self._decode_kernel:
+                nxt = int(toks[s])
+            else:
+                nxt = self._sample_task_row(logits[s], task,
+                                            int(self._pos[s]) + 1)
             task.state["out"].append(nxt)
             task.state["left"] -= 1
             self._emit(task.rid, nxt)

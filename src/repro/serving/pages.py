@@ -326,6 +326,35 @@ class PagePool:
             _set(view, rl.path, residual[rl.key])
         return view
 
+    def pool_tree(self, pool: Dict[str, jax.Array],
+                  residual: Dict[str, jax.Array]) -> Dict[str, Any]:
+        """Assemble the cache pytree ``lm.decode_step`` consumes with the
+        *pool* leaves passed through untouched — no gather.  Paired with
+        ``paged_tables``, the decode_attention kernel reads pages through
+        the per-slot tables via scalar prefetch and writes the fresh row
+        straight into its page, so the dense ``(n_slots, max_len)`` view
+        is never materialized."""
+        view: Dict[str, Any] = {}
+        for lf in self._paged:
+            _set(view, lf.path, pool[lf.key])
+            if lf.scale_key is not None:
+                _set(view, lf.scale_path, pool[lf.scale_key])
+        for rl in self._residual:
+            _set(view, rl.path, residual[rl.key])
+        return view
+
+    def pool_untree(self, tree: Dict[str, Any]
+                    ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+        """Inverse of :meth:`pool_tree`: split an updated cache pytree
+        back into the flat (pool, residual) dicts."""
+        pool: Dict[str, jax.Array] = {}
+        for lf in self._paged:
+            pool[lf.key] = _get(tree, lf.path)
+            if lf.scale_key is not None:
+                pool[lf.scale_key] = _get(tree, lf.scale_path)
+        residual = {rl.key: _get(tree, rl.path) for rl in self._residual}
+        return pool, residual
+
     def scatter_decode_rows(self, pool: Dict[str, jax.Array],
                             new_view: Dict[str, Any], tables: jax.Array,
                             pos: jax.Array) -> Dict[str, jax.Array]:

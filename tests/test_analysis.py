@@ -496,6 +496,144 @@ class TestKernelLegality:
 
 
 # ---------------------------------------------------------------------------
+# kernel-legality: decode-path specs (decode_attention / fused_sampling)
+# ---------------------------------------------------------------------------
+
+DECODE_KERNEL_SRC = """\
+import numpy as np
+
+from repro.kernels.registry import (KernelRegistry, KernelSpec,
+                                    _legalize_blocks)
+
+
+def decode_block_dims(q, k=None, v=None, kv_valid_len=None, **kwargs):
+    t = k.shape[1] if k is not None else q.shape[1]
+    return {"kv_block": t, "slot_block": q.shape[0]}
+
+
+def sampling_block_dims(logits, *args, **kwargs):
+    return {"batch_block": logits.shape[0]}
+
+
+def raw_legalize(config, *args, **kwargs):
+    return config                   # no clamping at all
+
+
+def make_decode_example(case):
+    # every axis value distinct: the checker's bucket scaling replaces
+    # EVERY axis equal to a block dim's value, so a batch/heads collision
+    # would blow an unblocked axis up to serving size
+    b, t = case["dims"]
+    q = np.zeros((b, 1, 6, 7), np.float32)
+    k = np.zeros((b, t, 3, 7), np.float32)
+    v = np.zeros((b, t, 3, 7), np.float32)
+    valid = np.full((b,), t, np.int32)
+    return (q, k, v, valid), {}
+
+
+def make_sampling_example(case):
+    b, vocab = case["dims"]
+    return (np.zeros((b, vocab), np.float32),), {}
+
+
+def build_registry(decode_legalize, sampling_legalize):
+    reg = KernelRegistry()
+    reg.register(KernelSpec(
+        name="decode_attention_planted",
+        build=lambda: None,
+        reference=lambda: None,
+        space={"kv_block": (8, 64, 512), "slot_block": (1, 8),
+               "page_size": (8, 16)},
+        tuned=("kv_block", "slot_block"),
+        base_config={"kv_block": 512, "slot_block": 1, "page_size": 16},
+        legalize=decode_legalize,
+        make_example=make_decode_example,
+        example_cases=({"dims": (5, 24)},),
+        block_dims=decode_block_dims,
+        block_divisors=(("page_size", "kv_block"),),
+    ))
+    reg.register(KernelSpec(
+        name="fused_sampling_planted",
+        build=lambda: None,
+        reference=lambda: None,
+        space={"batch_block": (8, 64)},
+        tuned=("batch_block",),
+        base_config={"batch_block": 8},
+        legalize=sampling_legalize,
+        make_example=make_sampling_example,
+        example_cases=({"dims": (12, 5)},),
+        block_dims=sampling_block_dims,
+    ))
+    return reg
+"""
+
+
+@pytest.fixture
+def decode_kernel_mod(tmp_path):
+    """Decode-shaped planted specs (the ``decode_attention`` /
+    ``fused_sampling`` geometry in miniature) in a compiled temp module,
+    so checker locations point inside tmp_path."""
+    path = tmp_path / "decodekernels.py"
+    path.write_text(DECODE_KERNEL_SRC)
+    ns = {}
+    exec(compile(DECODE_KERNEL_SRC, str(path), "exec"), ns)
+    return ns, path
+
+
+class TestDecodeSpecLegality:
+    """The two decode-path specs must stay inside the legality gate: a
+    candidate the legalizer does not clamp to the example's ragged
+    dims, or a ``page_size | kv_block`` divisor pair the two knobs
+    break when legalized independently, is an error."""
+
+    def test_planted_illegal_candidates_flagged(self, tmp_path,
+                                                decode_kernel_mod):
+        ns, _ = decode_kernel_mod
+        reg = ns["build_registry"](ns["raw_legalize"], ns["raw_legalize"])
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        bad = {f.symbol for f in kept if f.code == "non-divisor"}
+        # kv_block=512 vs T=24, and batch_block=8 vs B=12
+        assert bad == {"decode_attention_planted",
+                       "fused_sampling_planted"}, locations(kept)
+
+    def test_divisor_pair_enforced(self, tmp_path, decode_kernel_mod):
+        """kv_block clamped without the page_size pairing: page_size=16
+        never divides the clamped kv_block, exactly the bug
+        ``block_divisors`` exists to catch on the real spec."""
+        ns, _ = decode_kernel_mod
+        reg = ns["build_registry"](
+            ns["_legalize_blocks"](ns["decode_block_dims"]),
+            ns["_legalize_blocks"](ns["sampling_block_dims"]))
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        hits = [f for f in kept if f.code == "divisor-violation"]
+        assert {f.symbol for f in hits} == {"decode_attention_planted"}, \
+            locations(kept)
+
+    def test_paired_legalize_is_clean(self, tmp_path, decode_kernel_mod):
+        ns, _ = decode_kernel_mod
+        reg = ns["build_registry"](
+            ns["_legalize_blocks"](ns["decode_block_dims"],
+                                   divisors=(("page_size", "kv_block"),)),
+            ns["_legalize_blocks"](ns["sampling_block_dims"]))
+        project = Project.load([tmp_path], root=tmp_path)
+        kept = list(KernelLegalityChecker(reg).run(project))
+        assert [f for f in kept if f.severity == "error"] == [], \
+            [f.render() for f in kept]
+
+    def test_shipped_decode_specs_declare_divisor_pair(self):
+        """The real registry's decode_attention spec carries the
+        page_size | kv_block pairing (fused_sampling has no paged
+        geometry and must not)."""
+        from repro.kernels.registry import registry as real
+
+        assert (("page_size", "kv_block")
+                in tuple(real.get("decode_attention").block_divisors))
+        assert not real.get("fused_sampling").block_divisors
+
+
+# ---------------------------------------------------------------------------
 # findings / suppressions / baseline plumbing
 # ---------------------------------------------------------------------------
 

@@ -53,9 +53,10 @@ class TestRegistryParity:
             assert k in c1
 
     def test_kernel_inventory_pinned(self):
-        assert registry.names() == ["flash_attention",
+        assert registry.names() == ["decode_attention", "flash_attention",
                                     "flash_attention_dequant",
-                                    "fused_routing", "taylor_softmax"]
+                                    "fused_routing", "fused_sampling",
+                                    "taylor_softmax"]
 
 
 class TestDefaultBlockSelection:
